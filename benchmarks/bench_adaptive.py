@@ -1,0 +1,89 @@
+"""Paper Figure 8: adaptive AMBI vs non-adaptive — cumulative build+query
+cost as a function of the number of queries, uniform and focused."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import ALL_LOADERS, AMBI, PageStore, knn_query, window_query
+
+from .common import buffer_pages, dataset, print_table, save_table
+
+N = 300_000
+CHECKPOINTS = (1, 10, 100, 500)
+
+
+def _workload(rng, kind: str, focused: bool):
+    if focused:
+        c = rng.random(2) * 0.06 + np.array([0.58, 0.58])  # dense region
+    else:
+        c = rng.random(2)
+    if kind == "knn":
+        return c
+    w = 0.015
+    return (c - w, c + w)
+
+
+def _run_workload(kind: str, focused: bool, pts, M) -> list[dict]:
+    # non-adaptive: full build first, then queries
+    curves: dict[str, list] = {}
+    for name, loader in ALL_LOADERS.items():
+        store = PageStore(M)
+        idx = loader(pts, M, store)
+        cum = store.stats.total
+        rng = np.random.default_rng(7)
+        curve = []
+        done = 0
+        for cp in CHECKPOINTS:
+            while done < cp:
+                q = _workload(rng, kind, focused)
+                if kind == "knn":
+                    _, io = knn_query(idx, q, 64)
+                else:
+                    _, io = window_query(idx, q[0], q[1])
+                cum += io.total
+                done += 1
+            curve.append(cum)
+        curves[name] = curve
+
+    ambi = AMBI(pts, M)
+    rng = np.random.default_rng(7)
+    cum, done, curve = 0, 0, []
+    for cp in CHECKPOINTS:
+        while done < cp:
+            q = _workload(rng, kind, focused)
+            if kind == "knn":
+                _, io = ambi.knn(q, 64)
+            else:
+                _, io = ambi.window(q[0], q[1])
+            cum += io.total
+            done += 1
+        curve.append(cum)
+    curves["ambi"] = curve
+
+    rows = []
+    for name, curve in sorted(curves.items()):
+        row = {"index": name}
+        for cp, c in zip(CHECKPOINTS, curve):
+            row[f"q{cp}"] = c
+        rows.append(row)
+    return rows
+
+
+def run(n: int = N, seed: int = 0) -> dict:
+    pts = dataset("osm", n, seed=seed)
+    M = buffer_pages(pts)
+    out = {}
+    for kind in ("knn", "window"):
+        for focused in (False, True):
+            tag = f"{kind}_{'focused' if focused else 'uniform'}"
+            rows = _run_workload(kind, focused, pts, M)
+            cols = ["index"] + [f"q{c}" for c in CHECKPOINTS]
+            print_table(f"Fig 8 ({tag}): cumulative build+query I/O", rows,
+                        cols)
+            save_table(f"fig8_{tag}", rows)
+            out[tag] = rows
+    return out
+
+
+if __name__ == "__main__":
+    run()

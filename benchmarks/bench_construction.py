@@ -1,0 +1,42 @@
+"""Paper Figure 7 (left column): construction cost + index size."""
+from __future__ import annotations
+
+from .common import (
+    N_OSM,
+    build_all,
+    buffer_pages,
+    dataset,
+    print_table,
+    save_table,
+)
+
+
+def run(n: int = N_OSM, seed: int = 0) -> list[dict]:
+    pts = dataset("osm", n, seed=seed)
+    M = buffer_pages(pts)
+    built = build_all(pts, M)
+    fmbi_io = built["fmbi"]["build_io"]
+    rows = []
+    for name, b in sorted(built.items()):
+        idx = b["index"]
+        rows.append({
+            "index": name,
+            "build_io": b["build_io"],
+            "reads": b["build_reads"],
+            "writes": b["build_writes"],
+            "vs_fmbi": round(b["build_io"] / fmbi_io, 2),
+            "size_pages": idx.distinct_pages(),
+            "wall_s": b["wall_s"],
+        })
+    print_table(
+        f"Fig 7 left: construction (OSM-like n={n}, M={M} pages)",
+        rows,
+        ["index", "build_io", "reads", "writes", "vs_fmbi", "size_pages",
+         "wall_s"],
+    )
+    save_table("fig7_construction", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

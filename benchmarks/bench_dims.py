@@ -1,0 +1,55 @@
+"""Paper Figure 9: dimensionality scaling (NYCYT-like, d = 2..5)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import knn_query, window_query
+
+from .common import (
+    N_NYC,
+    build_all,
+    buffer_pages,
+    dataset,
+    print_table,
+    save_table,
+)
+
+N_QUERIES = 100
+
+
+def run(n: int = N_NYC, seed: int = 0) -> list[dict]:
+    rows = []
+    for d in (2, 3, 4, 5):
+        pts = dataset("nycyt", n, d=d, seed=seed)
+        M = buffer_pages(pts)
+        built = build_all(pts, M)
+        rng = np.random.default_rng(seed + d)
+        qpts = rng.random((N_QUERIES, d))
+        for name, b in sorted(built.items()):
+            idx = b["index"]
+            idx.store.buffer.clear()
+            knn_io = 0
+            for q in qpts:
+                _, io = knn_query(idx, q, 64)
+                knn_io += io.total
+            idx.store.buffer.clear()
+            win_io = 0
+            w = 0.5 * (256 / n) ** (1.0 / d)
+            for q in qpts:
+                _, io = window_query(idx, q - w, q + w)
+                win_io += io.total
+            rows.append({
+                "d": d,
+                "index": name,
+                "build_io": b["build_io"],
+                "knn64_io": round(knn_io / N_QUERIES, 2),
+                "win_io": round(win_io / N_QUERIES, 2),
+            })
+    print_table("Fig 9: dimensionality scaling (NYCYT-like)", rows,
+                ["d", "index", "build_io", "knn64_io", "win_io"])
+    save_table("fig9_dims", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

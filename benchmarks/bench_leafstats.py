@@ -1,0 +1,42 @@
+"""Paper Table 1 + Figure 4: leaf-node count / perimeter / area + balance."""
+from __future__ import annotations
+
+from repro.core import leaf_stats
+from repro.core.metrics import overlap_area_2d
+
+from .common import (
+    N_OSM,
+    build_all,
+    buffer_pages,
+    dataset,
+    print_table,
+    save_table,
+)
+
+
+def run(n: int = N_OSM, seed: int = 0) -> list[dict]:
+    pts = dataset("osm", n, seed=seed)
+    M = buffer_pages(pts)
+    built = build_all(pts, M)
+    rows = []
+    for name, b in sorted(built.items()):
+        ls = leaf_stats(b["index"])
+        rows.append({
+            "index": name,
+            "count": ls.count,
+            "perimeter": round(ls.total_perimeter, 2),
+            "area": round(ls.total_area, 4),
+            "avg_fill": round(ls.avg_fill, 3),
+            "balance_max_over_mean": round(ls.max_over_mean, 3),
+            "overlap_area": round(overlap_area_2d(b["index"]), 5)
+            if ls.count < 3000 else "-",
+        })
+    print_table("Table 1: leaf statistics (OSM-like)", rows,
+                ["index", "count", "perimeter", "area", "avg_fill",
+                 "balance_max_over_mean", "overlap_area"])
+    save_table("table1_leafstats", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,51 @@
+"""Paper Figure 11: parallel bulk load + distributed window queries vs m."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.distributed import parallel_bulk_load, parallel_window_cost
+from repro.core.pagestore import leaf_capacity
+
+from .common import N_NYC, dataset, print_table, save_table
+
+N_QUERIES = 60
+
+
+def run(n: int = N_NYC, seed: int = 0) -> list[dict]:
+    rows = []
+    for d in (2, 3, 4, 5):
+        pts = dataset("nycyt", n, d=d, seed=seed)
+        p_total = -(-n // leaf_capacity(d))
+        # paper: every server's buffer = 5%/m of the dataset
+        scan_cost = p_total  # red line: central full scan
+        base = None
+        for m in (1, 2, 4, 8):
+            M = max(int(0.05 * p_total), 512)
+            build = parallel_bulk_load(pts, m, M,
+                                       np.random.default_rng(seed))
+            rng = np.random.default_rng(seed + 5)
+            qio = 0
+            w = 0.5 * (256 / n) ** (1.0 / d)
+            for _ in range(N_QUERIES):
+                c = rng.random(d)
+                _, cost = parallel_window_cost(build, c - w, c + w)
+                qio += cost
+            if m == 1:
+                base = build.makespan_io
+            rows.append({
+                "d": d,
+                "m": m,
+                "makespan_build_io": build.makespan_io,
+                "speedup_vs_m1": round(base / build.makespan_io, 2),
+                "central_scan_io": scan_cost,
+                "win_io_makespan": round(qio / N_QUERIES, 2),
+            })
+    print_table("Fig 11: parallel bulk loading (NYCYT-like)", rows,
+                ["d", "m", "makespan_build_io", "speedup_vs_m1",
+                 "central_scan_io", "win_io_makespan"])
+    save_table("fig11_parallel", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

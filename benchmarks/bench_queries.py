@@ -1,0 +1,62 @@
+"""Paper Figure 7 (columns 2-3): k-NN and window query cost vs k / area."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import knn_query, window_query
+
+from .common import (
+    N_OSM,
+    build_all,
+    buffer_pages,
+    dataset,
+    print_table,
+    save_table,
+)
+
+N_QUERIES = 200
+
+
+def run(n: int = N_OSM, seed: int = 0) -> dict:
+    pts = dataset("osm", n, seed=seed)
+    M = buffer_pages(pts)
+    built = build_all(pts, M)
+    rng = np.random.default_rng(seed + 1)
+    qpts = rng.random((N_QUERIES, 2))
+
+    knn_rows, win_rows = [], []
+    for name, b in sorted(built.items()):
+        idx = b["index"]
+        row = {"index": name}
+        for k in (16, 64, 256):
+            idx.store.buffer.clear()
+            total = 0
+            for q in qpts:
+                _, io = knn_query(idx, q, k)
+                total += io.total
+            row[f"knn_k{k}"] = round(total / N_QUERIES, 2)
+        knn_rows.append(row)
+
+        row = {"index": name}
+        for area_factor in (64, 256, 1024):
+            # window area = factor/N of the data space (paper protocol)
+            w = 0.5 * (area_factor / n) ** 0.5
+            idx.store.buffer.clear()
+            total = 0
+            for q in qpts:
+                _, io = window_query(idx, q - w, q + w)
+                total += io.total
+            row[f"win_{area_factor}/N"] = round(total / N_QUERIES, 2)
+        win_rows.append(row)
+
+    print_table("Fig 7 mid: k-NN query I/O per query", knn_rows,
+                ["index", "knn_k16", "knn_k64", "knn_k256"])
+    print_table("Fig 7 right: window query I/O per query", win_rows,
+                ["index", "win_64/N", "win_256/N", "win_1024/N"])
+    save_table("fig7_knn", knn_rows)
+    save_table("fig7_window", win_rows)
+    return {"knn": knn_rows, "window": win_rows}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,68 @@
+"""Shared benchmark infrastructure: datasets, runners, result tables."""
+from __future__ import annotations
+
+import json
+import pathlib
+import time
+
+import numpy as np
+
+from repro.core import ALL_LOADERS, PageStore
+from repro.core.datasets import GENERATORS, nycyt_like, osm_like
+
+RESULTS = pathlib.Path(__file__).resolve().parent.parent / "experiments"
+
+# scaled-down evaluation sizes (paper: OSM 1e9 / NYCYT 1e8; the page-I/O
+# cost model is scale-faithful, wall-clock is not the metric)
+N_OSM = 600_000
+N_NYC = 200_000
+BUFFER_FRACTION = 0.05  # of dataset pages (paper: 1%..10%)
+
+
+def dataset(name: str, n: int, d: int = 2, seed: int = 0) -> np.ndarray:
+    if name == "osm":
+        return osm_like(n, seed)
+    if name == "nycyt":
+        return nycyt_like(n, d, seed)
+    return GENERATORS[name](n, d=d, seed=seed)
+
+
+def buffer_pages(points: np.ndarray, fraction: float = BUFFER_FRACTION) -> int:
+    from repro.core.pagestore import branch_capacity, leaf_capacity
+
+    n, d = points.shape
+    p = -(-n // leaf_capacity(d))
+    return max(int(p * fraction), branch_capacity(d) + 1)
+
+
+def build_all(points: np.ndarray, M: int, loaders=None) -> dict:
+    out = {}
+    for name, loader in (loaders or ALL_LOADERS).items():
+        store = PageStore(M)
+        t0 = time.time()
+        idx = loader(points, M, store)
+        out[name] = {
+            "index": idx,
+            "store": store,
+            "build_io": store.stats.total,
+            "build_reads": store.stats.reads,
+            "build_writes": store.stats.writes,
+            "wall_s": round(time.time() - t0, 3),
+        }
+    return out
+
+
+def save_table(name: str, rows) -> pathlib.Path:
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    path = RESULTS / f"{name}.json"
+    path.write_text(json.dumps(rows, indent=2, default=str))
+    return path
+
+
+def print_table(title: str, rows: list[dict], cols: list[str]) -> None:
+    print(f"\n== {title} ==")
+    widths = {c: max(len(c), *(len(str(r.get(c, ""))) for r in rows))
+              for c in cols}
+    print("  ".join(c.ljust(widths[c]) for c in cols))
+    for r in rows:
+        print("  ".join(str(r.get(c, "")).ljust(widths[c]) for c in cols))

@@ -1,0 +1,53 @@
+"""End-to-end driver: train a ~100M-param qwen3-family model for a few
+hundred steps on the FMBI-sharded synthetic pipeline, with checkpointing.
+
+    PYTHONPATH=src python examples/train_lm.py            # ~100M, 200 steps
+    PYTHONPATH=src python examples/train_lm.py --tiny     # seconds-scale demo
+"""
+import argparse
+import dataclasses
+import sys
+
+from repro.configs.base import get_config
+from repro.launch import train as train_mod
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tiny", action="store_true")
+    ap.add_argument("--steps", type=int, default=None)
+    args = ap.parse_args()
+
+    if args.tiny:
+        argv = [
+            "--arch", "qwen3-0.6b", "--steps", str(args.steps or 30),
+            "--batch", "8", "--seq", "128", "--reduced",
+            "--ckpt-dir", "/tmp/repro_train_lm_tiny", "--lr", "1e-3",
+        ]
+    else:
+        # ~100M params: qwen3 wiring at d_model=768, 12 layers
+        cfg = get_config("qwen3-0.6b")
+        cfg = dataclasses.replace(
+            cfg, n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+            head_dim=64, d_ff=2048, vocab=32768, dtype="float32",
+            chunk_q=256,
+        )
+        total, _ = cfg.params_count()
+        print(f"training {cfg.name}-100m: {total/1e6:.0f}M params")
+        from repro.configs import base as cfg_base
+
+        cfg_base.register(dataclasses.replace(cfg, name="qwen3-100m"))
+        argv = [
+            "--arch", "qwen3-100m", "--steps", str(args.steps or 200),
+            "--batch", "4", "--seq", "512",
+            "--ckpt-dir", "/tmp/repro_train_lm_100m", "--lr", "3e-4",
+            "--micro", "2",
+        ]
+    losses = train_mod.main(argv)
+    if losses and losses[-1] < losses[0]:
+        print("training signal confirmed: loss decreased")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

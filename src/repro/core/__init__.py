@@ -1,0 +1,34 @@
+"""Core library: the paper's contribution (FMBI / AMBI / parallel loading)."""
+from .ambi import AMBI
+from .baselines import LOADERS, bulk_load_hilbert, bulk_load_kdb
+from .baselines import bulk_load_omt, bulk_load_str, bulk_load_waffle
+from .fmbi import Index, Node, bulk_load, refine_subspace
+from .metrics import leaf_stats
+from .pagestore import IOStats, PageStore, branch_capacity, leaf_capacity
+from .queries import knn_oracle, knn_query, window_oracle, window_query
+
+ALL_LOADERS = dict(LOADERS, fmbi=lambda pts, M, store=None: bulk_load(pts, M, store))
+
+__all__ = [
+    "AMBI",
+    "ALL_LOADERS",
+    "LOADERS",
+    "Index",
+    "IOStats",
+    "Node",
+    "PageStore",
+    "branch_capacity",
+    "bulk_load",
+    "bulk_load_hilbert",
+    "bulk_load_kdb",
+    "bulk_load_omt",
+    "bulk_load_str",
+    "bulk_load_waffle",
+    "knn_oracle",
+    "knn_query",
+    "leaf_capacity",
+    "leaf_stats",
+    "refine_subspace",
+    "window_oracle",
+    "window_query",
+]

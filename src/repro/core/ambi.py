@@ -1,0 +1,380 @@
+"""AMBI: Adaptive Multidimensional Bulkloaded Index (paper Section 4).
+
+The index is built on demand while queries are processed.  The whole dataset
+starts as a single *unrefined* root node; refining an unrefined node runs the
+adaptive analogue of FMBI's Steps 1-4 (Section 4.1):
+
+  * Step 2 keeps a max-heap of active subspaces ordered by their distance to
+    the current query and flushes the farthest first, so qualified subspaces
+    stay in memory;
+  * a qualified subspace holding >= C_B pages is *split* (minor SplitTree of
+    its in-memory pages) instead of flushed — its children join the heap;
+  * after distribution only the active subspaces are refined (Algorithm 1,
+    free: their pages are in memory); inactive subspaces become unrefined
+    nodes that later queries refine on demand (sparse -> Algorithm 1 after
+    re-reading their pages, dense -> recursive adaptive build);
+  * Algorithm 2 merging includes unrefined subspaces — a sparse subspace of
+    P pages always yields exactly P leaf entries, so its entry count is known
+    before refinement (paper Section 4.1).
+
+The node set AMBI converges to is independent of the query order; with
+queries covering the whole space it coincides with FMBI.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import numpy as np
+
+from .fmbi import Index, Node, merge_branches, refine_subspace
+from .pagestore import PageStore, branch_capacity, leaf_capacity
+from .queries import knn_query, mindist_sq, window_query
+from .splittree import build_group_median_tree, mbb_of
+
+
+@dataclasses.dataclass
+class _Sub:
+    """A live subspace during adaptive distribution."""
+
+    idx_chunks: list
+    mem_pages: int
+    disk_pages: int
+    active: bool = True
+
+    def points_count(self) -> int:
+        return sum(len(c) for c in self.idx_chunks)
+
+
+class AMBI:
+    def __init__(
+        self,
+        points: np.ndarray,
+        buffer_pages: int,
+        store: Optional[PageStore] = None,
+        rng: Optional[np.random.Generator] = None,
+    ):
+        self.points = points
+        self.M = buffer_pages
+        self.store = store or PageStore(buffer_pages)
+        self.rng = rng or np.random.default_rng(0)
+        n, d = points.shape
+        self.d = d
+        self.c_l = leaf_capacity(d)
+        self.c_b = branch_capacity(d)
+        root_page = self.store.alloc()
+        self.root = Node(
+            mbb=mbb_of(points) if n else np.zeros((2, d)),
+            page_id=root_page,
+            raw_pages=-(-n // self.c_l),
+            raw_points=np.arange(n),
+        )
+        self._query_dist: Callable[[np.ndarray], float] = lambda mbb: 0.0
+        self.index = Index(self.root, d, self.c_l, self.c_b, self.store, points)
+
+    # -- public query API --------------------------------------------------
+    def window(self, lo, hi):
+        lo = np.asarray(lo, dtype=np.float64)
+        hi = np.asarray(hi, dtype=np.float64)
+        self._query_dist = lambda mbb: _mindist_box_sq(mbb, lo, hi)
+        return window_query(self.index, lo, hi, refiner=self._refine)
+
+    def knn(self, q, k: int):
+        q = np.asarray(q, dtype=np.float64)
+        self._query_dist = lambda mbb: mindist_sq(mbb, q)
+        return knn_query(self.index, q, k, refiner=self._refine)
+
+    def is_fully_refined(self) -> bool:
+        stack = [self.root]
+        while stack:
+            n = stack.pop()
+            if n.is_unrefined:
+                return False
+            if n.children:
+                stack.extend(n.children)
+        return True
+
+    # -- refinement --------------------------------------------------------
+    def _refine(self, node: Node) -> Optional[Node]:
+        """Refine an unrefined node in place; returns it (or None if empty)."""
+        idx = node.raw_points
+        if idx is None or len(idx) == 0:
+            return None
+        pages = -(-len(idx) // self.c_l)
+        if pages <= self.M:
+            # sparse: reload its pages and refine with Algorithm 1
+            self.store.read_run(node.raw_pages)
+            entries = refine_subspace(
+                self.points, idx, self.c_l, self.c_b, self.store
+            )
+            _become(node, entries, self.points, idx)
+            return node
+        return self._adaptive_build(node)
+
+    def _adaptive_build(self, node: Node) -> Node:
+        """Adaptive Steps 1-4 scoped to a dense unrefined node."""
+        points, store, c_l, c_b, M = (
+            self.points,
+            self.store,
+            self.c_l,
+            self.c_b,
+            self.M,
+        )
+        idx = node.raw_points
+        n = len(idx)
+        p_total = -(-n // c_l)
+        alpha = max(M // c_b, 1)
+
+        # Step 1: sample alpha*C_B pages, build the Major SplitTree
+        sample_pages = min(alpha * c_b, p_total)
+        store.read_run(sample_pages)
+        need = min(sample_pages * c_l, n)
+        perm = self.rng.permutation(n)
+        samp_local = np.sort(perm[:need])
+        rest_local = np.sort(perm[need:])
+        n_groups = max(need // (alpha * c_l), 1)
+        trim = n_groups * alpha * c_l
+        samp_use, samp_extra = samp_local[:trim], samp_local[trim:]
+        mst, _, samp_assign = build_group_median_tree(
+            points[idx[samp_use]], n_groups, alpha, c_l
+        )
+
+        # live routing forest: major MST -> (optional nested minor trees)
+        subs: list[_Sub] = [
+            _Sub([idx[samp_use[samp_assign == s]]], alpha, 0)
+            for s in range(n_groups)
+        ]
+        refine_map: dict[int, tuple] = {}  # sub id -> (tree, child sub ids)
+
+        def route(rows: np.ndarray) -> np.ndarray:
+            out = mst.route(points[rows])
+            pending = {s for s in np.unique(out) if int(s) in refine_map}
+            while pending:
+                s = pending.pop()
+                tree, kids = refine_map[int(s)]
+                sel = out == s
+                sub_assign = tree.route(points[rows[sel]])
+                out[sel] = np.asarray(kids, dtype=np.int32)[sub_assign]
+                pending |= {
+                    t for t in np.unique(out[sel]) if int(t) in refine_map
+                }
+            return out
+
+        def mem_used() -> int:
+            return sum(s.mem_pages for s in subs)
+
+        def qdist(s: _Sub) -> float:
+            pts = (
+                np.concatenate(s.idx_chunks)
+                if len(s.idx_chunks) > 1
+                else s.idx_chunks[0]
+            )
+            if len(pts) == 0:
+                return np.inf
+            return self._query_dist(mbb_of(points[pts]))
+
+        def split_sub(si: int) -> None:
+            """Qualified & large: replace sub by C_B minor-tree children."""
+            s = subs[si]
+            rows = np.concatenate(s.idx_chunks)
+            beta = max(s.points_count() // (c_l * c_b), 1)
+            groups = min(c_b, max(s.points_count() // (beta * c_l), 2))
+            trim2 = groups * beta * c_l
+            tree, _, assign = build_group_median_tree(
+                points[rows[:trim2]], groups, beta, c_l
+            )
+            kid_ids = []
+            for g in range(groups):
+                kid = _Sub([rows[:trim2][assign == g]], beta, 0)
+                subs.append(kid)
+                kid_ids.append(len(subs) - 1)
+            leftover = rows[trim2:]
+            if len(leftover):
+                a = tree.route(points[leftover])
+                for g in np.unique(a):
+                    subs[kid_ids[int(g)]].idx_chunks.append(
+                        leftover[a == g]
+                    )
+            refine_map[si] = (tree, kid_ids)
+            s.idx_chunks = []
+            s.mem_pages = 0
+            s.active = False
+
+        def flush(si: int) -> None:
+            s = subs[si]
+            pts = s.points_count()
+            full = (pts - s.disk_pages * c_l) // c_l
+            if full > 0:
+                store.write_run(full)
+                s.disk_pages += full
+            s.mem_pages = 1
+            s.active = False
+
+        def pick_victim() -> Optional[int]:
+            # farthest active subspace (max-heap of the paper); splitting a
+            # qualified subspace with >= C_B pages takes priority over
+            # flushing it
+            cand = [
+                (qdist(s), i)
+                for i, s in enumerate(subs)
+                if s.active and i not in refine_map
+            ]
+            if not cand:
+                return None
+            dist, i = max(cand)
+            pages_i = -(-subs[i].points_count() // c_l)
+            if dist == 0.0 and pages_i >= c_b:
+                split_sub(i)
+                return pick_victim()
+            return i
+
+        # Step 2: distribute remaining pages with the heap flush policy
+        rest = idx[np.concatenate([samp_extra, rest_local])] if (
+            len(samp_extra) or len(rest_local)
+        ) else np.zeros(0, dtype=np.int64)
+        store.read_run(-(-len(rest) // c_l))
+        for start in range(0, len(rest), c_l):
+            rows = rest[start : start + c_l]
+            a = route(rows)
+            for g in np.unique(a):
+                s = subs[int(g)]
+                sel = rows[a == g]
+                s.idx_chunks.append(sel)
+                # page-granular buffer bookkeeping
+                pts = s.points_count()
+                in_mem = pts - s.disk_pages * c_l
+                while in_mem > s.mem_pages * c_l:
+                    if s.active:
+                        if mem_used() >= M:
+                            v = pick_victim()
+                            if v is not None:
+                                flush(v)
+                                if v == int(g):
+                                    break
+                                continue
+                        s.mem_pages += 1
+                    else:
+                        # inactive: single page, flushed whenever it fills
+                        store.write_run(1)
+                        s.disk_pages += 1
+                        in_mem = pts - s.disk_pages * c_l
+
+        # Step 3: refine actives (their pages are in memory -> no reads)
+        live = [
+            (i, s) for i, s in enumerate(subs) if i not in refine_map
+        ]
+        nodes: list[Optional[Node]] = [None] * len(subs)
+        for i, s in live:
+            rows = (
+                np.concatenate(s.idx_chunks)
+                if s.idx_chunks
+                else np.zeros(0, dtype=np.int64)
+            )
+            if len(rows) == 0:
+                continue
+            if s.active:
+                entries = refine_subspace(points, rows, c_l, c_b, store)
+                if len(entries) == 1:
+                    nodes[i] = entries[0]
+                else:
+                    nodes[i] = Node(
+                        mbb=mbb_of(points[rows]), page_id=-1, children=entries
+                    )
+            else:
+                # flush trailing partial page; becomes an unrefined node
+                rem = len(rows) - s.disk_pages * c_l
+                if rem > 0:
+                    store.write_run(1)
+                    s.disk_pages += 1
+                nodes[i] = Node(
+                    mbb=mbb_of(points[rows]),
+                    page_id=-1,
+                    raw_pages=int(s.disk_pages),
+                    raw_points=rows,
+                )
+
+        # collapse nested splits bottom-up into entry lists + Step 4 merging
+        def collect(si: int) -> Optional[Node]:
+            if si not in refine_map:
+                return nodes[si]
+            tree, kids = refine_map[si]
+            kid_nodes = [collect(k) for k in kids]
+            cand = [kn if _mergeable(kn) else None for kn in kid_nodes]
+            groups = merge_branches(tree, cand, c_b)
+            _assign_pages(groups, store)
+            real = [kn for kn in kid_nodes if kn is not None]
+            for kn in real:
+                if kn.page_id == -1:
+                    page = store.alloc()
+                    store.write(page)
+                    kn.page_id = page
+            if not real:
+                return None
+            if len(real) == 1:
+                return real[0]
+            page = store.alloc()
+            store.write(page)
+            return Node(
+                mbb=np.stack(
+                    [
+                        np.min([k.mbb[0] for k in real], axis=0),
+                        np.max([k.mbb[1] for k in real], axis=0),
+                    ]
+                ),
+                page_id=page,
+                children=real,
+            )
+
+        top_nodes: list[Optional[Node]] = [
+            collect(s) for s in range(n_groups)
+        ]
+        cand = [tn if _mergeable(tn) else None for tn in top_nodes]
+        groups = merge_branches(mst, cand, c_b)
+        _assign_pages(groups, store)
+        for tn in top_nodes:
+            if tn is not None and tn.page_id == -1:
+                page = store.alloc()
+                store.write(page)
+                tn.page_id = page
+        entries = [tn for tn in top_nodes if tn is not None]
+        _become(node, entries, points, idx)
+        return node
+
+
+def _mergeable(n: Optional[Node]) -> bool:
+    return n is not None and n.page_id == -1 and not n.is_leaf
+
+
+def _assign_pages(groups, store) -> None:
+    for group in groups:
+        page = store.alloc()
+        store.write(page)
+        for nd in group:
+            nd.page_id = page
+
+
+def _become(node: Node, entries: list[Node], points, idx) -> None:
+    """Mutate an unrefined node into its refined form (keeps parent links)."""
+    node.raw_points = None
+    node.raw_pages = 0
+    if len(entries) == 1:
+        e = entries[0]
+        node.mbb = e.mbb
+        node.page_id = e.page_id
+        node.children = e.children
+        node.point_idx = e.point_idx
+        node.raw_pages = e.raw_pages
+        node.raw_points = e.raw_points
+    else:
+        node.children = entries
+        node.mbb = np.stack(
+            [
+                np.min([e.mbb[0] for e in entries], axis=0),
+                np.max([e.mbb[1] for e in entries], axis=0),
+            ]
+        )
+
+
+def _mindist_box_sq(mbb: np.ndarray, lo: np.ndarray, hi: np.ndarray) -> float:
+    gap = np.maximum(mbb[0] - hi, 0.0) + np.maximum(lo - mbb[1], 0.0)
+    return float(np.dot(gap, gap))

@@ -1,0 +1,441 @@
+"""FMBI: Fast Multidimensional Bulkloaded Index (paper Section 3).
+
+Five-step, scan-based bulk loading.  All sorting happens in main memory (the
+defining property of the method); disk I/O is charged to a ``PageStore`` at
+page granularity, faithfully following the paper's cost accounting:
+
+  Step 1  read alpha*C_B random pages, build the Major SplitTree (MST)
+  Step 2  single linear scan of the remaining pages, routing points through
+          the MST into subspace buffers; buffer-overflow flushes render
+          subspaces inactive
+  Step 3  refine every *sparse* subspace (fits in the buffer) with the minor
+          SplitTree recursion of Algorithm 1
+  Step 4  conceptually merge underflowed branches (Algorithm 2) so that small
+          entry lists share disk pages
+  Step 5  recursively bulk load each *dense* subspace as a fresh dataset
+
+The in-memory ``Node`` tree doubles as the physical index: every node carries
+the id of the disk page its entry list (branch) or point payload (leaf) lives
+on, so query processing can charge buffered page reads exactly like the
+paper's framework.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from .pagestore import IOStats, PageStore, branch_capacity, leaf_capacity
+from .splittree import (
+    FlatSplitTree,
+    build_group_median_tree,
+    longest_dimension,
+    mbb_of,
+)
+
+
+# --------------------------------------------------------------------------
+# Index node
+# --------------------------------------------------------------------------
+@dataclasses.dataclass
+class Node:
+    mbb: np.ndarray                      # (2, d) [min; max]
+    page_id: int                         # disk page holding this node's data
+    children: Optional[list["Node"]] = None  # branch: child entries
+    point_idx: Optional[np.ndarray] = None   # leaf: dataset row indices
+    # AMBI: an unrefined node owns raw data pages not yet formed into a tree.
+    raw_pages: int = 0                       # number of unrefined disk pages
+    raw_points: Optional[np.ndarray] = None  # dataset row indices (unrefined)
+
+    @property
+    def is_leaf(self) -> bool:
+        return self.point_idx is not None
+
+    @property
+    def is_unrefined(self) -> bool:
+        return self.raw_points is not None
+
+    def n_entries(self) -> int:
+        if self.is_leaf:
+            return len(self.point_idx)
+        if self.is_unrefined:
+            # an unrefined sparse subspace of P pages will always produce P
+            # leaf entries when processed (paper Section 4.1)
+            return self.raw_pages
+        return len(self.children)
+
+    def iter_leaves(self):
+        stack = [self]
+        while stack:
+            n = stack.pop()
+            if n.is_leaf:
+                yield n
+            elif n.children:
+                stack.extend(n.children)
+
+
+@dataclasses.dataclass
+class Index:
+    root: Node
+    dim: int
+    leaf_cap: int
+    branch_cap: int
+    store: PageStore
+    points: np.ndarray  # the dataset (index leaves reference rows)
+
+    def count_nodes(self) -> tuple[int, int]:
+        leaves = branches = 0
+        stack = [self.root]
+        while stack:
+            n = stack.pop()
+            if n.is_leaf:
+                leaves += 1
+            elif n.is_unrefined:
+                pass
+            else:
+                branches += 1
+                stack.extend(n.children)
+        return leaves, branches
+
+    def distinct_pages(self) -> int:
+        """Physical index size in pages (merged nodes share pages)."""
+        pages = set()
+        stack = [self.root]
+        while stack:
+            n = stack.pop()
+            pages.add(n.page_id)
+            if n.children:
+                stack.extend(n.children)
+        return len(pages)
+
+
+# --------------------------------------------------------------------------
+# Algorithm 1: minor-SplitTree refinement of a (sparse) subspace
+# --------------------------------------------------------------------------
+def refine_subspace(
+    points: np.ndarray,
+    idx: np.ndarray,
+    leaf_cap: int,
+    branch_cap: int,
+    store: PageStore,
+) -> list[Node]:
+    """``generate_entries(P)`` of the paper: post-order recursion over the
+    minor SplitTree, emitting FMBI leaf entries for single pages and wrapping
+    entry lists that exceed C_B into branch entries.  All sorting is
+    in-memory; the only I/O is writing finalized leaf/branch pages.
+
+    Returns the subspace's root entry list (1..C_B nodes).
+    """
+    if len(idx) == 0:
+        return []
+
+    def rec(sub_idx: np.ndarray, n_pages: int) -> list[Node]:
+        pts = points[sub_idx]
+        if n_pages <= 1:
+            page = store.alloc()
+            store.write(page)
+            return [Node(mbb=mbb_of(pts), page_id=page, point_idx=sub_idx)]
+        dim = longest_dimension(pts)
+        order = np.argsort(pts[:, dim], kind="stable")
+        n_left = n_pages // 2
+        cut = n_left * leaf_cap  # left half is ⌊P/2⌋ *full* pages
+        ne1 = rec(sub_idx[order[:cut]], n_left)
+        ne2 = rec(sub_idx[order[cut:]], n_pages - n_left)
+        if len(ne1) + len(ne2) <= branch_cap:
+            return ne1 + ne2
+        out = []
+        for ne in (ne1, ne2):
+            page = store.alloc()
+            store.write(page)
+            mbb = np.stack(
+                [
+                    np.min([e.mbb[0] for e in ne], axis=0),
+                    np.max([e.mbb[1] for e in ne], axis=0),
+                ]
+            )
+            out.append(Node(mbb=mbb, page_id=page, children=ne))
+        return out
+
+    total_pages = max(1, -(-len(idx) // leaf_cap))
+    return rec(idx, total_pages)
+
+
+# --------------------------------------------------------------------------
+# Algorithm 2: merging of underflowed branches over the MST
+# --------------------------------------------------------------------------
+def merge_branches(
+    tree: FlatSplitTree,
+    subspace_nodes: list[Optional[Node]],
+    branch_cap: int,
+) -> list[list[Node]]:
+    """Post-order MST traversal (Algorithm 2 of the paper).
+
+    ``subspace_nodes[i]`` is the candidate node of MST leaf ``i`` — a branch
+    whose entry-list page has *not yet been written* — or ``None`` for dense
+    (unprocessed) subspaces, the paper's φ.  Nodes whose entry lists fit
+    together within ``C_B`` are merged conceptually: their lists will share
+    one disk page, while the FMBI root keeps one entry per subspace.
+
+    Returns the final page groups; the caller allocates/writes one page per
+    group and stamps ``page_id`` on every member.
+    """
+    groups: list[list[Node]] = []
+
+    def emit(group: list[Node]) -> None:
+        if group:
+            groups.append(group)
+
+    def mergeable(group: list[Node]) -> bool:
+        return all(not n.is_leaf for n in group)
+
+    def rec(child: int) -> Optional[list[Node]]:
+        if child < 0:  # MST leaf -> subspace
+            n = subspace_nodes[-child - 1]
+            return None if n is None else [n]
+        nl = rec(tree.left[child])
+        nr = rec(tree.right[child])
+        if nl is None:
+            return nr
+        if nr is None:
+            return nl
+        tl = sum(x.n_entries() for x in nl)
+        tr = sum(x.n_entries() for x in nr)
+        if tl + tr <= branch_cap and mergeable(nl) and mergeable(nr):
+            return nl + nr  # merge: single shared page downstream
+        # no merge possible: pass the smaller list upstream as the candidate
+        if tl < tr:
+            emit(nr)
+            return nl
+        emit(nl)
+        return nr
+
+    if tree.n_splits == 0:
+        for n in subspace_nodes:
+            if n is not None:
+                emit([n])
+        return groups
+    last = rec(0)
+    if last:
+        emit(last)
+    return groups
+
+
+# --------------------------------------------------------------------------
+# Step 2 buffer simulation
+# --------------------------------------------------------------------------
+class SubspaceBuffers:
+    """Models the Step-2 buffer at page granularity.
+
+    Each subspace accumulates routed points.  Active subspaces keep all their
+    pages in memory; on buffer exhaustion the allocating subspace flushes its
+    full pages (-> inactive, paper Step 2).  A ``flush_victim`` hook lets
+    AMBI substitute its distance max-heap victim selection.
+    """
+
+    def __init__(self, n_sub, leaf_cap, buffer_pages, store, init_pages):
+        self.n = n_sub
+        self.leaf_cap = leaf_cap
+        self.M = buffer_pages
+        self.store = store
+        init = np.asarray(init_pages, dtype=np.int64)
+        self.counts = init * leaf_cap            # points routed so far
+        self.mem_pages = init.copy()             # buffer pages held
+        self.disk_pages = np.zeros(n_sub, dtype=np.int64)
+        self.active = np.ones(n_sub, dtype=bool)
+
+    @property
+    def mem_used(self) -> int:
+        return int(self.mem_pages.sum())
+
+    def pages_of(self, s: int) -> int:
+        return int(-(-self.counts[s] // self.leaf_cap))
+
+    def add_points(self, s: int, k: int, flush_victim=None) -> None:
+        while k > 0:
+            in_mem_pts = int(self.counts[s]) - int(self.disk_pages[s]) * self.leaf_cap
+            room = int(self.mem_pages[s]) * self.leaf_cap - in_mem_pts
+            if room > 0:
+                take = min(k, room)
+                self.counts[s] += take
+                k -= take
+                continue
+            # need a fresh buffer page
+            if self.mem_used >= self.M:
+                victim = s if flush_victim is None else flush_victim(s)
+                if victim is None:
+                    # caller declined to flush (AMBI split path); spill over
+                    self.mem_pages[s] += 1
+                    self.counts[s] += min(k, self.leaf_cap)
+                    k -= min(k, self.leaf_cap)
+                    continue
+                self.flush(int(victim))
+                if victim != s:
+                    continue
+            self.mem_pages[s] += 1
+
+    def flush(self, s: int) -> None:
+        """Write subspace ``s``'s full in-memory pages to disk (Step 2)."""
+        in_mem_pts = int(self.counts[s]) - int(self.disk_pages[s]) * self.leaf_cap
+        full = in_mem_pts // self.leaf_cap
+        if full > 0:
+            self.store.write_run(full)
+            self.disk_pages[s] += full
+        self.mem_pages[s] = 1  # retain a single (partial) memory page
+        self.active[s] = False
+
+    def final_flush_partial(self, s: int) -> None:
+        rem = int(self.counts[s]) - int(self.disk_pages[s]) * self.leaf_cap
+        if rem > 0:
+            self.store.write_run(1)
+            self.disk_pages[s] += 1
+
+
+# --------------------------------------------------------------------------
+# The bulk loader
+# --------------------------------------------------------------------------
+def bulk_load(
+    points: np.ndarray,
+    buffer_pages: int,
+    store: Optional[PageStore] = None,
+    rng: Optional[np.random.Generator] = None,
+    *,
+    charge_source_read: bool = True,
+    _depth: int = 0,
+) -> Index:
+    """Bulk load FMBI over ``points`` with a ``buffer_pages`` buffer."""
+    rng = rng or np.random.default_rng(0)
+    store = store or PageStore(buffer_pages)
+    n, d = points.shape
+    c_l = leaf_capacity(d)
+    c_b = branch_capacity(d)
+    p_total = -(-n // c_l)
+    alpha = max(buffer_pages // c_b, 1)
+
+    # ---- base case: the whole (sub)dataset fits in the buffer -----------
+    if p_total <= min(buffer_pages, alpha * c_b) or n <= c_l:
+        if charge_source_read:
+            store.read_run(p_total)
+        entries = refine_subspace(points, np.arange(n), c_l, c_b, store)
+        if len(entries) == 1:
+            root = entries[0]
+        else:
+            page = store.alloc()
+            store.write(page)
+            root = Node(mbb=mbb_of(points), page_id=page, children=entries)
+        return Index(root, d, c_l, c_b, store, points)
+
+    # ---- Step 1: initial partitioning / Major SplitTree -----------------
+    sample_pages = alpha * c_b
+    page_of_point = np.arange(n) // c_l
+    perm = rng.permutation(p_total)
+    sampled = perm[:sample_pages]
+    store.read_run(sample_pages)  # random page reads
+    samp_mask = np.zeros(p_total, dtype=bool)
+    samp_mask[sampled] = True
+    samp_sel = samp_mask[page_of_point]
+    samp_idx = np.flatnonzero(samp_sel)
+    # a sampled trailing partial page can leave the sample short; top up so
+    # that Step 1 operates on exactly alpha*C_B full pages
+    need = sample_pages * c_l
+    if len(samp_idx) < need:
+        extra = np.flatnonzero(~samp_sel)[: need - len(samp_idx)]
+        samp_sel[extra] = True
+        samp_idx = np.flatnonzero(samp_sel)
+
+    mst, _, samp_assign = build_group_median_tree(
+        points[samp_idx], n_groups=c_b, group_pages=alpha, page_points=c_l
+    )
+
+    # ---- Step 2: distribute remaining pages -----------------------------
+    rest_idx = np.flatnonzero(~samp_sel)
+    store.read_run(-(-len(rest_idx) // c_l))
+    bufs = SubspaceBuffers(c_b, c_l, buffer_pages, store, [alpha] * c_b)
+    sub_points: list[list[np.ndarray]] = [[] for _ in range(c_b)]
+    for s in range(c_b):
+        sub_points[s].append(samp_idx[samp_assign == s])
+    if len(rest_idx) > 0:
+        assign = mst.route(points[rest_idx])
+        # stream in file order at page granularity to model flush order
+        for start in range(0, len(rest_idx), c_l):
+            sl = slice(start, start + c_l)
+            a = assign[sl]
+            ridx = rest_idx[sl]
+            for s in np.unique(a):
+                sel = ridx[a == s]
+                sub_points[int(s)].append(sel)
+                bufs.add_points(int(s), len(sel))
+
+    # ---- Step 3: refine sparse subspaces (actives first: pages are free)
+    sub_idx = [
+        np.concatenate(sp) if sp else np.zeros(0, dtype=np.int64)
+        for sp in sub_points
+    ]
+    subspace_nodes: list[Optional[Node]] = [None] * c_b
+    dense: list[int] = []
+    for s in np.argsort(~bufs.active, kind="stable"):
+        s = int(s)
+        pages_s = bufs.pages_of(s)
+        if pages_s > buffer_pages:
+            dense.append(s)
+            continue
+        if len(sub_idx[s]) == 0:
+            continue
+        if not bufs.active[s]:
+            store.read_run(int(bufs.disk_pages[s]))  # reload flushed pages
+        entries = refine_subspace(points, sub_idx[s], c_l, c_b, store)
+        node_mbb = (
+            mbb_of(points[sub_idx[s]]) if len(sub_idx[s]) else np.zeros((2, d))
+        )
+        if len(entries) == 1:
+            subspace_nodes[s] = entries[0]  # already has its own page
+        else:
+            # page deferred: assigned after Step 4 merging
+            subspace_nodes[s] = Node(mbb=node_mbb, page_id=-1, children=entries)
+
+    # ---- Step 4: conceptual merging, then write the root-entry pages ----
+    merge_candidates: list[Optional[Node]] = [
+        sn if (sn is not None and sn.page_id == -1) else None
+        for sn in subspace_nodes
+    ]
+    groups = merge_branches(mst, merge_candidates, c_b)
+    for group in groups:
+        page = store.alloc()
+        store.write(page)
+        for node in group:
+            node.page_id = page
+
+    # ---- Step 5: dense subspaces -> recursive bulk load ------------------
+    for s in dense:
+        bufs.final_flush_partial(s)
+        sub = bulk_load(
+            points[sub_idx[s]],
+            buffer_pages,
+            store,
+            rng,
+            charge_source_read=True,
+            _depth=_depth + 1,
+        )
+        _rebase_leaves(sub.root, sub_idx[s])
+        subspace_nodes[s] = sub.root
+
+    root_page = store.alloc()
+    store.write(root_page)
+    root = Node(
+        mbb=mbb_of(points),
+        page_id=root_page,
+        children=[sn for sn in subspace_nodes if sn is not None],
+    )
+    return Index(root, d, c_l, c_b, store, points)
+
+
+def _rebase_leaves(node: Node, base_idx: np.ndarray) -> None:
+    stack = [node]
+    while stack:
+        n = stack.pop()
+        if n.is_leaf:
+            n.point_idx = base_idx[n.point_idx]
+        elif n.is_unrefined:
+            n.raw_points = base_idx[n.raw_points]
+        elif n.children:
+            stack.extend(n.children)

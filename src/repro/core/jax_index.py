@@ -1,0 +1,208 @@
+"""JAX-native FMBI: vectorized balanced median-split index build + queries.
+
+This is the accelerator reformulation of the paper's bulk loader (DESIGN.md
+section 2, level 2).  FMBI's structure — recursive median splits on the
+highest-spread dimension, at page granularity — is built here as a fully
+data-parallel computation with static shapes:
+
+  * ``build``: ``levels`` rounds of segment-wise (per-group) spread
+    computation, rank-median split, and group re-assignment.  After L rounds
+    the points are partitioned into 2^L equal-size leaves ("pages"), each
+    with a tight MBB — exactly the leaf level FMBI produces, computed with
+    sorts over *tiles in fast memory* instead of external sorts (the paper's
+    core insight, mapped onto the HBM->VMEM hierarchy).
+  * ``route``: point -> leaf traversal through the recorded (dim, value)
+    split tables; the Pallas kernel ``kernels/partition_assign`` implements
+    the same loop with explicit VMEM tiling.
+  * ``window_count`` / ``knn``: batched query execution, leaf-granular
+    pruning followed by exact per-candidate-leaf scans (consuming
+    ``kernels/knn_topk`` on TPU).
+
+Everything is jit-able and shard_map-compatible (see ``distributed.py``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class JaxIndex:
+    """Array-encoded balanced KD index: 2^levels equal leaves."""
+
+    points_sorted: jnp.ndarray  # (n_pad, d) leaf-contiguous layout
+    row_ids: jnp.ndarray        # (n_pad,) original row ids (-1 = padding)
+    split_dim: jnp.ndarray      # (levels, n_groups_max) int32
+    split_val: jnp.ndarray      # (levels, n_groups_max) float32
+    leaf_lo: jnp.ndarray        # (n_leaves, d)
+    leaf_hi: jnp.ndarray        # (n_leaves, d)
+    levels: int
+    leaf_size: int
+
+    def tree_flatten(self):
+        arrays = (
+            self.points_sorted,
+            self.row_ids,
+            self.split_dim,
+            self.split_val,
+            self.leaf_lo,
+            self.leaf_hi,
+        )
+        return arrays, (self.levels, self.leaf_size)
+
+    @classmethod
+    def tree_unflatten(cls, aux, arrays):
+        return cls(*arrays, levels=aux[0], leaf_size=aux[1])
+
+    @property
+    def n_leaves(self) -> int:
+        return 1 << self.levels
+
+
+@partial(jax.jit, static_argnames=("levels",))
+def build(points: jnp.ndarray, levels: int, row_ids=None) -> JaxIndex:
+    """Build the balanced median-split index over ``points`` (n, d).
+
+    n must be a multiple of 2^levels (callers pad; see ``pad_points``).
+    ``row_ids`` carries original row identities (-1 for padding sentinels).
+    """
+    n, d = points.shape
+    if row_ids is None:
+        row_ids = jnp.arange(n, dtype=jnp.int32)
+    n_groups_max = 1 << levels
+    assert n % n_groups_max == 0, "pad points to a multiple of 2^levels"
+    g = jnp.zeros(n, dtype=jnp.int32)
+    pts = points
+    split_dim = jnp.zeros((levels, n_groups_max), dtype=jnp.int32)
+    split_val = jnp.full((levels, n_groups_max), jnp.inf, dtype=points.dtype)
+
+    for level in range(levels):
+        n_groups = 1 << level
+        size = n // n_groups
+        # spread per (group, dim) -> split dimension per group
+        gmax = jax.ops.segment_max(pts, g, num_segments=n_groups)
+        gmin = jax.ops.segment_min(pts, g, num_segments=n_groups)
+        dim_g = jnp.argmax(gmax - gmin, axis=1).astype(jnp.int32)  # (G,)
+        key = pts[jnp.arange(n), dim_g[g]]
+        order = jnp.lexsort((key, g))
+        pts = pts[order]
+        g = g[order]
+        row_ids = row_ids[order]
+        half = size // 2
+        rank = jnp.arange(n) % size
+        child = (rank >= half).astype(jnp.int32)
+        # record split value = key of last left point per group
+        key_sorted = key[order]
+        med = key_sorted[jnp.arange(n_groups) * size + (half - 1)]
+        split_dim = split_dim.at[level, :n_groups].set(dim_g)
+        split_val = split_val.at[level, :n_groups].set(med)
+        g = g * 2 + child
+
+    # leaf boxes
+    leaf_lo = jax.ops.segment_min(pts, g, num_segments=n_groups_max)
+    leaf_hi = jax.ops.segment_max(pts, g, num_segments=n_groups_max)
+    # leaf-contiguous layout (g is already sorted into leaf order)
+    return JaxIndex(
+        points_sorted=pts,
+        row_ids=row_ids.astype(jnp.int32),
+        split_dim=split_dim,
+        split_val=split_val,
+        leaf_lo=leaf_lo,
+        leaf_hi=leaf_hi,
+        levels=levels,
+        leaf_size=n // n_groups_max,
+    )
+
+
+def pad_points(points: np.ndarray, levels: int) -> tuple[np.ndarray, np.ndarray]:
+    """Pad to a multiple of 2^levels with +inf sentinels (routed to the last
+    leaf; queries mask them via row_ids == -1)."""
+    n, d = points.shape
+    unit = 1 << levels
+    n_pad = -(-n // unit) * unit
+    if n_pad == n:
+        return points, np.arange(n)
+    pad = np.full((n_pad - n, d), np.finfo(points.dtype).max, dtype=points.dtype)
+    ids = np.concatenate([np.arange(n), np.full(n_pad - n, -1)])
+    return np.concatenate([points, pad]), ids
+
+
+@jax.jit
+def route(index: JaxIndex, queries: jnp.ndarray) -> jnp.ndarray:
+    """Leaf id for each query point — the Step-2 routing loop."""
+    q = queries
+    g = jnp.zeros(q.shape[0], dtype=jnp.int32)
+    for level in range(index.levels):
+        dim = index.split_dim[level, g]
+        val = index.split_val[level, g]
+        coord = q[jnp.arange(q.shape[0]), dim]
+        g = g * 2 + (coord > val).astype(jnp.int32)
+    return g
+
+
+@partial(jax.jit, static_argnames=("use_kernel",))
+def window_count(
+    index: JaxIndex, lo: jnp.ndarray, hi: jnp.ndarray, use_kernel: bool = False
+) -> jnp.ndarray:
+    """Result counts for a batch of window queries (Q, d) x 2.
+
+    Leaf-level pruning mirrors the tree traversal: a leaf is scanned only if
+    its MBB intersects the window; pruned leaves cost nothing on TPU thanks
+    to masking (they model the unvisited pages).
+    """
+    pts = index.points_sorted.reshape(index.n_leaves, index.leaf_size, -1)
+    valid = (index.row_ids >= 0).reshape(index.n_leaves, index.leaf_size)
+
+    def one(lo1, hi1):
+        inter = jnp.all(index.leaf_lo <= hi1, axis=1) & jnp.all(
+            index.leaf_hi >= lo1, axis=1
+        )
+        inside = jnp.all((pts >= lo1) & (pts <= hi1), axis=2) & valid
+        return jnp.sum(inside & inter[:, None])
+
+    return jax.vmap(one)(lo, hi)
+
+
+@partial(jax.jit, static_argnames=("k", "n_candidate_leaves"))
+def knn(
+    index: JaxIndex, queries: jnp.ndarray, k: int, n_candidate_leaves: int = 8
+):
+    """Batched k-NN: take the C closest leaves per query (by box mindist),
+    scan them exactly, and merge top-k.  Returns (row_ids, dists_sq,
+    exact_flag) where exact_flag certifies that the k-th distance does not
+    exceed the mindist of the first unscanned leaf (best-first guarantee).
+    """
+    pts = index.points_sorted.reshape(index.n_leaves, index.leaf_size, -1)
+    valid = (index.row_ids >= 0).reshape(index.n_leaves, index.leaf_size)
+    rows = index.row_ids.reshape(index.n_leaves, index.leaf_size)
+
+    n_c = min(n_candidate_leaves, index.n_leaves)
+
+    def one(q):
+        gap = jnp.maximum(index.leaf_lo - q, 0.0) + jnp.maximum(
+            q - index.leaf_hi, 0.0
+        )
+        mind = jnp.sum(gap * gap, axis=1)  # (L,)
+        neg, cand_all = jax.lax.top_k(-mind, min(n_c + 1, index.n_leaves))
+        cand = cand_all[:n_c]
+        cand_pts = pts[cand]  # (C, leaf, d)
+        d2 = jnp.sum((cand_pts - q) ** 2, axis=2)
+        d2 = jnp.where(valid[cand], d2, jnp.inf)
+        flat_d2 = d2.reshape(-1)
+        flat_rows = rows[cand].reshape(-1)
+        topv, topi = jax.lax.top_k(-flat_d2, k)
+        kth = -topv[-1]
+        # exactness certificate: kth dist <= mindist of the closest leaf we
+        # did NOT scan (then no unscanned leaf can hold a closer neighbor)
+        if n_c == index.n_leaves:
+            exact = jnp.bool_(True)
+        else:
+            exact = kth <= -neg[n_c]
+        return flat_rows[topi], -topv, exact
+
+    return jax.vmap(one)(queries)

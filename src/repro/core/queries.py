@@ -1,0 +1,142 @@
+"""Query processing over ``core`` indexes: window (range) and k-NN.
+
+Both queries follow the paper's top-down traversal: starting from the root,
+visit every node whose MBB may contain results; leaves are scanned and
+filtered.  Each node visit charges one buffered page read to the index's
+``PageStore`` (merged nodes share pages, so the LRU buffer — not the tree
+shape — decides whether a visit costs I/O, exactly as in the paper).
+
+k-NN uses the standard best-first search with an incremental result heap
+(Hjaltason & Samet), which both FMBI and the competitor R-tree variants use
+in the paper's unified framework.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+
+import numpy as np
+
+from .fmbi import Index, Node
+from .pagestore import IOStats
+
+
+# --------------------------------------------------------------------------
+# geometry helpers
+# --------------------------------------------------------------------------
+def mbb_intersects(mbb: np.ndarray, lo: np.ndarray, hi: np.ndarray) -> bool:
+    return bool(np.all(mbb[0] <= hi) and np.all(mbb[1] >= lo))
+
+
+def mindist_sq(mbb: np.ndarray, q: np.ndarray) -> float:
+    """Squared min distance from point ``q`` to box ``mbb`` (0 if inside)."""
+    d = np.maximum(mbb[0] - q, 0.0) + np.maximum(q - mbb[1], 0.0)
+    return float(np.dot(d, d))
+
+
+# --------------------------------------------------------------------------
+# window query
+# --------------------------------------------------------------------------
+def window_query(
+    index: Index,
+    lo: np.ndarray,
+    hi: np.ndarray,
+    *,
+    refiner=None,
+) -> tuple[np.ndarray, IOStats]:
+    """All dataset rows inside [lo, hi].  Returns (row indices, io delta).
+
+    ``refiner(node)`` is AMBI's hook: called on qualifying unrefined nodes to
+    build their subtree on demand before traversal continues.
+    """
+    store = index.store
+    before = store.stats.snapshot()
+    lo = np.asarray(lo, dtype=np.float64)
+    hi = np.asarray(hi, dtype=np.float64)
+    out: list[np.ndarray] = []
+    stack = [index.root]
+    while stack:
+        node = stack.pop()
+        if not mbb_intersects(node.mbb, lo, hi):
+            continue
+        store.read(node.page_id)
+        if node.is_unrefined:
+            if refiner is None:
+                raise RuntimeError("unrefined node reached without a refiner")
+            node = refiner(node)
+            if node is None:
+                continue
+            stack.append(node)
+            continue
+        if node.is_leaf:
+            pts = index.points[node.point_idx]
+            mask = np.all((pts >= lo) & (pts <= hi), axis=1)
+            if mask.any():
+                out.append(node.point_idx[mask])
+        else:
+            stack.extend(node.children)
+    res = np.concatenate(out) if out else np.zeros(0, dtype=np.int64)
+    return res, store.stats.delta(before)
+
+
+# --------------------------------------------------------------------------
+# k-NN query (best-first)
+# --------------------------------------------------------------------------
+def knn_query(
+    index: Index,
+    q: np.ndarray,
+    k: int,
+    *,
+    refiner=None,
+) -> tuple[np.ndarray, IOStats]:
+    """k nearest dataset rows to ``q``.  Returns (row indices, io delta)."""
+    store = index.store
+    before = store.stats.snapshot()
+    q = np.asarray(q, dtype=np.float64)
+    counter = itertools.count()  # tie-breaker for heap ordering
+    heap: list = [(0.0, next(counter), index.root)]
+    best: list = []  # max-heap of (-dist_sq, row)
+    while heap:
+        dist, _, node = heapq.heappop(heap)
+        if len(best) == k and dist > -best[0][0]:
+            break
+        store.read(node.page_id)
+        if node.is_unrefined:
+            if refiner is None:
+                raise RuntimeError("unrefined node reached without a refiner")
+            node = refiner(node)
+            if node is None:
+                continue
+            heapq.heappush(heap, (mindist_sq(node.mbb, q), next(counter), node))
+            continue
+        if node.is_leaf:
+            pts = index.points[node.point_idx]
+            d2 = np.sum((pts - q) ** 2, axis=1)
+            for dd, row in zip(d2, node.point_idx):
+                if len(best) < k:
+                    heapq.heappush(best, (-dd, int(row)))
+                elif dd < -best[0][0]:
+                    heapq.heapreplace(best, (-dd, int(row)))
+        else:
+            kth = -best[0][0] if len(best) == k else np.inf
+            for c in node.children:
+                md = mindist_sq(c.mbb, q)
+                if md <= kth:
+                    heapq.heappush(heap, (md, next(counter), c))
+    rows = np.asarray(
+        [r for _, r in sorted(best, key=lambda t: -t[0])], dtype=np.int64
+    )
+    return rows, store.stats.delta(before)
+
+
+# --------------------------------------------------------------------------
+# brute-force oracles (for tests)
+# --------------------------------------------------------------------------
+def window_oracle(points: np.ndarray, lo, hi) -> np.ndarray:
+    mask = np.all((points >= np.asarray(lo)) & (points <= np.asarray(hi)), axis=1)
+    return np.flatnonzero(mask)
+
+
+def knn_oracle(points: np.ndarray, q, k: int) -> np.ndarray:
+    d2 = np.sum((points - np.asarray(q)) ** 2, axis=1)
+    return np.argsort(d2, kind="stable")[:k]

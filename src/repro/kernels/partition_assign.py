@@ -1,0 +1,83 @@
+"""Pallas TPU kernel: point -> subspace routing through a flat SplitTree.
+
+This is FMBI's Step-2 hot loop (every point of the dataset traverses the
+Major SplitTree once).  The TPU-native adaptation (DESIGN.md section 2):
+
+  * the point stream is tiled into VMEM blocks (the "pages" of the paper's
+    linear scan — one HBM read per point);
+  * the per-point tree traversal uses **one-hot matmuls** instead of dynamic
+    gathers: selecting ``split_val[level, g]`` for a tile of group ids ``g``
+    becomes ``onehot(g) @ split_val[level]``, which maps onto the MXU rather
+    than fighting TPU's lack of fast per-lane gathers;
+  * the split tables live fully in VMEM (levels x 2^levels floats — a few
+    KiB for any realistic branch capacity).
+
+The tree layout is the *heap-form* balanced tree produced by
+``core.jax_index.build`` (split tables indexed [level, group]), which is how
+FMBI's Step-1/Step-3 median trees are represented on device.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_TILE = 1024
+
+
+def _route_kernel(points_ref, dim_onehot_ref, split_val_ref, out_ref,
+                  *, levels: int, n_groups: int):
+    pts = points_ref[...]                      # (tile, d) f32
+    tile = pts.shape[0]
+    g = jnp.zeros((tile,), dtype=jnp.int32)
+    group_ids = jax.lax.broadcasted_iota(jnp.int32, (tile, n_groups), 1)
+    for level in range(levels):                # static unroll: tree depth
+        onehot = (g[:, None] == group_ids).astype(pts.dtype)  # (tile, G)
+        # gather-free selects: MXU matmuls against the level's tables
+        val = onehot @ split_val_ref[level]                   # (tile,)
+        dim_sel = onehot @ dim_onehot_ref[level]              # (tile, d)
+        coord = jnp.sum(pts * dim_sel, axis=1)                # (tile,)
+        g = g * 2 + (coord > val).astype(jnp.int32)
+    out_ref[...] = g
+
+
+@functools.partial(jax.jit, static_argnames=("levels", "tile", "interpret"))
+def partition_assign(
+    points: jnp.ndarray,       # (n, d) float32, n % tile == 0
+    split_dim: jnp.ndarray,    # (levels, n_groups) int32
+    split_val: jnp.ndarray,    # (levels, n_groups) float32
+    *,
+    levels: int,
+    tile: int = DEFAULT_TILE,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Leaf/subspace id per point.  ``interpret=True`` runs the kernel body
+    on CPU for validation; on TPU pass ``interpret=False``."""
+    n, d = points.shape
+    n_groups = split_val.shape[1]
+    assert n % tile == 0, "pad the point stream to a tile multiple"
+    # sanitize padded table entries: 0 * inf = NaN would poison the one-hot
+    # matmul, so unused (never-selected) slots become a large finite value
+    big = jnp.asarray(jnp.finfo(jnp.float32).max, split_val.dtype)
+    split_val = jnp.where(jnp.isfinite(split_val), split_val, big)
+    # one-hot of split dimension per (level, group): (levels, G, d)
+    dim_onehot = jax.nn.one_hot(split_dim, d, dtype=points.dtype)
+    grid = (n // tile,)
+    kernel = functools.partial(
+        _route_kernel, levels=levels, n_groups=n_groups
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, d), lambda i: (i, 0)),
+            pl.BlockSpec((levels, n_groups, d), lambda i: (0, 0, 0)),
+            pl.BlockSpec((levels, n_groups), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((n,), jnp.int32),
+        interpret=interpret,
+    )(points, dim_onehot, split_val)

@@ -1,0 +1,34 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contracts)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def partition_assign_ref(points, split_dim, split_val, *, levels: int):
+    """Reference tree routing: plain gathers, no tiling."""
+    n = points.shape[0]
+    g = jnp.zeros(n, dtype=jnp.int32)
+    rows = jnp.arange(n)
+    for level in range(levels):
+        dim = split_dim[level, g]
+        val = split_val[level, g]
+        coord = points[rows, dim]
+        g = g * 2 + (coord > val).astype(jnp.int32)
+    return g
+
+
+def pairwise_dist2_ref(queries, points, valid):
+    """Reference masked squared distances: direct subtraction."""
+    d2 = jnp.sum(
+        (queries[:, None, :] - points[None, :, :]) ** 2, axis=-1
+    ).astype(jnp.float32)
+    big = jnp.finfo(jnp.float32).max
+    return jnp.where(valid[None, :] > 0, d2, big)
+
+
+def knn_topk_ref(queries, points, valid, k: int):
+    """Reference k-NN: full distance matrix + top_k."""
+    d2 = pairwise_dist2_ref(queries, points, valid)
+    neg, idx = jax.lax.top_k(-d2, k)
+    return idx, -neg

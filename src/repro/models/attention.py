@@ -1,0 +1,186 @@
+"""Attention: GQA with RoPE / qk-norm / sliding-window / cross-attention.
+
+Prefill and training run q-chunked (``cfg.chunk_q``): the score matrix is
+materialized one query block at a time, so 32k-sequence prefill never builds
+an S x S tensor.  Two local-attention execution paths exist:
+
+  * naive  — scores against the full K, sliding-window *masked* (simple,
+             wasteful: S/w x more FLOPs at long S);
+  * sliced — each q-chunk attends to a dynamic K/V slice of width
+             (chunk + window): the compute matches the window exactly.
+
+The naive path is the dry-run baseline; ``local_slice_opt=True`` switches to
+the sliced path (one of the hillclimb optimizations in EXPERIMENTS.md §Perf).
+
+Decode attends a single token against the cache; local layers keep a ring
+buffer of ``window`` positions, global layers the full sequence (sharded
+over the 'model' axis on the sequence dim when kv-heads < tp shards —
+flash-decoding-style partial softmax, reduced by XLA collectives).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Param, rms_norm, rope
+from .sharding import constrain
+
+NEG = -2.0e38
+
+
+def attn_defs(cfg, cross: bool = False) -> dict:
+    d, hd = cfg.d_model, cfg.hd
+    defs = {
+        "wq": Param((d, cfg.n_heads * hd), ("fsdp", "tp")),
+        "wk": Param((d, cfg.n_kv_heads * hd), ("fsdp", "tp")),
+        "wv": Param((d, cfg.n_kv_heads * hd), ("fsdp", "tp")),
+        "wo": Param((cfg.n_heads * hd, d), ("tp", "fsdp")),
+    }
+    if cfg.qk_norm:
+        defs["q_norm"] = Param((hd,), (None,), init="ones")
+        defs["k_norm"] = Param((hd,), (None,), init="ones")
+    return defs
+
+
+def _project_qkv(p, cfg, xq, xkv, pos_q, pos_kv, axes, use_rope=True):
+    B, Sq, _ = xq.shape
+    Skv = xkv.shape[1]
+    hd = cfg.hd
+    q = (xq @ p["wq"]).reshape(B, Sq, cfg.n_heads, hd)
+    k = (xkv @ p["wk"]).reshape(B, Skv, cfg.n_kv_heads, hd)
+    v = (xkv @ p["wv"]).reshape(B, Skv, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope:
+        q = rope(q, pos_q, cfg.rope_theta)
+        k = rope(k, pos_kv, cfg.rope_theta)
+    q = constrain(q, axes, ("fsdp", None, "tp", None))
+    k = constrain(k, axes, ("fsdp", None, None, None))
+    v = constrain(v, axes, ("fsdp", None, None, None))
+    return q, k, v
+
+
+def _sdpa_block(q, k, v, mask, cfg, axes=None):
+    """(B, cq, H, hd) x (B, Skv, Hk, hd) -> (B, cq, H, hd).
+
+    KV heads are repeated to the full head count before the score einsum so
+    the flat head dimension stays 'tp'-sharded — reshaping H into (Hk, rep)
+    breaks GSPMD propagation and silently replicates the score tensor (a
+    142 GiB/device lesson from the dry-run; see EXPERIMENTS.md §Perf)."""
+    B, cq, H, hd = q.shape
+    Hk = k.shape[2]
+    rep = H // Hk
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    if axes is not None:
+        k = constrain(k, axes, ("fsdp", None, "tp", None))
+        v = constrain(v, axes, ("fsdp", None, "tp", None))
+    scores = jnp.einsum(
+        "bqhd,bkhd->bhqk", q, k, preferred_element_type=jnp.float32
+    ) / (hd ** 0.5)
+    if axes is not None:
+        scores = constrain(scores, axes, ("fsdp", "tp", None, None))
+    scores = jnp.where(mask[:, None], scores, NEG)
+    w = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", w, v)
+    return out
+
+
+def attention(p, cfg, x, axes, *, causal=True, window=0, positions=None):
+    """Full-sequence (train/prefill) attention, q-chunked.
+
+    Returns (out (B,S,D), k, v) so callers can stash the KV cache."""
+    B, S, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    q, k, v = _project_qkv(p, cfg, x, x, positions, positions, axes)
+    cq = min(cfg.chunk_q, S)
+    while S % cq:  # largest divisor of S not exceeding chunk_q
+        cq -= 1
+    n_chunks = S // cq
+    sliced = window and getattr(cfg, "local_slice_opt", False) and S > window
+
+    def chunk(i):
+        qs = jax.lax.dynamic_slice_in_dim(q, i * cq, cq, axis=1)
+        pos_q = i * cq + jnp.arange(cq)
+        if sliced:
+            # K/V slice [chunk_start - window, chunk_end)
+            start = jnp.maximum(i * cq - window, 0)
+            width = cq + window
+            ks = jax.lax.dynamic_slice_in_dim(k, start, width, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(v, start, width, axis=1)
+            pos_k = start + jnp.arange(width)
+        else:
+            ks, vs = k, v
+            pos_k = jnp.arange(S)
+        mask = jnp.ones((1, cq, pos_k.shape[0]), bool)
+        if causal:
+            mask &= pos_q[None, :, None] >= pos_k[None, None, :]
+        if window:
+            mask &= pos_q[None, :, None] - pos_k[None, None, :] < window
+        return _sdpa_block(qs, ks, vs, mask, cfg, axes)
+
+    if n_chunks <= 1:
+        out = chunk(0)
+    else:
+        outs = jax.lax.map(chunk, jnp.arange(n_chunks))
+        out = jnp.moveaxis(outs, 0, 1).reshape(B, S, cfg.n_heads, cfg.hd)
+    out = out.reshape(B, S, cfg.n_heads * cfg.hd)
+    return out @ p["wo"], k, v
+
+
+def decode_attention(p, cfg, x, cache_k, cache_v, pos, axes, *, window=0):
+    """One-token decode against a cache.
+
+    cache_k/v: (B, S_cache, Hk, hd) — ring buffer if ``window`` (S_cache ==
+    window), else the full context.  ``pos``: (B,) current positions.
+    Returns (out (B,1,D), new_k, new_v)."""
+    B = x.shape[0]
+    S_cache = cache_k.shape[1]
+    q, k1, v1 = _project_qkv(
+        p, cfg, x, x, pos[:, None], pos[:, None], axes
+    )
+    slot = (pos % S_cache) if window else pos
+    bidx = jnp.arange(B)
+    cache_k = cache_k.at[bidx, slot].set(k1[:, 0])
+    cache_v = cache_v.at[bidx, slot].set(v1[:, 0])
+    kpos = jnp.arange(S_cache)[None, :]
+    if window:
+        # ring buffer: entry age = pos - stored position; compute stored pos
+        stored = pos[:, None] - ((pos[:, None] - kpos) % S_cache)
+        valid = (stored >= 0) & (stored <= pos[:, None])
+        # rope was applied at the true positions when entries were written
+        mask = valid
+    else:
+        mask = kpos <= pos[:, None]
+    out = _sdpa_block(q, cache_k, cache_v, mask[:, None, :], cfg, axes)
+    out = out.reshape(B, 1, cfg.n_heads * cfg.hd)
+    return out @ p["wo"], cache_k, cache_v
+
+
+def cross_attention(p, cfg, x, enc_k, enc_v, axes):
+    """Decoder cross-attention against precomputed encoder K/V."""
+    B, Sq, _ = x.shape
+    hd = cfg.hd
+    q = (x @ p["wq"]).reshape(B, Sq, cfg.n_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, p["q_norm"], cfg.norm_eps)
+    mask = jnp.ones((1, Sq, enc_k.shape[1]), bool)
+    out = _sdpa_block(q, enc_k, enc_v, mask, cfg, axes)
+    out = out.reshape(B, Sq, cfg.n_heads * hd)
+    return out @ p["wo"]
+
+
+def encode_kv(p, cfg, enc_out):
+    """Precompute cross-attention K/V from encoder output."""
+    B, S, _ = enc_out.shape
+    hd = cfg.hd
+    k = (enc_out @ p["wk"]).reshape(B, S, cfg.n_kv_heads, hd)
+    v = (enc_out @ p["wv"]).reshape(B, S, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        k = rms_norm(k, p["k_norm"], cfg.norm_eps)
+    return k, v

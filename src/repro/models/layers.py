@@ -1,0 +1,133 @@
+"""Parameter definitions and basic layers (norms, rope, MLP, embeddings).
+
+Parameters are declared once as ``Param`` descriptors (shape + logical
+sharding axes + init scale); the same tree drives real initialization,
+``eval_shape`` dry-run structs, and PartitionSpec extraction — one source of
+truth for structure and sharding.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .sharding import MeshAxes
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    shape: tuple
+    logical: tuple            # logical sharding axes, len == ndim
+    init: str = "normal"      # normal | zeros | ones
+    scale: Optional[float] = None  # default: 1/sqrt(fan_in)
+
+    def materialize(self, key, dtype):
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dtype)
+        fan_in = self.shape[-2] if len(self.shape) >= 2 else self.shape[-1]
+        scale = self.scale if self.scale is not None else fan_in ** -0.5
+        return (jax.random.normal(key, self.shape) * scale).astype(dtype)
+
+
+def tree_paths(tree, prefix=()):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from tree_paths(v, prefix + (k,))
+    else:
+        yield prefix, tree
+
+
+def init_tree(defs, key, dtype):
+    """Materialize a Param-descriptor tree into arrays (per-leaf fold_in)."""
+    leaves = list(tree_paths(defs))
+    out = {}
+    for i, (path, p) in enumerate(leaves):
+        k = jax.random.fold_in(key, i)
+        node = out
+        for seg in path[:-1]:
+            node = node.setdefault(seg, {})
+        node[path[-1]] = p.materialize(k, dtype)
+    return out
+
+
+def spec_tree(defs, axes: MeshAxes):
+    """Same-structure tree of PartitionSpecs."""
+    return jax.tree.map(
+        lambda p: axes.resolve(p.logical),
+        defs,
+        is_leaf=lambda x: isinstance(x, Param),
+    )
+
+
+def shape_tree(defs, dtype):
+    """Same-structure tree of ShapeDtypeStructs (no allocation)."""
+    return jax.tree.map(
+        lambda p: jax.ShapeDtypeStruct(p.shape, dtype),
+        defs,
+        is_leaf=lambda x: isinstance(x, Param),
+    )
+
+
+# --------------------------------------------------------------------------
+# layers
+# --------------------------------------------------------------------------
+def rms_norm(x, w, eps: float = 1e-6):
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps)).astype(x.dtype) * w
+
+
+def rope(x, positions, theta: float = 1e4):
+    """Rotary embedding over the last dim of (..., seq, heads, hd)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(ang)[..., :, None, :]
+    sin = jnp.sin(ang)[..., :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+def swiglu(x, w1, w3, w2):
+    """Gated MLP: (silu(x w1) * (x w3)) w2."""
+    h = jax.nn.silu(x @ w1) * (x @ w3)
+    return h @ w2
+
+
+def mlp_defs(d: int, f: int) -> dict:
+    return {
+        "w1": Param((d, f), ("fsdp", "tp")),
+        "w3": Param((d, f), ("fsdp", "tp")),
+        "w2": Param((f, d), ("tp", "fsdp")),
+    }
+
+
+def embed_defs(cfg) -> dict:
+    v = cfg.padded_vocab
+    # d^-0.5 keeps tied-embedding logits at unit scale
+    d = {"tok": Param((v, cfg.d_model), ("tp", "fsdp"),
+                      scale=cfg.d_model ** -0.5)}
+    if not cfg.tied_embeddings:
+        d["out"] = Param((cfg.d_model, v), ("fsdp", "tp"))
+    d["final_norm"] = Param((cfg.d_model,), (None,), init="ones")
+    return d
+
+
+def mask_padded_vocab(cfg, lg):
+    if cfg.padded_vocab == cfg.vocab:
+        return lg
+    bad = jnp.arange(cfg.padded_vocab) >= cfg.vocab
+    return jnp.where(bad, jnp.asarray(-1e30, lg.dtype), lg)
+
+
+def logits(x, params, cfg):
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    lg = x @ (params["tok"].T if cfg.tied_embeddings else params["out"])
+    return mask_padded_vocab(cfg, lg)

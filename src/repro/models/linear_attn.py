@@ -1,0 +1,146 @@
+"""Chunked gated linear attention — the shared engine for RWKV6 and Mamba.
+
+Both sequence mixers obey the same matrix-state recurrence per head
+
+    S_t = diag(w_t) S_{t-1} + k_t^T v_t          (S: dk x dv)
+    y_t = r_t S_{t-1} (+ bonus (r_t . (u*k_t)) v_t   [RWKV6 only])
+
+with w_t in (0,1): per-channel data-dependent decay for RWKV6 (Finch),
+per-head scalar decay for the Mamba SSD form.  The TPU-native execution is
+the chunked (block-parallel) form (GLA / Mamba-2 style):
+
+  * within a chunk of length c, decays become cumulative products A_t
+    (log-space cumsum) and the intra-chunk contribution is a (c x c) masked
+    matmul — MXU work, no recurrence;
+  * across chunks, the state carry is a (dk x dv) linear recurrence solved
+    with ``jax.lax.associative_scan`` (log-depth, counted HLO — no opaque
+    while loop).
+
+Numeric-range adaptation (documented in DESIGN.md): log-decay is bounded to
+[-LOG_DECAY_BOUND, 0) via a sigmoid so that within-chunk 1/A factors stay
+inside float32 range (exp(c * bound) <= e^80 for c = 32).  The decode path
+uses the exact recurrence (one einsum per token) and matches the chunked
+form bit-for-bit in tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+LOG_DECAY_BOUND = 2.5
+
+
+def bounded_log_decay(raw):
+    """Map raw decay logits to log w in (-LOG_DECAY_BOUND, 0)."""
+    return -LOG_DECAY_BOUND * jax.nn.sigmoid(raw.astype(jnp.float32))
+
+
+def chunked_gla(r, k, v, log_w, *, chunk: int, u=None, state0=None,
+                axes=None):
+    """Chunked gated linear attention.
+
+    r, k: (B, S, H, dk); v: (B, S, H, dv); log_w: (B, S, H, dk) or
+    (B, S, H, 1) [scalar decay]; u: (H, dk) RWKV6 bonus or None.
+    Returns (y (B,S,H,dv), final_state (B,H,dk,dv))."""
+    B, S, H, dk = r.shape
+    dv = v.shape[-1]
+    assert S % chunk == 0, "pad sequence to a chunk multiple"
+    n = S // chunk
+    f32 = jnp.float32
+
+    def shard(x):  # keep the head dim 'tp'-sharded through the chunk math
+        if axes is None:
+            return x
+        from .sharding import constrain
+
+        return constrain(x, axes, ("fsdp", None, None, "tp", None))
+
+    rc = shard(r.reshape(B, n, chunk, H, dk).astype(f32))
+    kc = shard(k.reshape(B, n, chunk, H, dk).astype(f32))
+    vc = shard(v.reshape(B, n, chunk, H, dv).astype(f32))
+    lw = shard(log_w.reshape(B, n, chunk, H, log_w.shape[-1]).astype(f32))
+
+    la_inc = jnp.cumsum(lw, axis=2)               # inclusive log cumprod
+    la_exc = la_inc - lw                          # exclusive
+    a_last = la_inc[:, :, -1]                     # (B, n, H, dkw)
+
+    rq = rc * jnp.exp(la_exc)                     # r_t * A_{t-1}
+    ks = kc * jnp.exp(-la_inc)                    # k_s / A_s
+    kl = kc * jnp.exp(a_last[:, :, None] - la_inc)  # k_s * A_last / A_s
+
+    # intra-chunk: strict lower-triangular (s < t) attention matmul
+    scores = jnp.einsum("bnthd,bnshd->bnhts", rq, ks)
+    if axes is not None:
+        from .sharding import constrain
+
+        scores = constrain(scores, axes, ("fsdp", None, "tp", None, None))
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+    scores = jnp.where(mask[None, None, None], scores, 0.0)
+    y_intra = jnp.einsum("bnhts,bnshv->bnthv", scores, vc)
+    if u is not None:  # RWKV6 bonus: current token, weighted by u
+        bonus = jnp.einsum(
+            "bnthd,hd,bnthd->bnth", rc, u.astype(f32), kc
+        )
+        y_intra = y_intra + bonus[..., None] * vc
+
+    # per-chunk state contribution and decay
+    b_chunk = jnp.einsum("bnshd,bnshv->bnhdv", kl, vc)  # (B,n,H,dk,dv)
+    a_chunk = jnp.exp(a_last)                           # (B,n,H,dkw)
+    if a_chunk.shape[-1] == 1:
+        a_chunk = jnp.broadcast_to(a_chunk, a_chunk.shape[:-1] + (dk,))
+
+    # inter-chunk: associative scan of S_i = diag(a_i) S_{i-1} + B_i
+    def combine(left, right):
+        a_l, b_l = left
+        a_r, b_r = right
+        return a_r * a_l, a_r[..., None] * b_l + b_r
+
+    a_scan, b_scan = jax.lax.associative_scan(
+        combine, (a_chunk, b_chunk), axis=1
+    )
+    if state0 is None:
+        state0 = jnp.zeros((B, H, dk, dv), f32)
+    # state entering chunk i = scanned state of chunks [0..i-1] + decayed S0
+    a_all = jnp.concatenate(
+        [jnp.ones_like(a_scan[:, :1]), a_scan], axis=1
+    )  # cumulative decay up to chunk i (exclusive at index i)
+    b_all = jnp.concatenate([jnp.zeros_like(b_scan[:, :1]), b_scan], axis=1)
+    s_in = a_all[..., None] * state0[:, None] + b_all  # (B, n+1, H, dk, dv)
+    y_inter = jnp.einsum(
+        "bnthd,bnhdv->bnthv", rc * jnp.exp(la_exc), s_in[:, :-1]
+    )
+    y = (y_intra + y_inter).reshape(B, S, H, dv)
+    return y.astype(r.dtype), s_in[:, -1]
+
+
+def gla_decode(r, k, v, log_w, state, u=None):
+    """Exact single-token recurrence.
+
+    r, k: (B, H, dk); v: (B, H, dv); log_w: (B, H, dk|1);
+    state: (B, H, dk, dv).  Returns (y (B,H,dv), new_state)."""
+    f32 = jnp.float32
+    r32, k32, v32 = r.astype(f32), k.astype(f32), v.astype(f32)
+    w = jnp.exp(log_w.astype(f32))
+    y = jnp.einsum("bhd,bhdv->bhv", r32, state)
+    if u is not None:
+        y = y + jnp.einsum("bhd,hd,bhd->bh", r32, u.astype(f32), k32)[
+            ..., None
+        ] * v32
+    new_state = w[..., None] * state + k32[..., :, None] * v32[..., None, :]
+    return y.astype(r.dtype), new_state
+
+
+def gla_reference(r, k, v, log_w, *, u=None, state0=None):
+    """Naive sequential oracle (tests): step-by-step recurrence."""
+    B, S, H, dk = r.shape
+    dv = v.shape[-1]
+    state = (
+        jnp.zeros((B, H, dk, dv), jnp.float32) if state0 is None else state0
+    )
+    ys = []
+    for t in range(S):
+        y, state = gla_decode(
+            r[:, t], k[:, t], v[:, t], log_w[:, t], state, u=u
+        )
+        ys.append(y)
+    return jnp.stack(ys, axis=1), state

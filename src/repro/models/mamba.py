@@ -1,0 +1,97 @@
+"""Mamba block in the SSD (Mamba-2 style) form, for Jamba's hybrid layers.
+
+TPU-native adaptation (DESIGN.md): Mamba-1's per-channel decay makes the
+chunked matmul form materialize per-position state tensors, which maps
+poorly onto the MXU; the SSD reformulation (scalar decay per head per step)
+admits exactly the chunked GLA execution used for RWKV6, so both hybrids
+share one well-tested engine.  Structure kept from Mamba: in-projection to
+(x, z) with expansion, causal depthwise conv on x, data-dependent (dt, B, C)
+heads, D skip connection, and SiLU(z) gating.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import Param
+from .linear_attn import bounded_log_decay, chunked_gla, gla_decode
+from .sharding import constrain
+
+CONV_K = 4
+
+
+def mamba_defs(cfg) -> dict:
+    d = cfg.d_model
+    di = cfg.mamba_expand * d
+    hd = cfg.mamba_head_dim
+    H = di // hd
+    N = cfg.mamba_d_state
+    return {
+        "in_proj": Param((d, 2 * di), ("fsdp", "tp")),     # x, z
+        "conv_w": Param((CONV_K, di), (None, "tp"), scale=0.5),
+        "wB": Param((d, H * N), ("fsdp", "tp")),
+        "wC": Param((d, H * N), ("fsdp", "tp")),
+        "w_dt": Param((d, H), ("fsdp", "tp")),
+        "dt_bias": Param((H,), (None,), init="zeros"),
+        "D": Param((H,), (None,), init="ones"),
+        "out_proj": Param((di, d), ("tp", "fsdp")),
+    }
+
+
+def _causal_conv(x, w, prev=None):
+    """Depthwise causal conv1d: x (B,S,di), w (K,di), prev (B,K-1,di)."""
+    B, S, di = x.shape
+    if prev is None:
+        prev = jnp.zeros((B, CONV_K - 1, di), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)
+    out = sum(
+        xp[:, k : k + S] * w[k] for k in range(CONV_K)
+    )
+    return jax.nn.silu(out), xp[:, -(CONV_K - 1) :]
+
+
+def mamba_mix(p, cfg, x, axes, *, conv_prev=None, state0=None):
+    """(B,S,D) -> (B,S,D); returns (out, new_conv_state, final_gla_state)."""
+    B, S, D = x.shape
+    di = cfg.mamba_expand * D
+    hd = cfg.mamba_head_dim
+    H = di // hd
+    N = cfg.mamba_d_state
+    xz = x @ p["in_proj"]
+    xin, z = xz[..., :di], xz[..., di:]
+    xin = constrain(xin, axes, ("fsdp", None, "tp"))
+    xin, conv_state = _causal_conv(xin, p["conv_w"], conv_prev)
+    Bm = (x @ p["wB"]).reshape(B, S, H, N)     # "k"
+    Cm = (x @ p["wC"]).reshape(B, S, H, N)     # "r"
+    v = xin.reshape(B, S, H, hd)               # "v"
+    dt = (x @ p["w_dt"]) + p["dt_bias"]
+    log_a = bounded_log_decay(dt).reshape(B, S, H, 1)  # scalar decay per head
+    y, state = chunked_gla(
+        Cm, Bm, v, log_a, chunk=min(cfg.la_chunk, S), state0=state0,
+        axes=axes,
+    )
+    y = y + p["D"][None, None, :, None] * v    # skip
+    y = y.reshape(B, S, di) * jax.nn.silu(z)
+    return y @ p["out_proj"], conv_state, state
+
+
+def mamba_mix_decode(p, cfg, x1, conv_prev, state):
+    """One token: x1 (B,D).  Returns (out, new_conv_prev, new_state)."""
+    B, D = x1.shape
+    di = cfg.mamba_expand * D
+    hd = cfg.mamba_head_dim
+    H = di // hd
+    N = cfg.mamba_d_state
+    xz = x1 @ p["in_proj"]
+    xin, z = xz[..., :di], xz[..., di:]
+    xp = jnp.concatenate([conv_prev, xin[:, None]], axis=1)  # (B, K, di)
+    xin = jax.nn.silu(sum(xp[:, k] * p["conv_w"][k] for k in range(CONV_K)))
+    Bm = (x1 @ p["wB"]).reshape(B, H, N)
+    Cm = (x1 @ p["wC"]).reshape(B, H, N)
+    v = xin.reshape(B, H, hd)
+    dt = (x1 @ p["w_dt"]) + p["dt_bias"]
+    log_a = bounded_log_decay(dt).reshape(B, H, 1)
+    y, state = gla_decode(Cm, Bm, v, log_a, state)
+    y = y + p["D"][None, :, None] * v
+    y = y.reshape(B, di) * jax.nn.silu(z)
+    return y @ p["out_proj"], xp[:, 1:], state

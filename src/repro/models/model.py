@@ -1,0 +1,286 @@
+"""Model facade: parameter trees, forwards, loss, and serve steps.
+
+Public API (everything the launcher / trainer / server needs):
+
+  model_defs(cfg)            Param-descriptor tree (single source of truth)
+  init_params(cfg, key)      real parameters (smoke tests / examples)
+  abstract_params(cfg, mesh) ShapeDtypeStructs + NamedShardings (dry-run)
+  param_pspecs(cfg, axes)    PartitionSpec tree
+  forward(...)               logits for a token/embedding batch
+  loss_fn(...)               causal-LM loss (+ MoE aux)
+  make_prefill / make_decode serve steps with cache pytrees
+  input_specs(cfg, shape, mesh)  ShapeDtypeStruct stand-ins per cell
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
+
+from . import transformer as tfm
+from .layers import (embed_defs, init_tree, logits as logits_fn,
+                     mask_padded_vocab, shape_tree, spec_tree)
+from .sharding import (MeshAxes, axes_for_mesh, constrain,
+                       safe_named_sharding, shape_safe_spec)
+
+# fraction of the sequence that is patch/frame stub input for vlm / encdec
+VLM_PATCH_TOKENS = 256
+ENCDEC_DECODER_FRACTION = 8  # decoder seq = seq_len // 8
+
+
+def model_defs(cfg) -> dict:
+    defs = {"embed": embed_defs(cfg)}
+    cross = cfg.encoder_layers > 0
+    defs["blocks"] = tfm.stack_defs(
+        tfm.superblock_defs(cfg, cross=cross), cfg.n_blocks
+    )
+    kinds, ffns = cfg.layer_kinds(), cfg.ffn_kinds()
+    for i in range(cfg.remainder_layers):
+        li = cfg.n_blocks * cfg.superblock + i
+        defs[f"rem{i}"] = tfm.block_defs(
+            cfg, kinds[li % cfg.superblock], ffns[li % cfg.superblock],
+            cross=cross,
+        )
+    if cfg.encoder_layers:
+        defs["encoder"] = tfm.stack_defs(
+            tfm.block_defs(cfg, "attn", "dense"), cfg.encoder_layers
+        )
+    if cfg.frontend == "patch_stub":
+        # frozen projection standing in for the ViT output head
+        from .layers import Param
+
+        defs["patch_proj"] = Param(
+            (cfg.d_model, cfg.d_model), ("fsdp", None)
+        )
+    return defs
+
+
+def init_params(cfg, key, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    return init_tree(model_defs(cfg), key, dtype)
+
+
+def param_pspecs(cfg, axes: MeshAxes):
+    return spec_tree(model_defs(cfg), axes)
+
+
+def abstract_params(cfg, mesh, dtype=None):
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    axes = axes_for_mesh(mesh)
+    shapes = shape_tree(model_defs(cfg), dtype)
+    specs = param_pspecs(cfg, axes)
+    return jax.tree.map(
+        lambda s, p: jax.ShapeDtypeStruct(
+            s.shape, s.dtype,
+            sharding=NamedSharding(mesh, shape_safe_spec(mesh, p, s.shape)),
+        ),
+        shapes,
+        specs,
+    )
+
+
+# --------------------------------------------------------------------------
+# forwards
+# --------------------------------------------------------------------------
+def embed_tokens(params, cfg, tokens, axes):
+    x = params["embed"]["tok"][tokens]
+    x = constrain(x, axes, ("fsdp", None, None))
+    return x.astype(jnp.dtype(cfg.dtype))
+
+
+def encoder_forward(params, cfg, frames, axes):
+    """Encoder stack over stub frame embeddings (B, S_enc, D)."""
+    def body(carry, pblk):
+        y, _ = tfm.apply_block(
+            pblk, cfg, "attn", "dense", carry, axes, "train", None, None,
+            causal=False,
+        )
+        return y, None
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    x, _ = jax.lax.scan(body, frames.astype(jnp.dtype(cfg.dtype)),
+                        params["encoder"])
+    return x
+
+
+def forward(params, cfg, batch, axes, mode="train", cache=None, pos=None):
+    """Token/embedding batch -> (logits, new_cache).
+
+    batch keys: 'tokens' (B,S); vlm adds 'patch_embeds' (B,P,D); encdec adds
+    'frames' (B,S_enc,D).  decode mode: tokens is (B,1), pos (B,)."""
+    enc_out = None
+    if cfg.encoder_layers and mode != "decode":
+        enc_out = encoder_forward(params, cfg, batch["frames"], axes)
+    x = embed_tokens(params, cfg, batch["tokens"], axes)
+    if cfg.frontend == "patch_stub" and mode != "decode":
+        patches = batch["patch_embeds"].astype(x.dtype) @ params["patch_proj"]
+        x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+    x, new_cache = tfm.run_stack(
+        params, cfg, x, axes, mode, cache=cache, pos=pos, enc_out=enc_out
+    )
+    if mode == "prefill":
+        x = x[:, -1:]  # only the last position feeds the first decode step
+    out = logits_fn(x, params["embed"], cfg)
+    return out, new_cache
+
+
+def hidden_forward(params, cfg, batch, axes, mode="train"):
+    """Forward up to final hidden states (no logits) — training path."""
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = encoder_forward(params, cfg, batch["frames"], axes)
+    x = embed_tokens(params, cfg, batch["tokens"], axes)
+    if cfg.frontend == "patch_stub":
+        patches = batch["patch_embeds"].astype(x.dtype) @ params["patch_proj"]
+        x = jnp.concatenate([patches.astype(x.dtype), x], axis=1)
+    x, _ = tfm.run_stack(params, cfg, x, axes, mode, enc_out=enc_out)
+    return x
+
+
+LOSS_CHUNK = 2048  # tokens per loss chunk (bounds the f32 logits buffer)
+
+
+def loss_fn(params, cfg, batch, axes):
+    """Next-token cross entropy, computed in sequence chunks so the float32
+    logits buffer never exceeds LOSS_CHUNK x vocab per batch row (a 262k
+    vocab at 32k tokens/device would otherwise dominate HBM)."""
+    x = hidden_forward(params, cfg, batch, axes)
+    labels = batch["labels"]
+    if cfg.frontend == "patch_stub":
+        x = x[:, -labels.shape[1]:]  # loss only over token positions
+    x = rms_norm_final(x, params, cfg)
+    w = (params["embed"]["tok"].T if cfg.tied_embeddings
+         else params["embed"]["out"])
+    B, S, D = x.shape
+    xs = x[:, :-1]
+    tgt = labels[:, 1:]
+    n_tok = S - 1
+    chunk = min(LOSS_CHUNK, n_tok)
+    while n_tok % chunk:
+        chunk -= 1
+    n_chunks = n_tok // chunk
+
+    def body(acc, ins):
+        xc, tc = ins  # (B, chunk, D), (B, chunk)
+        lg = (xc @ w).astype(jnp.float32)
+        lg = mask_padded_vocab(cfg, lg)
+        logz = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(lg, tc[..., None], axis=-1)[..., 0]
+        return acc + jnp.sum(logz - gold), None
+
+    xs_c = xs.reshape(B, n_chunks, chunk, D).swapaxes(0, 1)
+    tgt_c = tgt.reshape(B, n_chunks, chunk).swapaxes(0, 1)
+    total, _ = jax.lax.scan(
+        jax.checkpoint(body, prevent_cse=False),
+        jnp.zeros((), jnp.float32), (xs_c, tgt_c),
+    )
+    return total / (B * n_tok)
+
+
+def rms_norm_final(x, params, cfg):
+    from .layers import rms_norm
+
+    return rms_norm(x, params["embed"]["final_norm"], cfg.norm_eps)
+
+
+# --------------------------------------------------------------------------
+# serve steps
+# --------------------------------------------------------------------------
+def make_cache_struct(cfg, batch: int, cache_len: int, mesh=None,
+                      cross_len: int = 0, materialize: bool = False):
+    """Cache pytree as ShapeDtypeStructs (dry-run) or zeros (tests)."""
+    axes = axes_for_mesh(mesh) if mesh is not None else MeshAxes()
+    defs = tfm.cache_defs(cfg, batch, cache_len, cross_len)
+
+    def is_slot(x):
+        return (
+            isinstance(x, tuple) and len(x) == 2 and isinstance(x[0], tuple)
+        )
+
+    def walk(node, name=""):
+        if is_slot(node):
+            shape, logical = node
+            # recurrent matrix states accumulate: keep them float32
+            dtype = jnp.float32 if name == "state" else jnp.dtype(cfg.dtype)
+            if mesh is not None:
+                sh = safe_named_sharding(mesh, axes, logical, shape)
+                return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
+            if materialize:
+                return jnp.zeros(shape, dtype)
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return {k: walk(v, k) for k, v in node.items()}
+
+    return walk(defs)
+
+
+def prefill(params, cfg, batch, axes):
+    """Forward + cache construction.  Returns (last-token logits, cache)."""
+    lg, cache = forward(params, cfg, batch, axes, mode="prefill")
+    return lg[:, -1:], cache
+
+
+def decode_step(params, cfg, token, cache, pos, axes):
+    """One-token decode: token (B,1) int32, pos (B,) int32."""
+    lg, cache = forward(
+        params, cfg, {"tokens": token}, axes, mode="decode", cache=cache,
+        pos=pos,
+    )
+    return lg, cache
+
+
+# --------------------------------------------------------------------------
+# input specs per (arch x shape) cell — ShapeDtypeStruct stand-ins
+# --------------------------------------------------------------------------
+def input_specs(cfg, shape, mesh, *, for_train: bool | None = None):
+    """Dry-run inputs for a cell; weak-type-correct, shardable, no alloc."""
+    axes = axes_for_mesh(mesh)
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+
+    def tok(b, s):
+        return jax.ShapeDtypeStruct(
+            (b, s), i32,
+            sharding=safe_named_sharding(mesh, axes, ("fsdp", None), (b, s)),
+        )
+
+    def emb(b, s):
+        return jax.ShapeDtypeStruct(
+            (b, s, cfg.d_model), jnp.dtype(cfg.dtype),
+            sharding=safe_named_sharding(
+                mesh, axes, ("fsdp", None, None), (b, s, cfg.d_model)
+            ),
+        )
+
+    kind = shape.kind
+    if kind == "train":
+        if cfg.encoder_layers:
+            sd = S // ENCDEC_DECODER_FRACTION
+            return {"frames": emb(B, S), "tokens": tok(B, sd),
+                    "labels": tok(B, sd)}
+        if cfg.frontend == "patch_stub":
+            st = S - VLM_PATCH_TOKENS
+            return {"patch_embeds": emb(B, VLM_PATCH_TOKENS),
+                    "tokens": tok(B, st), "labels": tok(B, st)}
+        return {"tokens": tok(B, S), "labels": tok(B, S)}
+    if kind == "prefill":
+        if cfg.encoder_layers:
+            sd = S // ENCDEC_DECODER_FRACTION
+            return {"frames": emb(B, S), "tokens": tok(B, sd)}
+        if cfg.frontend == "patch_stub":
+            return {"patch_embeds": emb(B, VLM_PATCH_TOKENS),
+                    "tokens": tok(B, S - VLM_PATCH_TOKENS)}
+        return {"tokens": tok(B, S)}
+    # decode: one new token against a seq_len cache
+    cross = S // ENCDEC_DECODER_FRACTION if cfg.encoder_layers else 0
+    cache = make_cache_struct(cfg, B, S, mesh, cross_len=cross)
+    return {
+        "token": tok(B, 1),
+        "pos": jax.ShapeDtypeStruct(
+            (B,), i32,
+            sharding=safe_named_sharding(mesh, axes, ("fsdp",), (B,)),
+        ),
+        "cache": cache,
+    }

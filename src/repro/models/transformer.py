@@ -1,0 +1,275 @@
+"""Block assembly: superblock definitions, scan-over-layers, and caches.
+
+Every architecture is a stack of *superblocks* (``cfg.superblock`` layers)
+scanned with stacked parameters — HLO size stays flat in depth, which keeps
+the 94-layer MoE and the 62-layer gemma3 compilable in seconds.  Mixed
+architectures encode their pattern inside the superblock:
+
+  gemma3   superblock = [local x5, global]   (+2 remainder local layers)
+  jamba    superblock = [attn, mamba x7], FFN alternates dense/MoE
+  rwkv6    superblock = [rwkv]               (time-mix + channel-mix)
+  others   superblock = [global]
+
+Caches are pytrees stacked along the block dimension and threaded through
+the scan as xs/ys, so decode touches each layer's cache slice exactly once.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import attention as attn
+from . import mamba as mb
+from . import moe as moe_mod
+from . import rwkv as rk
+from .layers import Param, mlp_defs, rms_norm, swiglu
+from .sharding import constrain
+
+
+# --------------------------------------------------------------------------
+# parameter definitions
+# --------------------------------------------------------------------------
+def block_defs(cfg, kind: str, ffn_kind: str, cross: bool = False) -> dict:
+    d = cfg.d_model
+    out = {"norm1": Param((d,), (None,), init="ones")}
+    if kind in ("attn", "local", "global"):
+        out["mixer"] = attn.attn_defs(cfg)
+    elif kind == "mamba":
+        out["mixer"] = mb.mamba_defs(cfg)
+    elif kind == "rwkv":
+        out["mixer"] = rk.rwkv_tm_defs(cfg)
+    else:
+        raise ValueError(kind)
+    if cross:
+        out["norm_x"] = Param((d,), (None,), init="ones")
+        out["xattn"] = attn.attn_defs(cfg)
+    out["norm2"] = Param((d,), (None,), init="ones")
+    if ffn_kind == "dense":
+        out["ffn"] = mlp_defs(d, cfg.d_ff)
+    elif ffn_kind == "moe":
+        out["ffn"] = moe_mod.moe_defs(cfg)
+        if cfg.dense_residual:
+            out["ffn"]["dense"] = mlp_defs(d, cfg.d_ff)
+    elif ffn_kind == "rwkv_cm":
+        out["ffn"] = rk.rwkv_cm_defs(cfg)
+    else:
+        raise ValueError(ffn_kind)
+    return out
+
+
+def superblock_defs(cfg, cross: bool = False) -> dict:
+    kinds, ffns = cfg.layer_kinds(), cfg.ffn_kinds()
+    return {
+        f"l{i}": block_defs(cfg, kinds[i], ffns[i], cross=cross)
+        for i in range(cfg.superblock)
+    }
+
+
+def stack_defs(defs, n: int):
+    """Add the leading scan dimension to every Param descriptor."""
+    return jax.tree.map(
+        lambda p: Param((n,) + p.shape, (None,) + p.logical, p.init, p.scale),
+        defs,
+        is_leaf=lambda x: isinstance(x, Param),
+    )
+
+
+# --------------------------------------------------------------------------
+# cache definitions (ShapeDtypeStruct trees for serving)
+# --------------------------------------------------------------------------
+def block_cache_defs(cfg, kind: str, ffn_kind: str, batch: int,
+                     cache_len: int, cross_len: int = 0) -> dict:
+    """Logical cache spec per layer: dict name -> (shape, logical axes)."""
+    hd, hk = cfg.hd, cfg.n_kv_heads
+    d = cfg.d_model
+    out = {}
+    if kind in ("attn", "global"):
+        out["k"] = ((batch, cache_len, hk, hd), ("fsdp", "seq", None, None))
+        out["v"] = ((batch, cache_len, hk, hd), ("fsdp", "seq", None, None))
+    elif kind == "local":
+        w = min(cfg.local_window, cache_len)
+        out["k"] = ((batch, w, hk, hd), ("fsdp", None, None, None))
+        out["v"] = ((batch, w, hk, hd), ("fsdp", None, None, None))
+    elif kind == "mamba":
+        di = cfg.mamba_expand * d
+        H = di // cfg.mamba_head_dim
+        out["conv"] = ((batch, mb.CONV_K - 1, di), ("fsdp", None, "tp"))
+        out["state"] = (
+            (batch, H, cfg.mamba_d_state, cfg.mamba_head_dim),
+            ("fsdp", "tp", None, None),
+        )
+    elif kind == "rwkv":
+        H = d // cfg.rwkv_head_dim
+        out["state"] = (
+            (batch, H, cfg.rwkv_head_dim, cfg.rwkv_head_dim),
+            ("fsdp", "tp", None, None),
+        )
+        out["shift_tm"] = ((batch, d), ("fsdp", None))
+    if ffn_kind == "rwkv_cm":
+        out["shift_cm"] = ((batch, d), ("fsdp", None))
+    if cross_len:
+        out["xk"] = ((batch, cross_len, hk, hd), ("fsdp", None, None, None))
+        out["xv"] = ((batch, cross_len, hk, hd), ("fsdp", None, None, None))
+    return out
+
+
+def cache_defs(cfg, batch: int, cache_len: int, cross_len: int = 0) -> dict:
+    kinds, ffns = cfg.layer_kinds(), cfg.ffn_kinds()
+    sb = {
+        f"l{i}": block_cache_defs(cfg, kinds[i], ffns[i], batch, cache_len,
+                                  cross_len)
+        for i in range(cfg.superblock)
+    }
+    stacked = jax.tree.map(
+        lambda sl: ((cfg.n_blocks,) + sl[0], (None,) + sl[1]),
+        sb,
+        is_leaf=lambda x: isinstance(x, tuple) and len(x) == 2
+        and isinstance(x[0], tuple),
+    )
+    out = {"blocks": stacked}
+    for i in range(cfg.remainder_layers):
+        li = cfg.n_blocks * cfg.superblock + i
+        out[f"rem{i}"] = block_cache_defs(
+            cfg, kinds[li % cfg.superblock], ffns[li % cfg.superblock],
+            batch, cache_len, cross_len,
+        )
+    return out
+
+
+# --------------------------------------------------------------------------
+# block application
+# --------------------------------------------------------------------------
+def apply_block(p, cfg, kind, ffn_kind, x, axes, mode, cache, pos,
+                enc_out=None, causal=True):
+    """One layer.  mode: train | prefill | decode.  Returns (x, cache')."""
+    new_cache = {}
+    h = rms_norm(x, p["norm1"], cfg.norm_eps)
+    window = cfg.local_window if kind == "local" else 0
+
+    if kind in ("attn", "local", "global"):
+        if mode == "decode":
+            out, ck, cv = attn.decode_attention(
+                p["mixer"], cfg, h, cache["k"], cache["v"], pos, axes,
+                window=window,
+            )
+            new_cache.update(k=ck, v=cv)
+        else:
+            out, k, v = attn.attention(
+                p["mixer"], cfg, h, axes, causal=causal, window=window
+            )
+            if mode == "prefill":
+                if window:
+                    S = k.shape[1]
+                    w = min(window, S)
+                    slots = (jnp.arange(S - w, S)) % w
+                    ck = jnp.zeros(
+                        (k.shape[0], w) + k.shape[2:], k.dtype
+                    ).at[:, slots].set(k[:, -w:])
+                    cv = jnp.zeros_like(ck).at[:, slots].set(v[:, -w:])
+                else:
+                    ck, cv = k, v
+                new_cache.update(k=ck, v=cv)
+    elif kind == "mamba":
+        if mode == "decode":
+            out, conv, st = mb.mamba_mix_decode(
+                p["mixer"], cfg, h[:, 0], cache["conv"], cache["state"]
+            )
+            out = out[:, None]
+        else:
+            out, conv, st = mb.mamba_mix(p["mixer"], cfg, h, axes)
+        if mode != "train":
+            new_cache.update(conv=conv, state=st.astype(jnp.float32))
+    elif kind == "rwkv":
+        if mode == "decode":
+            out, prev, st = rk.time_mix_decode(
+                p["mixer"], cfg, h[:, 0], cache["shift_tm"], cache["state"]
+            )
+            out = out[:, None]
+        else:
+            out, prev, st = rk.time_mix(p["mixer"], cfg, h, axes)
+        if mode != "train":
+            new_cache.update(shift_tm=prev, state=st.astype(jnp.float32))
+    x = x + out
+
+    if enc_out is not None or ("xk" in (cache or {})):
+        hx = rms_norm(x, p["norm_x"], cfg.norm_eps)
+        if mode == "train" or (mode == "prefill" and enc_out is not None):
+            xk, xv = attn.encode_kv(p["xattn"], cfg, enc_out)
+            if mode == "prefill":
+                new_cache.update(xk=xk, xv=xv)
+        else:
+            xk, xv = cache["xk"], cache["xv"]
+            new_cache.update(xk=xk, xv=xv)
+        x = x + attn.cross_attention(p["xattn"], cfg, hx, xk, xv, axes)
+
+    h2 = rms_norm(x, p["norm2"], cfg.norm_eps)
+    if ffn_kind == "dense":
+        f = swiglu(h2, p["ffn"]["w1"], p["ffn"]["w3"], p["ffn"]["w2"])
+    elif ffn_kind == "moe":
+        f = moe_mod.moe_ffn(p["ffn"], cfg, h2, axes)
+    elif ffn_kind == "rwkv_cm":
+        if mode == "decode":
+            f, prev_cm = rk.channel_mix_decode(
+                p["ffn"], cfg, h2[:, 0], cache["shift_cm"]
+            )
+            f = f[:, None]
+        else:
+            f, prev_cm = rk.channel_mix(p["ffn"], cfg, h2)
+        if mode != "train":
+            new_cache.update(shift_cm=prev_cm)
+    x = x + f
+    x = constrain(x, axes, ("fsdp", None, None))
+    return x, (new_cache if new_cache else cache)
+
+
+def apply_superblock(p, cfg, x, axes, mode, cache, pos, enc_out=None):
+    kinds, ffns = cfg.layer_kinds(), cfg.ffn_kinds()
+    new_cache = {}
+    for i in range(cfg.superblock):
+        key = f"l{i}"
+        x, c = apply_block(
+            p[key], cfg, kinds[i], ffns[i], x, axes, mode,
+            (cache or {}).get(key), pos, enc_out=enc_out,
+        )
+        new_cache[key] = c
+    return x, new_cache
+
+
+def run_stack(params, cfg, x, axes, mode, cache=None, pos=None,
+              enc_out=None):
+    """Scanned superblocks + remainder layers.
+
+    ``params['blocks']`` is stacked (n_blocks, ...); ``cache['blocks']``
+    likewise.  Returns (x, new_cache)."""
+    kinds, ffns = cfg.layer_kinds(), cfg.ffn_kinds()
+
+    def body(carry, xs):
+        pblk, cblk = xs
+        y, c = apply_superblock(
+            pblk, cfg, carry, axes, mode, cblk, pos, enc_out=enc_out
+        )
+        return y, c
+
+    body = jax.checkpoint(body, prevent_cse=False)
+    if cache is None:
+        x, new_blocks = jax.lax.scan(
+            lambda c, pb: body(c, (pb, None)), x, params["blocks"]
+        )
+    else:
+        x, new_blocks = jax.lax.scan(
+            body, x, (params["blocks"], cache["blocks"])
+        )
+    new_cache = None if mode == "train" else {"blocks": new_blocks}
+    for i in range(cfg.remainder_layers):
+        li = cfg.n_blocks * cfg.superblock + i
+        k = kinds[li % cfg.superblock]
+        f = ffns[li % cfg.superblock]
+        x, c = apply_block(
+            params[f"rem{i}"], cfg, k, f, x, axes, mode,
+            (cache or {}).get(f"rem{i}"), pos, enc_out=enc_out,
+        )
+        if new_cache is not None:
+            new_cache[f"rem{i}"] = c
+    return x, new_cache

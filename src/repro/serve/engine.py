@@ -1,0 +1,122 @@
+"""Serving engine: batched prefill/decode plus FMBI-backed kNN retrieval.
+
+``LMServer`` is the generation path: continuous batched decode over a shared
+cache pytree (prefill once, then step).  ``RetrievalServer`` serves batched
+kNN/window queries over an FMBI ``JaxIndex``; in ``adaptive=True`` mode it
+applies AMBI's residency policy — only leaves that the live query stream
+touches are kept "hot" (the TPU analogue of the paper's buffer retention),
+with hit statistics exposed for the workload-adaptation benchmark.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import jax_index
+from ..kernels import ops as kops
+from ..models import model as M
+from ..models.sharding import MeshAxes
+
+
+class LMServer:
+    def __init__(self, cfg, params, axes: MeshAxes | None = None):
+        self.cfg = cfg
+        self.params = params
+        self.axes = axes or MeshAxes()
+        self._prefill = jax.jit(
+            lambda p, b: M.prefill(p, cfg, b, self.axes)
+        )
+        self._decode = jax.jit(
+            lambda p, t, c, pos: M.decode_step(p, cfg, t, c, pos, self.axes)
+        )
+
+    def generate(self, tokens: np.ndarray, max_new: int,
+                 cache_len: int | None = None) -> np.ndarray:
+        """Greedy generation for a (B, S) prompt batch."""
+        B, S = tokens.shape
+        cache_len = cache_len or (S + max_new)
+        lg, cache = self._prefill(self.params, {"tokens": jnp.asarray(tokens)})
+        cache = jax.tree.map(
+            lambda x: (
+                jnp.concatenate(
+                    [x, jnp.zeros(
+                        x.shape[:2] + (cache_len - S,) + x.shape[3:], x.dtype
+                    )], axis=2,
+                )
+                if x.ndim >= 3 and x.shape[2] == S
+                else x
+            ),
+            cache,
+        )
+        out = [jnp.argmax(lg[:, -1], axis=-1)]
+        for t in range(max_new - 1):
+            pos = jnp.full((B,), S + t, jnp.int32)
+            lg, cache = self._decode(
+                self.params, out[-1][:, None].astype(jnp.int32), cache, pos
+            )
+            out.append(jnp.argmax(lg[:, 0], axis=-1))
+        return np.stack([np.asarray(o) for o in out], axis=1)
+
+
+@dataclasses.dataclass
+class RetrievalStats:
+    queries: int = 0
+    hot_hits: int = 0
+    cold_misses: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hot_hits + self.cold_misses
+        return self.hot_hits / total if total else 0.0
+
+
+class RetrievalServer:
+    """Batched exact kNN over an FMBI JaxIndex (Pallas distance kernel)."""
+
+    def __init__(self, points: np.ndarray, levels: int, *,
+                 adaptive: bool = False, hot_capacity: int = 64):
+        padded, ids = jax_index.pad_points(points.astype(np.float32), levels)
+        self.index = jax_index.build(
+            jnp.asarray(padded), levels, jnp.asarray(ids, jnp.int32)
+        )
+        self.levels = levels
+        self.adaptive = adaptive
+        self.hot: dict[int, int] = {}  # leaf -> last-touch tick (AMBI policy)
+        self.hot_capacity = hot_capacity
+        self.tick = 0
+        self.stats = RetrievalStats()
+
+    def knn(self, queries: np.ndarray, k: int, n_candidate_leaves: int = 8):
+        rows, d2, exact = jax_index.knn(
+            self.index, jnp.asarray(queries, jnp.float32), k,
+            n_candidate_leaves=n_candidate_leaves,
+        )
+        if self.adaptive:
+            leaves = np.asarray(
+                jax_index.route(self.index, jnp.asarray(queries, jnp.float32))
+            )
+            for leaf in leaves:
+                self.tick += 1
+                if int(leaf) in self.hot:
+                    self.stats.hot_hits += 1
+                else:
+                    self.stats.cold_misses += 1
+                self.hot[int(leaf)] = self.tick
+                if len(self.hot) > self.hot_capacity:
+                    coldest = min(self.hot, key=self.hot.get)
+                    del self.hot[coldest]
+            self.stats.queries += len(queries)
+        return np.asarray(rows), np.asarray(d2), np.asarray(exact)
+
+    def knn_kernel(self, queries: np.ndarray, k: int):
+        """Direct Pallas-kernel path (distance tiles + top-k)."""
+        idx, d2 = kops.knn_topk(
+            jnp.asarray(queries, jnp.float32),
+            self.index.points_sorted,
+            k,
+            valid=(self.index.row_ids >= 0).astype(jnp.int32),
+        )
+        return np.asarray(idx), np.asarray(d2)

@@ -1,0 +1,146 @@
+"""Optimizers in pure JAX: AdamW and Adafactor (factored second moments).
+
+Adafactor is the memory-sane choice for the >40B architectures (arctic,
+qwen3-moe, jamba): second moments factor into row/col running means over the
+last two axes, so optimizer state is O(sum of dims) instead of O(params).
+Both optimizers expose the same (init, update) pair and a ``state_specs``
+helper that derives PartitionSpecs for their state from the parameter specs
+(FSDP-sharded exactly like the parameters they track).
+
+Optimizer state is a *list of per-leaf dicts* in the parameters' canonical
+flatten order — structure-agnostic, checkpoint-friendly, and immune to
+tree-prefix pitfalls.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable            # params -> state
+    update: Callable          # (grads, state, params, step) -> (params, state)
+    state_specs: Callable     # param_specs tree -> state specs (list)
+
+
+def _split(pairs, treedef):
+    newp = treedef.unflatten([a for a, _ in pairs])
+    news = [b for _, b in pairs]
+    return newp, news
+
+
+def adamw(lr: float = 1e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, wd: float = 0.01) -> Optimizer:
+    def init(params):
+        leaves = jax.tree.leaves(params)
+        return [
+            {"m": jnp.zeros(p.shape, jnp.float32),
+             "v": jnp.zeros(p.shape, jnp.float32)}
+            for p in leaves
+        ]
+
+    def update(grads, state, params, step):
+        g_leaves, treedef = jax.tree.flatten(grads)
+        p_leaves = jax.tree.leaves(params)
+        t = step.astype(jnp.float32) + 1.0
+        c1 = 1.0 - b1 ** t
+        c2 = 1.0 - b2 ** t
+
+        def upd_one(g, s, p):
+            g = g.astype(jnp.float32)
+            m = b1 * s["m"] + (1 - b1) * g
+            v = b2 * s["v"] + (1 - b2) * g * g
+            stp = lr * (m / c1) / (jnp.sqrt(v / c2) + eps)
+            newp = p.astype(jnp.float32) - stp - lr * wd * p.astype(
+                jnp.float32
+            )
+            return newp.astype(p.dtype), {"m": m, "v": v}
+
+        pairs = [
+            upd_one(g, s, p)
+            for g, s, p in zip(g_leaves, state, p_leaves)
+        ]
+        return _split(pairs, treedef)
+
+    def state_specs(pspecs):
+        return [{"m": s, "v": s} for s in jax.tree.leaves(
+            pspecs, is_leaf=lambda x: isinstance(x, P))]
+
+    return Optimizer(init, update, state_specs)
+
+
+def adafactor(lr: float = 1e-4, decay: float = 0.99,
+              eps: float = 1e-30, clip: float = 1.0) -> Optimizer:
+    def factored(p) -> bool:
+        return p.ndim >= 2 and p.shape[-1] > 1 and p.shape[-2] > 1
+
+    def init(params):
+        out = []
+        for p in jax.tree.leaves(params):
+            if factored(p):
+                out.append({
+                    "row": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "col": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                     jnp.float32),
+                })
+            else:
+                out.append({"v": jnp.zeros(p.shape, jnp.float32)})
+        return out
+
+    def _upd_one(g, s, p):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if factored(p):
+            row = decay * s["row"] + (1 - decay) * g2.mean(-1)
+            col = decay * s["col"] + (1 - decay) * g2.mean(-2)
+            rfac = row / jnp.clip(row.mean(-1, keepdims=True), min=eps)
+            v = rfac[..., None] * col[..., None, :]
+            new_s = {"row": row, "col": col}
+        else:
+            v = decay * s["v"] + (1 - decay) * g2
+            new_s = {"v": v}
+        u = g * jax.lax.rsqrt(v + eps)
+        rms = jnp.sqrt(jnp.mean(u * u) + eps)
+        u = u / jnp.maximum(1.0, rms / clip)  # update clipping
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype), new_s
+
+    def update(grads, state, params, step):
+        g_leaves, treedef = jax.tree.flatten(grads)
+        p_leaves = jax.tree.leaves(params)
+        pairs = [
+            _upd_one(g, s, p)
+            for g, s, p in zip(g_leaves, state, p_leaves)
+        ]
+        return _split(pairs, treedef)
+
+    def state_specs(pspecs):
+        out = []
+        for s in jax.tree.leaves(pspecs, is_leaf=lambda x: isinstance(x, P)):
+            st = tuple(s)
+            if len(st) >= 2:
+                out.append({"row": P(*st[:-1]),
+                            "col": P(*(st[:-2] + st[-1:]))})
+            else:
+                out.append({"v": P(*st)})
+        return out
+
+    return Optimizer(init, update, state_specs)
+
+
+def get_optimizer(name: str, lr: float = 1e-4) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr=lr)
+    if name == "adafactor":
+        return adafactor(lr=lr)
+    raise ValueError(name)
+
+
+def pick_for(cfg) -> str:
+    """Adafactor above ~40B total params (HBM headroom), AdamW otherwise."""
+    total, _ = cfg.params_count()
+    return "adafactor" if total > 40e9 else "adamw"

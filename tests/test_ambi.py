@@ -1,0 +1,82 @@
+import numpy as np
+import pytest
+
+from repro.core import AMBI, PageStore, bulk_load, knn_oracle, window_oracle
+from repro.core.datasets import osm_like
+
+
+@pytest.fixture()
+def data():
+    return osm_like(220_000, seed=11)
+
+
+def test_first_query_builds_and_answers(data):
+    a = AMBI(data, 300)
+    lo, hi = np.array([0.6, 0.6]), np.array([0.66, 0.66])
+    res, io = a.window(lo, hi)
+    ref = window_oracle(data, lo, hi)
+    assert sorted(res.tolist()) == sorted(ref.tolist())
+    assert io.reads > 0 and io.writes > 0  # the build happened
+    assert not a.is_fully_refined()        # ... but only partially
+
+
+def test_focused_workload_stays_partial_and_correct(data):
+    a = AMBI(data, 300)
+    rng = np.random.default_rng(0)
+    for _ in range(30):
+        c = rng.random(2) * 0.08 + np.array([0.55, 0.55])
+        res, _ = a.window(c - 0.02, c + 0.02)
+        ref = window_oracle(data, c - 0.02, c + 0.02)
+        assert sorted(res.tolist()) == sorted(ref.tolist())
+    assert not a.is_fully_refined()
+
+
+def test_knn_correct(data):
+    a = AMBI(data, 300)
+    rng = np.random.default_rng(1)
+    for k in (4, 32):
+        q = rng.random(2)
+        res, _ = a.knn(q, k)
+        ref = knn_oracle(data, q, k)
+        assert np.allclose(
+            np.sort(np.sum((data[res] - q) ** 2, axis=1)),
+            np.sort(np.sum((data[ref] - q) ** 2, axis=1)),
+        )
+
+
+def test_covering_queries_converge_to_full_index(data):
+    a = AMBI(data, 300)
+    for x in np.linspace(0.05, 0.95, 8):
+        for y in np.linspace(0.05, 0.95, 8):
+            a.window(np.array([x - 0.08, y - 0.08]),
+                     np.array([x + 0.08, y + 0.08]))
+    assert a.is_fully_refined()
+    # converged index answers exactly
+    rng = np.random.default_rng(2)
+    for _ in range(10):
+        c = rng.random(2)
+        res, _ = a.window(c - 0.03, c + 0.03)
+        ref = window_oracle(data, c - 0.03, c + 0.03)
+        assert sorted(res.tolist()) == sorted(ref.tolist())
+
+
+def test_adaptive_cheaper_than_full_build_for_few_queries(data):
+    """Paper Fig 8: combined build+query cost of AMBI beats FMBI's build
+    cost alone when the workload is small and focused."""
+    a = AMBI(data, 300)
+    cum = 0
+    rng = np.random.default_rng(3)
+    for _ in range(20):
+        c = rng.random(2) * 0.05 + 0.6
+        _, io = a.window(c - 0.02, c + 0.02)
+        cum += io.total
+    store = PageStore(300)
+    bulk_load(data, 300, store)
+    assert cum < store.stats.total
+
+
+def test_all_points_recoverable_after_partial_refinement(data):
+    a = AMBI(data, 300)
+    a.window(np.array([0.1, 0.1]), np.array([0.2, 0.2]))
+    res, _ = a.window(np.array([-1.0, -1.0]), np.array([2.0, 2.0]))
+    assert len(res) == len(data)

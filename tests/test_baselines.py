@@ -1,0 +1,72 @@
+import numpy as np
+import pytest
+
+from repro.core import ALL_LOADERS, PageStore, leaf_stats, window_oracle, window_query
+from repro.core.datasets import osm_like
+
+N = 250_000  # 734 pages >> M: the buffer must spill
+M = 250
+
+
+@pytest.fixture(scope="module")
+def data():
+    return osm_like(N, seed=21)
+
+
+@pytest.fixture(scope="module")
+def all_built(data):
+    out = {}
+    for name, loader in ALL_LOADERS.items():
+        store = PageStore(M)
+        out[name] = (loader(data, M, store), store)
+    return out
+
+
+@pytest.mark.parametrize("name", sorted(ALL_LOADERS))
+def test_loader_indexes_every_point(all_built, data, name):
+    idx, _ = all_built[name]
+    rows = np.concatenate(
+        [l.point_idx for l in idx.root.iter_leaves()]
+    )
+    assert len(np.unique(rows)) == len(data)
+
+
+@pytest.mark.parametrize("name", sorted(ALL_LOADERS))
+def test_loader_queries_match_oracle(all_built, data, name):
+    idx, _ = all_built[name]
+    rng = np.random.default_rng(5)
+    for _ in range(8):
+        c = rng.random(2)
+        w = rng.uniform(0.01, 0.06)
+        res, _ = window_query(idx, c - w, c + w)
+        ref = window_oracle(data, c - w, c + w)
+        assert sorted(res.tolist()) == sorted(ref.tolist()), name
+
+
+def test_packed_loaders_are_full(all_built):
+    for name in ("hilbert", "str", "omt", "waffle"):
+        ls = leaf_stats(all_built[name][0])
+        assert ls.avg_fill > 0.98, name
+
+
+def test_kdb_leaves_not_packed(all_built):
+    packed = leaf_stats(all_built["str"][0]).count
+    kdb = leaf_stats(all_built["kdb"][0]).count
+    assert kdb > packed  # paper Table 1: KDB has the highest leaf count
+
+
+def test_paper_construction_cost_ordering(all_built):
+    """Fig 7 top-left qualitative ordering: FMBI < Hilbert < STR < top-down
+    methods (OMT / KDB / Waffle)."""
+    cost = {n: s.stats.total for n, (_, s) in all_built.items()}
+    assert cost["fmbi"] < cost["hilbert"] < cost["str"]
+    for heavy in ("omt", "kdb", "waffle"):
+        assert cost["str"] < cost[heavy]
+
+
+def test_fmbi_area_is_competitive(all_built):
+    """Paper Table 1 / Fig 4: FMBI total leaf area at or below the packed
+    R-tree variants; Hilbert worst (overlap)."""
+    area = {n: leaf_stats(i).total_area for n, (i, _) in all_built.items()}
+    assert area["fmbi"] <= min(area["str"], area["omt"]) * 1.1
+    assert area["hilbert"] > area["fmbi"]

@@ -1,0 +1,137 @@
+import numpy as np
+import pytest
+
+from repro.core import (
+    PageStore,
+    bulk_load,
+    knn_oracle,
+    knn_query,
+    leaf_stats,
+    window_oracle,
+    window_query,
+)
+from repro.core.datasets import gaussian, osm_like, uniform
+
+
+@pytest.fixture(scope="module")
+def built():
+    pts = osm_like(250_000, seed=3)  # 734 pages >> 250-page buffer
+    store = PageStore(250)
+    idx = bulk_load(pts, 250, store)
+    return pts, idx, store
+
+
+def _all_leaf_rows(idx):
+    rows = []
+    for leaf in idx.root.iter_leaves():
+        rows.append(leaf.point_idx)
+    return np.concatenate(rows)
+
+
+def test_every_point_indexed_exactly_once(built):
+    pts, idx, _ = built
+    rows = _all_leaf_rows(idx)
+    assert len(rows) == len(pts)
+    assert len(np.unique(rows)) == len(pts)
+
+
+def test_leaf_mbbs_contain_points(built):
+    pts, idx, _ = built
+    for leaf in idx.root.iter_leaves():
+        sub = pts[leaf.point_idx]
+        assert np.all(sub >= leaf.mbb[0] - 1e-12)
+        assert np.all(sub <= leaf.mbb[1] + 1e-12)
+        assert len(leaf.point_idx) <= idx.leaf_cap
+
+
+def test_branch_fanout_within_capacity(built):
+    _, idx, _ = built
+    stack = [idx.root]
+    while stack:
+        n = stack.pop()
+        if not n.is_leaf:
+            assert 1 <= len(n.children) <= idx.branch_cap
+            stack.extend(n.children)
+
+
+def test_zero_sibling_leaf_overlap_2d():
+    """FMBI's median splits produce zero overlap between leaves."""
+    pts = uniform(20_000, 2, seed=1)
+    idx = bulk_load(pts, 250)
+    from repro.core.metrics import overlap_area_2d
+
+    assert overlap_area_2d(idx) < 1e-9
+
+
+def test_construction_io_beats_sort_based(built):
+    pts, _, store = built
+    from repro.core.baselines import bulk_load_str
+
+    st2 = PageStore(250)
+    bulk_load_str(pts, 250, st2)
+    assert store.stats.total < st2.stats.total
+
+
+def test_window_queries_match_oracle(built):
+    pts, idx, _ = built
+    rng = np.random.default_rng(0)
+    for _ in range(25):
+        c = rng.random(2)
+        w = rng.uniform(0.005, 0.08)
+        res, io = window_query(idx, c - w, c + w)
+        ref = window_oracle(pts, c - w, c + w)
+        assert sorted(res.tolist()) == sorted(ref.tolist())
+        assert io.total >= 0
+
+
+def test_knn_queries_match_oracle(built):
+    pts, idx, _ = built
+    rng = np.random.default_rng(1)
+    for k in (1, 16, 64):
+        q = rng.random(2)
+        res, _ = knn_query(idx, q, k)
+        ref = knn_oracle(pts, q, k)
+        d_res = np.sort(np.sum((pts[res] - q) ** 2, axis=1))
+        d_ref = np.sort(np.sum((pts[ref] - q) ** 2, axis=1))
+        assert np.allclose(d_res, d_ref)
+
+
+def test_dense_subspace_recursion_tiny_buffer():
+    """A tiny buffer forces Step-5 dense recursion; index stays exact."""
+    pts = gaussian(120_000, 2, seed=5)
+    idx = bulk_load(pts, 230)  # barely above C_B=204
+    rows = _all_leaf_rows(idx)
+    assert len(np.unique(rows)) == len(pts)
+    rng = np.random.default_rng(2)
+    for _ in range(5):
+        c = rng.random(2)
+        res, _ = window_query(idx, c - 0.03, c + 0.03)
+        ref = window_oracle(pts, c - 0.03, c + 0.03)
+        assert sorted(res.tolist()) == sorted(ref.tolist())
+
+
+def test_balance_close_to_paper(built):
+    """Paper Fig 4a: subspace max/mean cardinality ~= 1.06 at scale; allow
+    slack at our reduced N."""
+    _, idx, _ = built
+    ls = leaf_stats(idx)
+    assert ls.max_over_mean < 1.6
+    assert ls.min_over_mean > 0.4
+
+
+def test_higher_dims():
+    from repro.core.datasets import nycyt_like
+
+    for d in (3, 4, 5):
+        pts = nycyt_like(30_000, d=d, seed=7)
+        idx = bulk_load(pts, 300)
+        rows = _all_leaf_rows(idx)
+        assert len(np.unique(rows)) == len(pts)
+        rng = np.random.default_rng(3)
+        q = rng.random(d)
+        res, _ = knn_query(idx, q, 8)
+        ref = knn_oracle(pts, q, 8)
+        assert np.allclose(
+            np.sort(np.sum((pts[res] - q) ** 2, axis=1)),
+            np.sort(np.sum((pts[ref] - q) ** 2, axis=1)),
+        )

@@ -1,0 +1,83 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret mode)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import jax_index
+from repro.kernels import ops
+
+
+def _index(n, d, levels, seed):
+    rng = np.random.default_rng(seed)
+    pts = rng.random((n, d)).astype(np.float32)
+    padded, ids = jax_index.pad_points(pts, levels)
+    return pts, jax_index.build(
+        jnp.asarray(padded), levels, jnp.asarray(ids, jnp.int32)
+    )
+
+
+@pytest.mark.parametrize("d", [2, 3, 5])
+@pytest.mark.parametrize("levels", [3, 6])
+@pytest.mark.parametrize("tile", [64, 256])
+def test_partition_assign_matches_ref(d, levels, tile):
+    pts, idx = _index(1 << (levels + 3), d, levels, seed=d * 10 + levels)
+    rng = np.random.default_rng(99)
+    q = rng.random((777, d)).astype(np.float32)  # ragged: exercises padding
+    got = ops.partition_assign(
+        q, idx.split_dim, idx.split_val, levels=levels, tile=tile
+    )
+    want = ops.partition_assign_ref(
+        jnp.asarray(q), idx.split_dim, idx.split_val, levels=levels
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("d", [2, 4, 8])
+@pytest.mark.parametrize("qt,pt", [(64, 128), (128, 512)])
+def test_pairwise_dist2_matches_ref(d, qt, pt):
+    rng = np.random.default_rng(d)
+    q = rng.normal(0, 1, (200, d)).astype(np.float32)
+    p = rng.normal(0, 1, (900, d)).astype(np.float32)
+    valid = (rng.random(900) > 0.1).astype(np.int32)
+    got = ops.pairwise_dist2(q, p, valid, qt=qt, pt=pt)
+    want = ops.pairwise_dist2_ref(
+        jnp.asarray(q), jnp.asarray(p), jnp.asarray(valid)
+    )
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-5
+    )
+
+
+@pytest.mark.parametrize("k", [1, 8, 33])
+def test_knn_topk_matches_ref(k):
+    rng = np.random.default_rng(k)
+    q = rng.normal(0, 1, (64, 3)).astype(np.float32)
+    p = rng.normal(0, 1, (512, 3)).astype(np.float32)
+    valid = np.ones(512, np.int32)
+    valid[500:] = 0
+    gi, gd = ops.knn_topk(q, p, k, valid=valid, qt=64, pt=128)
+    ri, rd = ops.knn_topk_ref(
+        jnp.asarray(q), jnp.asarray(p), jnp.asarray(valid), k
+    )
+    np.testing.assert_allclose(
+        np.sort(np.asarray(gd)), np.sort(np.asarray(rd)), rtol=1e-4,
+        atol=1e-6,
+    )
+    # masked points never appear
+    assert np.all(np.asarray(gi) < 500)
+
+
+def test_kernel_route_agrees_with_index_route():
+    pts, idx = _index(2048, 3, 5, seed=4)
+    q = np.random.default_rng(1).random((512, 3)).astype(np.float32)
+    a = ops.partition_assign(q, idx.split_dim, idx.split_val, levels=5)
+    b = jax_index.route(idx, jnp.asarray(q))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_dist2_dtype_f32_output_for_bf16_inputs():
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(0, 1, (64, 4)), jnp.bfloat16)
+    p = jnp.asarray(rng.normal(0, 1, (128, 4)), jnp.bfloat16)
+    out = ops.pairwise_dist2(q, p, qt=64, pt=128)
+    assert out.dtype == jnp.float32

@@ -1,0 +1,63 @@
+import numpy as np
+import pytest
+
+from repro.core.pagestore import (
+    IOStats,
+    LRUBuffer,
+    PageStore,
+    branch_capacity,
+    leaf_capacity,
+)
+
+
+def test_paper_capacities_2d():
+    # the paper's exact arithmetic for 4 KiB pages, d=2
+    assert leaf_capacity(2) == 341
+    assert branch_capacity(2) == 204
+
+
+def test_capacities_monotone_in_d():
+    for d in range(2, 8):
+        assert leaf_capacity(d) > branch_capacity(d)
+        assert leaf_capacity(d + 1) < leaf_capacity(d)
+
+
+def test_lru_buffer_hits_and_eviction():
+    buf = LRUBuffer(2)
+    assert not buf.touch(1)
+    assert not buf.touch(2)
+    assert buf.touch(1)          # hit
+    assert not buf.touch(3)      # evicts 2 (LRU)
+    assert not buf.touch(2)      # miss again
+    assert 1 not in buf          # 1 was evicted when 2 came back
+
+
+def test_store_counts_reads_writes():
+    st = PageStore(buffer_pages=2)
+    st.read(10)
+    st.read(10)  # buffered: free
+    st.write(11)
+    assert st.stats.reads == 1
+    assert st.stats.writes == 1
+    st.read(11)  # freshly written page is resident
+    assert st.stats.reads == 1
+
+
+def test_external_sort_cost_regimes():
+    st = PageStore(buffer_pages=100)
+    small = st.external_sort_cost(50, 100)     # fits in buffer
+    assert small.writes == 0 and small.reads == 50
+    big = st.external_sort_cost(10_000, 100)
+    # run formation + >=1 merge pass
+    assert big.reads >= 2 * 10_000 and big.writes >= 2 * 10_000
+    bigger = st.external_sort_cost(1_000_000, 100)
+    assert bigger.total > big.total
+
+
+def test_iostats_algebra():
+    a, b = IOStats(1, 2), IOStats(3, 4)
+    c = a + b
+    assert (c.reads, c.writes, c.total) == (4, 6, 10)
+    snap = c.snapshot()
+    c.reads += 5
+    assert c.delta(snap).reads == 5

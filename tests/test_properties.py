@@ -1,0 +1,108 @@
+"""Property-based tests (hypothesis) on the system's invariants."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import PageStore, bulk_load, window_oracle, window_query
+from repro.core.hilbert import hilbert_rank
+from repro.core.splittree import build_group_median_tree
+
+
+@st.composite
+def point_sets(draw, max_n=4000, d_max=4):
+    n = draw(st.integers(min_value=400, max_value=max_n))
+    d = draw(st.integers(min_value=2, max_value=d_max))
+    seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(seed)
+    kind = draw(st.sampled_from(["uniform", "gauss", "skew", "dup"]))
+    if kind == "uniform":
+        pts = rng.random((n, d))
+    elif kind == "gauss":
+        pts = rng.normal(0.5, 0.2, (n, d))
+    elif kind == "skew":
+        pts = rng.random((n, d)) ** 3
+    else:  # heavy coordinate duplication (degenerate medians)
+        pts = rng.integers(0, 12, (n, d)).astype(np.float64) / 12.0
+    return pts.astype(np.float64)
+
+
+@given(point_sets())
+@settings(max_examples=12, deadline=None)
+def test_fmbi_partition_is_exact(pts):
+    """Every point lands in exactly one leaf; MBBs contain their points."""
+    idx = bulk_load(pts, 250)
+    rows = np.concatenate([l.point_idx for l in idx.root.iter_leaves()])
+    assert len(rows) == len(pts)
+    assert len(np.unique(rows)) == len(pts)
+    for leaf in idx.root.iter_leaves():
+        sub = pts[leaf.point_idx]
+        assert np.all(sub >= leaf.mbb[0] - 1e-12)
+        assert np.all(sub <= leaf.mbb[1] + 1e-12)
+
+
+@given(point_sets(max_n=2500), st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_window_query_equals_oracle(pts, qseed):
+    idx = bulk_load(pts, 250)
+    rng = np.random.default_rng(qseed)
+    d = pts.shape[1]
+    c = rng.random(d)
+    w = rng.uniform(0.01, 0.3)
+    res, _ = window_query(idx, c - w, c + w)
+    ref = window_oracle(pts, c - w, c + w)
+    assert sorted(res.tolist()) == sorted(ref.tolist())
+
+
+@given(point_sets(max_n=2000))
+@settings(max_examples=8, deadline=None)
+def test_group_median_tree_routes_to_balanced_groups(pts):
+    from repro.core.pagestore import leaf_capacity
+
+    d = pts.shape[1]
+    c_l = leaf_capacity(d)
+    groups = 4
+    trim = (len(pts) // (groups * c_l)) * groups * c_l
+    if trim < groups * c_l:
+        return  # not enough points for one page per group
+    gp = trim // (groups * c_l)
+    tree, _, assign = build_group_median_tree(pts[:trim], groups, gp, c_l)
+    counts = np.bincount(assign, minlength=groups)
+    # exact equality by construction (split at page-group boundaries)
+    assert np.all(counts == trim // groups)
+    # routing agreement: the tree sends sample points to their groups.
+    # Points tied with a split value all route left while the rank split
+    # may have assigned some right — with heavily-duplicated coordinates
+    # (the 'dup' strategy) whole runs of ties sit on the boundary, so the
+    # bound is loose; index correctness is unaffected (Step 2 adjusts MBBs).
+    routed = tree.route(pts[:trim])
+    agree = (routed == assign).mean()
+    assert agree > 0.75
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(2, 5))
+@settings(max_examples=10, deadline=None)
+def test_hilbert_rank_locality(seed, d):
+    """Neighbors on the curve are near in space (weak locality property):
+    consecutive ranked points are closer on average than random pairs."""
+    rng = np.random.default_rng(seed)
+    pts = rng.random((800, d))
+    order = np.argsort(hilbert_rank(pts))
+    sorted_pts = pts[order]
+    consec = np.linalg.norm(np.diff(sorted_pts, axis=0), axis=1).mean()
+    # random pairs: two INDEPENDENT permutations (using one permutation
+    # against its shift just re-pairs consecutive rows)
+    p1, p2 = rng.permutation(800), rng.permutation(800)
+    rand = np.linalg.norm(sorted_pts[p1] - sorted_pts[p2], axis=1).mean()
+    assert consec < rand * 0.8
+
+
+@given(point_sets(max_n=1500))
+@settings(max_examples=8, deadline=None)
+def test_io_accounting_nonnegative_and_bounded(pts):
+    store = PageStore(250)
+    bulk_load(pts, 250, store)
+    from repro.core.pagestore import leaf_capacity
+
+    p = -(-len(pts) // leaf_capacity(pts.shape[1]))
+    assert store.stats.reads >= p  # at least one full scan
+    # scan-based: far below even ONE external sort pass of log(P) rounds
+    assert store.stats.total < 12 * p + 3000
