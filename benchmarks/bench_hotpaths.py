@@ -1,0 +1,200 @@
+"""Hot-path wall-clock benchmark: the scan engine's regression baseline.
+
+Times the four paths the vectorized scan engine owns —
+
+  * Step-2 routing + distribution (MST route, prefix-sum buffer replay,
+    subspace gather),
+  * Step-3 refinement (presorted minor-SplitTree recursion),
+  * batched window queries,
+  * batched k-NN queries,
+
+plus the end-to-end ``bulk_load`` and the JAX candidate-leaf
+``window_count``, and writes the numbers to ``BENCH_CORE.json`` at the repo
+root.  Future perf PRs diff against that file.
+
+  PYTHONPATH=src python -m benchmarks.bench_hotpaths            # full, writes BENCH_CORE.json
+  PYTHONPATH=src python -m benchmarks.bench_hotpaths --smoke    # quick gate, no write
+
+``--smoke`` runs a reduced dataset and fails (exit 1) if any hot path
+regresses past a generous ceiling — a coarse tripwire for interpreter-loop
+reintroductions, not a precision benchmark.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+
+import numpy as np
+
+from repro.core import PageStore, bulk_load, knn_query_batch, window_query_batch
+from repro.core.datasets import osm_like
+from repro.core.fmbi import _distribute_vectorized, refine_subspace
+from repro.core.pagestore import branch_capacity, leaf_capacity
+from repro.core.splittree import build_group_median_tree
+
+from .common import buffer_pages
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+BENCH_CORE = ROOT / "BENCH_CORE.json"
+
+# seed (pre-vectorization, commit b71a949) wall clock for bulk_load on the
+# 600k OSM-like dataset on the reference container — the baseline the
+# >= 5x acceptance criterion is measured against
+SEED_BULK_LOAD_600K_S = 5.31
+
+# --smoke ceilings (seconds): an order of magnitude above current numbers;
+# only a reintroduced interpreter loop should trip these
+SMOKE_CEILINGS_S = {
+    "step2_route_distribute": 1.0,
+    "refine": 1.5,
+    "bulk_load": 4.0,
+    "window_batch": 1.5,
+    "knn_batch": 1.5,
+}
+
+
+def _timed(fn, repeats: int = 1) -> float:
+    best = np.inf
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def run(n: int = 600_000, seed: int = 0, repeats: int = 3) -> dict:
+    pts = osm_like(n, seed=seed)
+    d = pts.shape[1]
+    c_l, c_b = leaf_capacity(d), branch_capacity(d)
+    M = buffer_pages(pts)
+    alpha = max(M // c_b, 1)
+    if n <= c_b * alpha * c_l:
+        raise SystemExit(
+            f"n={n} is smaller than one Step-1 sample "
+            f"({c_b * alpha * c_l} points); use a larger --n"
+        )
+    results: dict[str, float] = {}
+
+    # ---- Step-2 routing + distribution (isolated) -----------------------
+    sample = c_b * alpha * c_l
+    rng = np.random.default_rng(seed)
+    perm = rng.permutation(len(pts))
+    samp_idx, rest_idx = np.sort(perm[:sample]), np.sort(perm[sample:])
+    mst, _, samp_assign = build_group_median_tree(
+        pts[samp_idx], n_groups=c_b, group_pages=alpha, page_points=c_l
+    )
+
+    def step2():
+        assign = mst.route(pts[rest_idx])
+        _distribute_vectorized(
+            assign, rest_idx, samp_idx, samp_assign,
+            c_b, c_l, M, alpha, PageStore(M),
+        )
+
+    results["step2_route_distribute_s"] = _timed(step2, repeats)
+
+    # ---- Step-3 refine (isolated, one buffer-sized subspace per run) ----
+    assign = mst.route(pts[rest_idx])
+    sub_idx, *_ = _distribute_vectorized(
+        assign, rest_idx, samp_idx, samp_assign,
+        c_b, c_l, M, alpha, PageStore(M),
+    )
+
+    def refine():
+        store = PageStore(M)
+        for s in range(c_b):
+            if len(sub_idx[s]):
+                refine_subspace(pts, sub_idx[s], c_l, c_b, store)
+
+    results["refine_s"] = _timed(refine, repeats)
+
+    # ---- end-to-end bulk load -------------------------------------------
+    results["bulk_load_s"] = _timed(lambda: bulk_load(pts, M, PageStore(M)),
+                                    repeats)
+    results["seed_bulk_load_600k_s"] = SEED_BULK_LOAD_600K_S
+    if n == 600_000:
+        results["bulk_load_speedup_vs_seed"] = round(
+            SEED_BULK_LOAD_600K_S / results["bulk_load_s"], 2
+        )
+
+    # ---- batched queries -------------------------------------------------
+    idx = bulk_load(pts, M, PageStore(M))
+    qrng = np.random.default_rng(1)
+    centers = qrng.random((64, d)) * 0.9
+    los, his = centers - 0.02, centers + 0.02
+    results["window_batch_64_s"] = _timed(
+        lambda: window_query_batch(idx, los, his), repeats
+    )
+    qs = qrng.random((64, d))
+    results["knn_batch_64_k16_s"] = _timed(
+        lambda: knn_query_batch(idx, qs, 16), repeats
+    )
+
+    # ---- JAX candidate-leaf window_count --------------------------------
+    try:
+        import jax.numpy as jnp
+
+        from repro.core import jax_index
+
+        levels = 10
+        padded, ids = jax_index.pad_points(pts.astype(np.float32), levels)
+        jidx = jax_index.build(jnp.asarray(padded), levels,
+                               jnp.asarray(ids, np.int32))
+        jl = jnp.asarray(los.astype(np.float32))
+        jh = jnp.asarray(his.astype(np.float32))
+        jax_index.window_count(jidx, jl, jh)  # compile
+        results["jax_window_count_64_s"] = _timed(
+            lambda: jax_index.window_count(jidx, jl, jh).block_until_ready(),
+            repeats,
+        )
+    except Exception as e:  # pragma: no cover - accelerator-env dependent
+        results["jax_window_count_64_s"] = -1.0
+        results["jax_window_count_error"] = str(e)
+
+    return results
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced size, gate against ceilings, no JSON write")
+    ap.add_argument("--n", type=int, default=None)
+    args = ap.parse_args(argv)
+
+    n = args.n or (120_000 if args.smoke else 600_000)
+    res = run(n=n, repeats=1 if args.smoke else 3)
+    res["n_points"] = n
+    for k, v in sorted(res.items()):
+        print(f"  {k:32s} {v}")
+
+    if args.smoke:
+        failures = []
+        checks = {
+            "step2_route_distribute": res["step2_route_distribute_s"],
+            "refine": res["refine_s"],
+            "bulk_load": res["bulk_load_s"],
+            "window_batch": res["window_batch_64_s"],
+            "knn_batch": res["knn_batch_64_k16_s"],
+        }
+        for name, got in checks.items():
+            if got > SMOKE_CEILINGS_S[name]:
+                failures.append(
+                    f"{name}: {got:.3f}s > ceiling "
+                    f"{SMOKE_CEILINGS_S[name]:.3f}s"
+                )
+        if failures:
+            print("SMOKE FAIL:\n  " + "\n  ".join(failures))
+            return 1
+        print("SMOKE OK")
+        return 0
+
+    BENCH_CORE.write_text(json.dumps(res, indent=2, sort_keys=True) + "\n")
+    print(f"wrote {BENCH_CORE}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -5,7 +5,14 @@ from .baselines import bulk_load_omt, bulk_load_str, bulk_load_waffle
 from .fmbi import Index, Node, bulk_load, refine_subspace
 from .metrics import leaf_stats
 from .pagestore import IOStats, PageStore, branch_capacity, leaf_capacity
-from .queries import knn_oracle, knn_query, window_oracle, window_query
+from .queries import (
+    knn_oracle,
+    knn_query,
+    knn_query_batch,
+    window_oracle,
+    window_query,
+    window_query_batch,
+)
 
 ALL_LOADERS = dict(LOADERS, fmbi=lambda pts, M, store=None: bulk_load(pts, M, store))
 
@@ -26,9 +33,11 @@ __all__ = [
     "bulk_load_waffle",
     "knn_oracle",
     "knn_query",
+    "knn_query_batch",
     "leaf_capacity",
     "leaf_stats",
     "refine_subspace",
     "window_oracle",
     "window_query",
+    "window_query_batch",
 ]

@@ -19,10 +19,24 @@ adaptive analogue of FMBI's Steps 1-4 (Section 4.1):
 
 The node set AMBI converges to is independent of the query order; with
 queries covering the whole space it coincides with FMBI.
+
+Scan engine
+-----------
+The adaptive distribution is chunk-batched: each streamed page is grouped
+with one stable argsort, per-subspace counts and bounding boxes are updated
+with ``reduceat`` segment reductions, and the grow/flush/split bookkeeping
+runs only for the few subspaces whose in-memory point count actually crosses
+a page boundary.  Subspace MBBs (the max-heap keys) are maintained
+incrementally instead of being recomputed from every buffered point at each
+victim selection, and the final per-subspace row lists come from one global
+stable argsort rather than per-page list appends.  One deliberate
+difference from the strictly sequential formulation: all of a page's counts
+and MBB updates are applied before that page's flush decisions run, so a
+decision sees the page's full contents even for subspaces later in the
+page's group order — the flush policy itself is unchanged.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable, Optional
 
 import numpy as np
@@ -31,19 +45,6 @@ from .fmbi import Index, Node, merge_branches, refine_subspace
 from .pagestore import PageStore, branch_capacity, leaf_capacity
 from .queries import knn_query, mindist_sq, window_query
 from .splittree import build_group_median_tree, mbb_of
-
-
-@dataclasses.dataclass
-class _Sub:
-    """A live subspace during adaptive distribution."""
-
-    idx_chunks: list
-    mem_pages: int
-    disk_pages: int
-    active: bool = True
-
-    def points_count(self) -> int:
-        return sum(len(c) for c in self.idx_chunks)
 
 
 class AMBI:
@@ -139,12 +140,34 @@ class AMBI:
             points[idx[samp_use]], n_groups, alpha, c_l
         )
 
-        # live routing forest: major MST -> (optional nested minor trees)
-        subs: list[_Sub] = [
-            _Sub([idx[samp_use[samp_assign == s]]], alpha, 0)
-            for s in range(n_groups)
-        ]
+        # live routing forest state, array-form.  Subspace i: point count,
+        # disk/memory pages, active flag, and an incrementally maintained MBB
+        # (identical to the min/max over its buffered points, which the
+        # scalar formulation recomputed at every victim selection).
+        count = np.zeros(n_groups, dtype=np.int64)
+        disk = np.zeros(n_groups, dtype=np.int64)
+        mem = np.full(n_groups, alpha, dtype=np.int64)
+        active = np.ones(n_groups, dtype=bool)
+        mbb_lo = np.full((n_groups, self.d), np.inf)
+        mbb_hi = np.full((n_groups, self.d), -np.inf)
         refine_map: dict[int, tuple] = {}  # sub id -> (tree, child sub ids)
+
+        # arrival log: per streamed page, the rows (group-sorted) and their
+        # subspace assignment; the Step-3 row lists fall out of one global
+        # stable argsort at the end
+        all_rows: list[np.ndarray] = []
+        all_assign: list[np.ndarray] = []
+
+        def grow_subs(k: int) -> list[int]:
+            nonlocal count, disk, mem, active, mbb_lo, mbb_hi
+            first = len(count)
+            count = np.concatenate([count, np.zeros(k, np.int64)])
+            disk = np.concatenate([disk, np.zeros(k, np.int64)])
+            mem = np.concatenate([mem, np.zeros(k, np.int64)])
+            active = np.concatenate([active, np.ones(k, bool)])
+            mbb_lo = np.vstack([mbb_lo, np.full((k, self.d), np.inf)])
+            mbb_hi = np.vstack([mbb_hi, np.full((k, self.d), -np.inf)])
+            return list(range(first, first + k))
 
         def route(rows: np.ndarray) -> np.ndarray:
             out = mst.route(points[rows])
@@ -160,73 +183,114 @@ class AMBI:
                 }
             return out
 
-        def mem_used() -> int:
-            return sum(s.mem_pages for s in subs)
-
-        def qdist(s: _Sub) -> float:
-            pts = (
-                np.concatenate(s.idx_chunks)
-                if len(s.idx_chunks) > 1
-                else s.idx_chunks[0]
+        def ingest(rows: np.ndarray, a: np.ndarray):
+            """Group-by + segment min/max updates for one streamed page.
+            Returns the page's (sorted) group ids."""
+            order = np.argsort(a, kind="stable")
+            ra, aa = rows[order], a[order]
+            uniq, starts = np.unique(aa, return_index=True)
+            seg = points[ra]
+            mbb_lo[uniq] = np.minimum(
+                mbb_lo[uniq], np.minimum.reduceat(seg, starts, axis=0)
             )
-            if len(pts) == 0:
+            mbb_hi[uniq] = np.maximum(
+                mbb_hi[uniq], np.maximum.reduceat(seg, starts, axis=0)
+            )
+            count[uniq] += np.diff(np.append(starts, len(aa)))
+            all_rows.append(ra)
+            all_assign.append(aa.astype(np.int32))
+            return uniq
+
+        def qdist(i: int) -> float:
+            if count[i] == 0:
                 return np.inf
-            return self._query_dist(mbb_of(points[pts]))
+            return self._query_dist(np.stack([mbb_lo[i], mbb_hi[i]]))
+
+        def mem_used() -> int:
+            return int(mem.sum())
+
+        def materialize(si: int) -> np.ndarray:
+            parts = [r[a == si] for r, a in zip(all_rows, all_assign)]
+            parts = [p for p in parts if len(p)]
+            return (
+                np.concatenate(parts) if parts else np.zeros(0, np.int64)
+            )
 
         def split_sub(si: int) -> None:
-            """Qualified & large: replace sub by C_B minor-tree children."""
-            s = subs[si]
-            rows = np.concatenate(s.idx_chunks)
-            beta = max(s.points_count() // (c_l * c_b), 1)
-            groups = min(c_b, max(s.points_count() // (beta * c_l), 2))
+            """Qualified & large: replace sub by <= C_B minor-tree children."""
+            rows = materialize(si)
+            beta = max(len(rows) // (c_l * c_b), 1)
+            groups = min(c_b, max(len(rows) // (beta * c_l), 2))
             trim2 = groups * beta * c_l
-            tree, _, assign = build_group_median_tree(
+            tree, _, assign2 = build_group_median_tree(
                 points[rows[:trim2]], groups, beta, c_l
             )
-            kid_ids = []
-            for g in range(groups):
-                kid = _Sub([rows[:trim2][assign == g]], beta, 0)
-                subs.append(kid)
-                kid_ids.append(len(subs) - 1)
+            kid_ids = grow_subs(groups)
+            kid_arr = np.asarray(kid_ids, dtype=np.int32)
             leftover = rows[trim2:]
-            if len(leftover):
-                a = tree.route(points[leftover])
-                for g in np.unique(a):
-                    subs[kid_ids[int(g)]].idx_chunks.append(
-                        leftover[a == g]
-                    )
+            la = (
+                tree.route(points[leftover])
+                if len(leftover)
+                else np.zeros(0, np.int32)
+            )
+            new_assign = np.concatenate([kid_arr[assign2], kid_arr[la]])
+            # rewrite the arrival log: si's rows now belong to its children
+            pos = 0
+            for arr_a in all_assign:
+                msk = arr_a == si
+                c = int(msk.sum())
+                if c:
+                    arr_a[msk] = new_assign[pos : pos + c]
+                    pos += c
+            # children state: counts/MBBs over their actual rows
+            kc = np.bincount(
+                new_assign - kid_ids[0], minlength=groups
+            ).astype(np.int64)
+            count[kid_ids] = kc
+            mem[kid_ids] = beta
+            korder = np.argsort(new_assign, kind="stable")
+            kstarts = np.concatenate([[0], np.cumsum(kc)])[:-1]
+            seg = points[rows[korder]]
+            nonzero = kc > 0
+            if nonzero.any():
+                klo = np.minimum.reduceat(seg, kstarts[nonzero], axis=0)
+                khi = np.maximum.reduceat(seg, kstarts[nonzero], axis=0)
+                kid_nz = np.asarray(kid_ids)[nonzero]
+                mbb_lo[kid_nz] = klo
+                mbb_hi[kid_nz] = khi
             refine_map[si] = (tree, kid_ids)
-            s.idx_chunks = []
-            s.mem_pages = 0
-            s.active = False
+            count[si] = 0
+            mem[si] = 0
+            active[si] = False
 
         def flush(si: int) -> None:
-            s = subs[si]
-            pts = s.points_count()
-            full = (pts - s.disk_pages * c_l) // c_l
+            full = int(count[si] - disk[si] * c_l) // c_l
             if full > 0:
                 store.write_run(full)
-                s.disk_pages += full
-            s.mem_pages = 1
-            s.active = False
+                disk[si] += full
+            mem[si] = 1
+            active[si] = False
 
         def pick_victim() -> Optional[int]:
             # farthest active subspace (max-heap of the paper); splitting a
             # qualified subspace with >= C_B pages takes priority over
             # flushing it
             cand = [
-                (qdist(s), i)
-                for i, s in enumerate(subs)
-                if s.active and i not in refine_map
+                (qdist(i), i)
+                for i in range(len(count))
+                if active[i] and i not in refine_map
             ]
             if not cand:
                 return None
             dist, i = max(cand)
-            pages_i = -(-subs[i].points_count() // c_l)
+            pages_i = -(-int(count[i]) // c_l)
             if dist == 0.0 and pages_i >= c_b:
                 split_sub(i)
                 return pick_victim()
             return i
+
+        # the sampled pages are the subspaces' initial buffered contents
+        ingest(idx[samp_use], samp_assign.astype(np.int32))
 
         # Step 2: distribute remaining pages with the heap flush policy
         rest = idx[np.concatenate([samp_extra, rest_local])] if (
@@ -235,44 +299,53 @@ class AMBI:
         store.read_run(-(-len(rest) // c_l))
         for start in range(0, len(rest), c_l):
             rows = rest[start : start + c_l]
-            a = route(rows)
-            for g in np.unique(a):
-                s = subs[int(g)]
-                sel = rows[a == g]
-                s.idx_chunks.append(sel)
-                # page-granular buffer bookkeeping
-                pts = s.points_count()
-                in_mem = pts - s.disk_pages * c_l
-                while in_mem > s.mem_pages * c_l:
-                    if s.active:
+            uniq = ingest(rows, route(rows))
+            # page-granular buffer bookkeeping, only where a page boundary
+            # was actually crossed
+            crossing = uniq[
+                (count[uniq] - disk[uniq] * c_l) > mem[uniq] * c_l
+            ]
+            for g in crossing:
+                g = int(g)
+                if g in refine_map:  # split mid-page: rows already rerouted
+                    continue
+                pts = int(count[g])
+                in_mem = pts - int(disk[g]) * c_l
+                while in_mem > int(mem[g]) * c_l:
+                    if active[g]:
                         if mem_used() >= M:
                             v = pick_victim()
                             if v is not None:
                                 flush(v)
-                                if v == int(g):
+                                if v == g:
                                     break
                                 continue
-                        s.mem_pages += 1
+                        mem[g] += 1
                     else:
                         # inactive: single page, flushed whenever it fills
                         store.write_run(1)
-                        s.disk_pages += 1
-                        in_mem = pts - s.disk_pages * c_l
+                        disk[g] += 1
+                        in_mem = pts - int(disk[g]) * c_l
 
-        # Step 3: refine actives (their pages are in memory -> no reads)
-        live = [
-            (i, s) for i, s in enumerate(subs) if i not in refine_map
-        ]
-        nodes: list[Optional[Node]] = [None] * len(subs)
-        for i, s in live:
-            rows = (
-                np.concatenate(s.idx_chunks)
-                if s.idx_chunks
-                else np.zeros(0, dtype=np.int64)
-            )
+        # Step 3: refine actives (their pages are in memory -> no reads).
+        # One stable argsort of the arrival log yields every subspace's rows
+        # in stream order.
+        n_sub = len(count)
+        all_a = np.concatenate(all_assign)
+        all_r = np.concatenate(all_rows)
+        gorder = np.argsort(all_a, kind="stable")
+        sorted_rows = all_r[gorder]
+        bounds = np.concatenate(
+            [[0], np.cumsum(np.bincount(all_a, minlength=n_sub))]
+        )
+        nodes: list[Optional[Node]] = [None] * n_sub
+        for i in range(n_sub):
+            if i in refine_map:
+                continue
+            rows = sorted_rows[bounds[i] : bounds[i + 1]]
             if len(rows) == 0:
                 continue
-            if s.active:
+            if active[i]:
                 entries = refine_subspace(points, rows, c_l, c_b, store)
                 if len(entries) == 1:
                     nodes[i] = entries[0]
@@ -282,14 +355,14 @@ class AMBI:
                     )
             else:
                 # flush trailing partial page; becomes an unrefined node
-                rem = len(rows) - s.disk_pages * c_l
+                rem = len(rows) - int(disk[i]) * c_l
                 if rem > 0:
                     store.write_run(1)
-                    s.disk_pages += 1
+                    disk[i] += 1
                 nodes[i] = Node(
                     mbb=mbb_of(points[rows]),
                     page_id=-1,
-                    raw_pages=int(s.disk_pages),
+                    raw_pages=int(disk[i]),
                     raw_points=rows,
                 )
 

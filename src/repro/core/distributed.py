@@ -34,6 +34,11 @@ from .splittree import build_group_median_tree
 
 P = jax.sharding.PartitionSpec
 
+try:  # jax >= 0.5: top-level API
+    _shard_map = jax.shard_map
+except AttributeError:  # older jax: experimental namespace
+    from jax.experimental.shard_map import shard_map as _shard_map
+
 
 # --------------------------------------------------------------------------
 # 1. host-level m-server simulation (Figure 11)
@@ -224,7 +229,7 @@ def shard_build(points, mesh, levels_local: int, axis: str = "data",
         )
         return out
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         body, mesh=mesh,
         in_specs=P(axis, None),
         out_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P(axis),
@@ -277,7 +282,7 @@ def shard_knn(shard_out, queries, k: int, mesh, levels_local: int,
         sel_shard = (topi // k).astype(jnp.int32)  # owner shard per result
         return (-topv)[None], sel_rows[None], sel_shard[None]
 
-    fn = jax.shard_map(
+    fn = _shard_map(
         body, mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis), P(axis), P(axis), P(axis)),
         out_specs=(P(axis), P(axis), P(axis)),

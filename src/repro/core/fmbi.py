@@ -18,10 +18,36 @@ The in-memory ``Node`` tree doubles as the physical index: every node carries
 the id of the disk page its entry list (branch) or point payload (leaf) lives
 on, so query processing can charge buffered page reads exactly like the
 paper's framework.
+
+Scan engine
+-----------
+The hot paths run as true array-level scans, not interpreter loops:
+
+  * Step 2 routes the whole stream once through the MST, derives per-page x
+    per-subspace occupancy with a single ``bincount``, and *replays* the
+    buffer's flush decisions from the prefix-sum occupancy arrays
+    (:func:`_replay_step2`).  Only page-boundary crossings — O(total pages)
+    events — are simulated; the per-point work is all vectorized.  The replay
+    is decision-for-decision identical to the scalar ``SubspaceBuffers``
+    simulation (kept below as the reference; ``bulk_load(step2="scalar")``
+    runs it, and a regression test asserts identical ``IOStats`` and
+    identical subspace assignments).
+  * Each subspace's rows are gathered with one stable argsort of the routing
+    assignment instead of per-page list appends.
+  * :func:`refine_subspace` presorts the subspace once per dimension and
+    partitions those orders in place, replacing the O(n log^2 n) re-sorting
+    recursion with O(d n log n) boolean partitions.  Ties break by original
+    stream order rather than by the re-sorted arrangement the naive
+    recursion carried, so with duplicate coordinates a cut may land tied
+    points on the other side; page counts, entry lists, and therefore the
+    I/O accounting are unaffected (they depend only on page arithmetic).
+    Leaf pages are allocated and written in run-granular batches
+    (``PageStore.write_seq``) with ids identical to the per-page sequence.
 """
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Optional
 
 import numpy as np
@@ -30,7 +56,6 @@ from .pagestore import IOStats, PageStore, branch_capacity, leaf_capacity
 from .splittree import (
     FlatSplitTree,
     build_group_median_tree,
-    longest_dimension,
     mbb_of,
 )
 
@@ -125,23 +150,96 @@ def refine_subspace(
     entry lists that exceed C_B into branch entries.  All sorting is
     in-memory; the only I/O is writing finalized leaf/branch pages.
 
+    The subspace is argsorted once per dimension up front; every recursive
+    split partitions those orders membership-preservingly, so the per-node
+    sorted views cost O(d * m) boolean compressions instead of a fresh
+    O(m log m) sort.  Node MBBs and split spreads come straight from the
+    sorted extremes, eliminating the per-node min/max reductions.  Subtrees
+    that can never wrap (page count <= C_B) allocate and write their leaf
+    pages as one run.
+
     Returns the subspace's root entry list (1..C_B nodes).
     """
-    if len(idx) == 0:
+    m = len(idx)
+    if m == 0:
         return []
+    pts = points[idx]
+    d = pts.shape[1]
+    cols = [np.ascontiguousarray(pts[:, j]) for j in range(d)]
+    orders = [np.argsort(c, kind="stable") for c in cols]
+    flag = np.zeros(m, dtype=bool)
 
-    def rec(sub_idx: np.ndarray, n_pages: int) -> list[Node]:
-        pts = points[sub_idx]
-        if n_pages <= 1:
-            page = store.alloc()
-            store.write(page)
-            return [Node(mbb=mbb_of(pts), page_id=page, point_idx=sub_idx)]
-        dim = longest_dimension(pts)
-        order = np.argsort(pts[:, dim], kind="stable")
+    def spread_dim(orders_) -> int:
+        # spread from the sorted extremes; ties resolve to the first max,
+        # matching np.argmax over (max - min) in the naive recursion
+        best, best_spread = 0, -np.inf
+        for j in range(d):
+            o = orders_[j]
+            spread = cols[j][o[-1]] - cols[j][o[0]]
+            if spread > best_spread:
+                best, best_spread = j, spread
+        return best
+
+    def partition(orders_, dim: int, cut: int):
+        o = orders_[dim]
+        left_set = o[:cut]
+        flag[left_set] = True
+        left, right = [], []
+        for j, oj in enumerate(orders_):
+            if j == dim:
+                left.append(left_set)
+                right.append(o[cut:])
+            else:
+                mj = flag[oj]
+                left.append(oj[mj])
+                right.append(oj[~mj])
+        flag[left_set] = False
+        return left, right
+
+    def make_leaf(orders_, page: int, last_dim: Optional[int]) -> Node:
+        mbb = np.array(
+            [
+                [c[o[0]] for c, o in zip(cols, orders_)],
+                [c[o[-1]] for c, o in zip(cols, orders_)],
+            ]
+        )
+        local = orders_[last_dim] if last_dim is not None else None
+        return Node(
+            mbb=mbb,
+            page_id=page,
+            point_idx=idx[local] if local is not None else idx,
+        )
+
+    def leaf_run(orders_, n_pages: int, last_dim: Optional[int]) -> list[Node]:
+        """A subtree of <= C_B pages can never wrap: it is exactly
+        ``n_pages`` leaves, emitted in DFS order as one alloc/write run."""
+        first = store.alloc(n_pages)
+        store.write_seq(first, n_pages)
+        out: list[Node] = []
+
+        def lrec(orders__, n_pages_: int, last_dim_: Optional[int]) -> None:
+            if n_pages_ <= 1:
+                out.append(make_leaf(orders__, first + len(out), last_dim_))
+                return
+            dim = spread_dim(orders__)
+            n_left = n_pages_ // 2
+            cut = n_left * leaf_cap  # left half is ⌊P/2⌋ *full* pages
+            left, right = partition(orders__, dim, cut)
+            lrec(left, n_left, dim)
+            lrec(right, n_pages_ - n_left, dim)
+
+        lrec(orders_, n_pages, last_dim)
+        return out
+
+    def rec(orders_, n_pages: int, last_dim: Optional[int]) -> list[Node]:
+        if n_pages <= branch_cap:
+            return leaf_run(orders_, n_pages, last_dim)
+        dim = spread_dim(orders_)
         n_left = n_pages // 2
-        cut = n_left * leaf_cap  # left half is ⌊P/2⌋ *full* pages
-        ne1 = rec(sub_idx[order[:cut]], n_left)
-        ne2 = rec(sub_idx[order[cut:]], n_pages - n_left)
+        cut = n_left * leaf_cap
+        left, right = partition(orders_, dim, cut)
+        ne1 = rec(left, n_left, dim)
+        ne2 = rec(right, n_pages - n_left, dim)
         if len(ne1) + len(ne2) <= branch_cap:
             return ne1 + ne2
         out = []
@@ -157,8 +255,8 @@ def refine_subspace(
             out.append(Node(mbb=mbb, page_id=page, children=ne))
         return out
 
-    total_pages = max(1, -(-len(idx) // leaf_cap))
-    return rec(idx, total_pages)
+    total_pages = max(1, -(-m // leaf_cap))
+    return rec(orders, total_pages, None)
 
 
 # --------------------------------------------------------------------------
@@ -222,15 +320,19 @@ def merge_branches(
 
 
 # --------------------------------------------------------------------------
-# Step 2 buffer simulation
+# Step 2 buffer simulation (scalar reference)
 # --------------------------------------------------------------------------
 class SubspaceBuffers:
-    """Models the Step-2 buffer at page granularity.
+    """Models the Step-2 buffer at page granularity (scalar reference).
 
     Each subspace accumulates routed points.  Active subspaces keep all their
     pages in memory; on buffer exhaustion the allocating subspace flushes its
     full pages (-> inactive, paper Step 2).  A ``flush_victim`` hook lets
     AMBI substitute its distance max-heap victim selection.
+
+    The production Step-2 path is :func:`_replay_step2`, which reproduces
+    this state machine's decisions from vectorized prefix sums; this class is
+    retained as the executable specification it is validated against.
     """
 
     def __init__(self, n_sub, leaf_cap, buffer_pages, store, init_pages):
@@ -292,6 +394,156 @@ class SubspaceBuffers:
 
 
 # --------------------------------------------------------------------------
+# Step 2: vectorized distribution
+# --------------------------------------------------------------------------
+def _group_slices(assign: np.ndarray, n_sub: int):
+    """Stable group-by: ``order[bounds[s]:bounds[s+1]]`` are the positions
+    with ``assign == s``, preserving stream order within each group."""
+    order = np.argsort(assign, kind="stable")
+    counts = np.bincount(assign, minlength=n_sub)
+    bounds = np.concatenate([[0], np.cumsum(counts)])
+    return order, bounds
+
+
+def _replay_step2(
+    assign: np.ndarray,
+    c_b: int,
+    c_l: int,
+    buffer_pages: int,
+    alpha: int,
+    store: PageStore,
+):
+    """Replay the Step-2 buffer decisions from prefix-occupancy arrays.
+
+    ``assign`` is the MST subspace of every streamed point, in file order.
+    One ``bincount`` produces the per-page x per-subspace occupancy; its
+    per-subspace prefix sums tell exactly when each subspace's in-memory
+    point count crosses a page boundary.  Only those crossings — O(pages)
+    events, ordered by (page, subspace) like the scalar simulation — are
+    replayed through the grow-or-flush state machine of
+    :class:`SubspaceBuffers`; everything per-point stays in numpy.
+
+    Returns (counts, disk_pages, active): the final buffer state.  Flush
+    writes are charged to ``store`` with totals identical to the scalar run.
+    """
+    n_rest = len(assign)
+    counts0 = alpha * c_l  # every subspace starts with its sampled pages
+    if n_rest == 0:
+        return (
+            np.full(c_b, counts0, dtype=np.int64),
+            np.zeros(c_b, dtype=np.int64),
+            np.ones(c_b, dtype=bool),
+        )
+    n_chunks = -(-n_rest // c_l)
+    chunk = np.arange(n_rest, dtype=np.int64) // c_l
+    occ = np.bincount(
+        chunk * c_b + assign.astype(np.int64), minlength=n_chunks * c_b
+    )
+    # cum[t, s]: points routed to s after page t has been distributed
+    cum = occ.reshape(n_chunks, c_b).cumsum(axis=0) + counts0
+    cum_t = np.ascontiguousarray(cum.T)  # (c_b, n_chunks) for searchsorted
+
+    mem = np.full(c_b, alpha, dtype=np.int64)
+    disk = np.zeros(c_b, dtype=np.int64)
+    active = np.ones(c_b, dtype=bool)
+    mem_used = int(alpha) * c_b
+    writes = 0
+
+    heap: list[tuple[int, int]] = []
+
+    def push(s: int) -> None:
+        cap = int(disk[s] + mem[s]) * c_l
+        t = int(np.searchsorted(cum_t[s], cap, side="right"))
+        if t < n_chunks:
+            heapq.heappush(heap, (t, s))
+
+    for s in range(c_b):
+        push(s)
+    while heap:
+        t, s = heapq.heappop(heap)
+        target = int(cum_t[s, t])
+        while int(disk[s] + mem[s]) * c_l < target:
+            if mem_used >= buffer_pages:
+                # flush: the in-memory pages are all full; afterwards the
+                # subspace keeps one (empty) page plus the fresh one
+                writes += int(mem[s])
+                disk[s] += mem[s]
+                mem_used += 2 - int(mem[s])
+                mem[s] = 2
+                active[s] = False
+            else:
+                mem[s] += 1
+                mem_used += 1
+        push(s)
+    store.write_run(writes)
+    return cum[-1].astype(np.int64), disk, active
+
+
+def _distribute_scalar(
+    assign: np.ndarray,
+    rest_idx: np.ndarray,
+    samp_idx: np.ndarray,
+    samp_assign: np.ndarray,
+    c_b: int,
+    c_l: int,
+    buffer_pages: int,
+    alpha: int,
+    store: PageStore,
+):
+    """The seed's page-by-page Step-2 loop (reference implementation)."""
+    bufs = SubspaceBuffers(c_b, c_l, buffer_pages, store, [alpha] * c_b)
+    sub_points: list[list[np.ndarray]] = [[] for _ in range(c_b)]
+    for s in range(c_b):
+        sub_points[s].append(samp_idx[samp_assign == s])
+    for start in range(0, len(rest_idx), c_l):
+        sl = slice(start, start + c_l)
+        a = assign[sl]
+        ridx = rest_idx[sl]
+        for s in np.unique(a):
+            sel = ridx[a == s]
+            sub_points[int(s)].append(sel)
+            bufs.add_points(int(s), len(sel))
+    sub_idx = [
+        np.concatenate(sp) if sp else np.zeros(0, dtype=np.int64)
+        for sp in sub_points
+    ]
+    return sub_idx, bufs.counts.copy(), bufs.disk_pages.copy(), bufs.active.copy()
+
+
+def _distribute_vectorized(
+    assign: np.ndarray,
+    rest_idx: np.ndarray,
+    samp_idx: np.ndarray,
+    samp_assign: np.ndarray,
+    c_b: int,
+    c_l: int,
+    buffer_pages: int,
+    alpha: int,
+    store: PageStore,
+):
+    """Array-level Step 2: one group-by for the rows, one replay for the
+    buffer decisions.  Produces the same subspace row lists (same order) and
+    the same I/O as :func:`_distribute_scalar`."""
+    counts, disk, active = _replay_step2(
+        assign, c_b, c_l, buffer_pages, alpha, store
+    )
+    samp_order, samp_bounds = _group_slices(samp_assign, c_b)
+    rest_order, rest_bounds = _group_slices(assign, c_b)
+    samp_sorted = samp_idx[samp_order]
+    rest_sorted = rest_idx[rest_order]
+    sub_idx = [
+        np.concatenate(
+            [
+                samp_sorted[samp_bounds[s] : samp_bounds[s + 1]],
+                rest_sorted[rest_bounds[s] : rest_bounds[s + 1]],
+            ]
+        )
+        for s in range(c_b)
+    ]
+    return sub_idx, counts, disk, active
+
+
+# --------------------------------------------------------------------------
 # The bulk loader
 # --------------------------------------------------------------------------
 def bulk_load(
@@ -301,9 +553,15 @@ def bulk_load(
     rng: Optional[np.random.Generator] = None,
     *,
     charge_source_read: bool = True,
+    step2: str = "vectorized",
     _depth: int = 0,
 ) -> Index:
-    """Bulk load FMBI over ``points`` with a ``buffer_pages`` buffer."""
+    """Bulk load FMBI over ``points`` with a ``buffer_pages`` buffer.
+
+    ``step2`` selects the distribution engine: ``"vectorized"`` (default,
+    prefix-sum replay) or ``"scalar"`` (the page-by-page reference loop);
+    both produce identical indexes and identical ``IOStats``.
+    """
     rng = rng or np.random.default_rng(0)
     store = store or PageStore(buffer_pages)
     n, d = points.shape
@@ -350,39 +608,32 @@ def bulk_load(
     # ---- Step 2: distribute remaining pages -----------------------------
     rest_idx = np.flatnonzero(~samp_sel)
     store.read_run(-(-len(rest_idx) // c_l))
-    bufs = SubspaceBuffers(c_b, c_l, buffer_pages, store, [alpha] * c_b)
-    sub_points: list[list[np.ndarray]] = [[] for _ in range(c_b)]
-    for s in range(c_b):
-        sub_points[s].append(samp_idx[samp_assign == s])
-    if len(rest_idx) > 0:
-        assign = mst.route(points[rest_idx])
-        # stream in file order at page granularity to model flush order
-        for start in range(0, len(rest_idx), c_l):
-            sl = slice(start, start + c_l)
-            a = assign[sl]
-            ridx = rest_idx[sl]
-            for s in np.unique(a):
-                sel = ridx[a == s]
-                sub_points[int(s)].append(sel)
-                bufs.add_points(int(s), len(sel))
+    assign = (
+        mst.route(points[rest_idx])
+        if len(rest_idx)
+        else np.zeros(0, dtype=np.int32)
+    )
+    distribute = (
+        _distribute_scalar if step2 == "scalar" else _distribute_vectorized
+    )
+    sub_idx, counts, disk_pages, active = distribute(
+        assign, rest_idx, samp_idx, samp_assign,
+        c_b, c_l, buffer_pages, alpha, store,
+    )
 
     # ---- Step 3: refine sparse subspaces (actives first: pages are free)
-    sub_idx = [
-        np.concatenate(sp) if sp else np.zeros(0, dtype=np.int64)
-        for sp in sub_points
-    ]
+    pages_of = -(-counts // c_l)
     subspace_nodes: list[Optional[Node]] = [None] * c_b
     dense: list[int] = []
-    for s in np.argsort(~bufs.active, kind="stable"):
+    for s in np.argsort(~active, kind="stable"):
         s = int(s)
-        pages_s = bufs.pages_of(s)
-        if pages_s > buffer_pages:
+        if pages_of[s] > buffer_pages:
             dense.append(s)
             continue
         if len(sub_idx[s]) == 0:
             continue
-        if not bufs.active[s]:
-            store.read_run(int(bufs.disk_pages[s]))  # reload flushed pages
+        if not active[s]:
+            store.read_run(int(disk_pages[s]))  # reload flushed pages
         entries = refine_subspace(points, sub_idx[s], c_l, c_b, store)
         node_mbb = (
             mbb_of(points[sub_idx[s]]) if len(sub_idx[s]) else np.zeros((2, d))
@@ -407,13 +658,15 @@ def bulk_load(
 
     # ---- Step 5: dense subspaces -> recursive bulk load ------------------
     for s in dense:
-        bufs.final_flush_partial(s)
+        if counts[s] - disk_pages[s] * c_l > 0:  # trailing partial page
+            store.write_run(1)
         sub = bulk_load(
             points[sub_idx[s]],
             buffer_pages,
             store,
             rng,
             charge_source_read=True,
+            step2=step2,
             _depth=_depth + 1,
         )
         _rebase_leaves(sub.root, sub_idx[s])

@@ -145,27 +145,124 @@ def route(index: JaxIndex, queries: jnp.ndarray) -> jnp.ndarray:
     return g
 
 
-@partial(jax.jit, static_argnames=("use_kernel",))
-def window_count(
-    index: JaxIndex, lo: jnp.ndarray, hi: jnp.ndarray, use_kernel: bool = False
-) -> jnp.ndarray:
-    """Result counts for a batch of window queries (Q, d) x 2.
+@jax.jit
+def _leaf_window_masks(index: JaxIndex, lo: jnp.ndarray, hi: jnp.ndarray):
+    """(Q, L) masks: leaves intersecting each window, leaves fully inside."""
+    inter = jnp.all(index.leaf_lo[None] <= hi[:, None, :], axis=2) & jnp.all(
+        index.leaf_hi[None] >= lo[:, None, :], axis=2
+    )
+    contained = jnp.all(
+        index.leaf_lo[None] >= lo[:, None, :], axis=2
+    ) & jnp.all(index.leaf_hi[None] <= hi[:, None, :], axis=2)
+    return inter, contained
 
-    Leaf-level pruning mirrors the tree traversal: a leaf is scanned only if
-    its MBB intersects the window; pruned leaves cost nothing on TPU thanks
-    to masking (they model the unvisited pages).
-    """
+
+@partial(jax.jit, static_argnames=("n_candidate_leaves", "use_kernel"))
+def _window_count_core(
+    index: JaxIndex,
+    lo: jnp.ndarray,
+    hi: jnp.ndarray,
+    contained: jnp.ndarray,
+    straddle: jnp.ndarray,
+    n_candidate_leaves: int,
+    use_kernel: bool = False,
+):
+    """Counting pass over precomputed (Q, L) leaf masks."""
     pts = index.points_sorted.reshape(index.n_leaves, index.leaf_size, -1)
     valid = (index.row_ids >= 0).reshape(index.n_leaves, index.leaf_size)
+    base = jnp.sum(jnp.where(contained, jnp.sum(valid, axis=1)[None], 0), axis=1)
 
-    def one(lo1, hi1):
-        inter = jnp.all(index.leaf_lo <= hi1, axis=1) & jnp.all(
-            index.leaf_hi >= lo1, axis=1
+    c = min(n_candidate_leaves, index.n_leaves)
+    score, cand = jax.lax.top_k(straddle.astype(jnp.int32), c)  # (Q, C)
+    cand_pts = pts[cand]                        # (Q, C, leaf, d)
+    cand_valid = valid[cand] & (score > 0)[..., None]
+    q = lo.shape[0]
+    if use_kernel:
+        from repro.kernels import ops as _kops
+
+        scan = _kops.window_count_gathered(
+            lo,
+            hi,
+            cand_pts.reshape(q, c * index.leaf_size, -1),
+            cand_valid.reshape(q, c * index.leaf_size),
         )
-        inside = jnp.all((pts >= lo1) & (pts <= hi1), axis=2) & valid
-        return jnp.sum(inside & inter[:, None])
+    else:
+        inside = jnp.all(
+            (cand_pts >= lo[:, None, None, :])
+            & (cand_pts <= hi[:, None, None, :]),
+            axis=3,
+        ) & cand_valid
+        scan = jnp.sum(inside, axis=(1, 2))
+    exact = jnp.sum(straddle, axis=1) <= c
+    return base + scan.astype(base.dtype), exact
 
-    return jax.vmap(one)(lo, hi)
+
+def window_count_candidates(
+    index: JaxIndex,
+    lo: jnp.ndarray,
+    hi: jnp.ndarray,
+    n_candidate_leaves: int,
+    use_kernel: bool = False,
+):
+    """Candidate-leaf window counting: cost scales with the leaves a window
+    actually touches, not with the dataset.
+
+    Fully *contained* leaves contribute their (precomputable) valid-point
+    counts without touching a single coordinate; only the leaves straddling
+    the window boundary — the top ``n_candidate_leaves`` by intersection —
+    are gathered and scanned (through the ``kernels/window_filter`` Pallas
+    kernel when ``use_kernel``).  Returns (counts, exact) where ``exact``
+    certifies that no straddling leaf was left unscanned; where ``exact``
+    is False the count is a lower bound, NOT the window cardinality.  Use
+    :func:`window_count` for guaranteed-exact answers.
+    """
+    lo = jnp.asarray(lo)
+    hi = jnp.asarray(hi)
+    inter, contained = _leaf_window_masks(index, lo, hi)
+    return _window_count_core(
+        index, lo, hi, contained, inter & ~contained,
+        n_candidate_leaves, use_kernel,
+    )
+
+
+def window_count(
+    index: JaxIndex,
+    lo: jnp.ndarray,
+    hi: jnp.ndarray,
+    use_kernel: bool = False,
+    n_candidate_leaves: int | None = None,
+) -> jnp.ndarray:
+    """Exact result counts for a batch of window queries (Q, d) x 2.
+
+    The candidate budget defaults to the batch's true maximum number of
+    boundary-straddling leaves, rounded up to a power of two so repeated
+    batches reuse a handful of compiled shapes.  Work therefore scales with
+    the candidate leaves (plus an O(L) per-query box test), never with the
+    total point count — the same pruning ``knn`` already does.  An explicit
+    ``n_candidate_leaves`` is taken as a starting budget: if the exactness
+    certificate fails it is doubled until every query is certified, so the
+    result is exact either way (pin budgets via
+    :func:`window_count_candidates` if a lower bound is acceptable).
+    """
+    lo = jnp.asarray(lo)
+    hi = jnp.asarray(hi)
+    inter, contained = _leaf_window_masks(index, lo, hi)
+    straddle = inter & ~contained
+    if n_candidate_leaves is None:
+        need = int(jnp.max(jnp.sum(straddle, axis=1)))
+        c = 1
+        while c < need:
+            c *= 2
+    else:
+        c = n_candidate_leaves
+    c = max(1, min(c, index.n_leaves))
+    while True:
+        counts, exact = _window_count_core(
+            index, lo, hi, contained, straddle, c, use_kernel
+        )
+        if c >= index.n_leaves or bool(jnp.all(exact)):
+            return counts
+        c = min(c * 2, index.n_leaves)
 
 
 @partial(jax.jit, static_argnames=("k", "n_candidate_leaves"))

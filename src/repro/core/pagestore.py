@@ -128,6 +128,18 @@ class PageStore:
         # A freshly written page is resident (it was produced in memory).
         self.buffer.touch(page_id)
 
+    def write_seq(self, first_id: int, n_pages: int) -> None:
+        """Write ``n_pages`` consecutive pages starting at ``first_id``.
+
+        Accounting-equivalent to ``n_pages`` individual :meth:`write` calls in
+        ascending id order (same write count, same LRU touch order) but issued
+        as one run-granular call so bulk writers avoid per-page call overhead.
+        """
+        n_pages = int(n_pages)
+        self.stats.writes += n_pages
+        for pid in range(first_id, first_id + n_pages):
+            self.buffer.touch(pid)
+
     def write_run(self, n_pages: int) -> None:
         self.stats.writes += int(n_pages)
 

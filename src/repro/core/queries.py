@@ -6,9 +6,17 @@ filtered.  Each node visit charges one buffered page read to the index's
 ``PageStore`` (merged nodes share pages, so the LRU buffer — not the tree
 shape — decides whether a visit costs I/O, exactly as in the paper).
 
-k-NN uses the standard best-first search with an incremental result heap
-(Hjaltason & Samet), which both FMBI and the competitor R-tree variants use
-in the paper's unified framework.
+k-NN follows best-first search (Hjaltason & Samet) over *nodes*, but leaf
+scans are array-level: one distance evaluation plus one ``argpartition``
+merge per leaf instead of a per-point result-heap insertion.  The traversal
+order, pruning thresholds, and therefore the page reads are identical to the
+classical incremental formulation.
+
+Batched entry points (``window_query_batch`` / ``knn_query_batch``) execute
+many queries against one traversal, the move Flood-style learned indexes
+make for query throughput: branch pages are visited (and charged) once per
+batch rather than once per query, and leaf filtering is vectorized across
+the whole query batch.
 """
 from __future__ import annotations
 
@@ -32,6 +40,19 @@ def mindist_sq(mbb: np.ndarray, q: np.ndarray) -> float:
     """Squared min distance from point ``q`` to box ``mbb`` (0 if inside)."""
     d = np.maximum(mbb[0] - q, 0.0) + np.maximum(q - mbb[1], 0.0)
     return float(np.dot(d, d))
+
+
+def _merge_topk(
+    best_d: np.ndarray, best_r: np.ndarray,
+    d2: np.ndarray, rows: np.ndarray, k: int,
+):
+    """Merge leaf candidates into the running top-k (one partition, no heap)."""
+    d = np.concatenate([best_d, d2])
+    r = np.concatenate([best_r, rows])
+    if len(d) > k:
+        sel = np.argpartition(d, k - 1)[:k]
+        d, r = d[sel], r[sel]
+    return d, r
 
 
 # --------------------------------------------------------------------------
@@ -79,6 +100,63 @@ def window_query(
     return res, store.stats.delta(before)
 
 
+def window_query_batch(
+    index: Index,
+    los: np.ndarray,
+    his: np.ndarray,
+    *,
+    refiner=None,
+) -> tuple[list[np.ndarray], IOStats]:
+    """Execute ``Q`` window queries in one traversal.
+
+    Returns (per-query row-index arrays, io delta).  A node is visited — and
+    its page read charged — once if *any* query in the batch intersects it,
+    which is the batch's I/O amortization; leaf points are filtered against
+    all active queries with a single broadcast comparison.  ``refiner`` is
+    called on unrefined nodes that qualify for at least one query.
+    """
+    store = index.store
+    before = store.stats.snapshot()
+    los = np.atleast_2d(np.asarray(los, dtype=np.float64))
+    his = np.atleast_2d(np.asarray(his, dtype=np.float64))
+    nq = los.shape[0]
+    out: list[list[np.ndarray]] = [[] for _ in range(nq)]
+    stack: list[tuple[Node, np.ndarray]] = [(index.root, np.arange(nq))]
+    while stack:
+        node, qids = stack.pop()
+        hit = np.all(node.mbb[0] <= his[qids], axis=1) & np.all(
+            node.mbb[1] >= los[qids], axis=1
+        )
+        if not hit.any():
+            continue
+        qids = qids[hit]
+        store.read(node.page_id)
+        if node.is_unrefined:
+            if refiner is None:
+                raise RuntimeError("unrefined node reached without a refiner")
+            node = refiner(node)
+            if node is None:
+                continue
+            stack.append((node, qids))
+            continue
+        if node.is_leaf:
+            pts = index.points[node.point_idx]
+            inside = np.all(
+                (pts[None, :, :] >= los[qids, None, :])
+                & (pts[None, :, :] <= his[qids, None, :]),
+                axis=2,
+            )  # (|qids|, leaf)
+            for qi, m in zip(qids, inside):
+                if m.any():
+                    out[qi].append(node.point_idx[m])
+        else:
+            stack.extend((c, qids) for c in node.children)
+    res = [
+        np.concatenate(o) if o else np.zeros(0, dtype=np.int64) for o in out
+    ]
+    return res, store.stats.delta(before)
+
+
 # --------------------------------------------------------------------------
 # k-NN query (best-first)
 # --------------------------------------------------------------------------
@@ -95,10 +173,12 @@ def knn_query(
     q = np.asarray(q, dtype=np.float64)
     counter = itertools.count()  # tie-breaker for heap ordering
     heap: list = [(0.0, next(counter), index.root)]
-    best: list = []  # max-heap of (-dist_sq, row)
+    best_d = np.full(0, np.inf)
+    best_r = np.zeros(0, dtype=np.int64)
     while heap:
         dist, _, node = heapq.heappop(heap)
-        if len(best) == k and dist > -best[0][0]:
+        kth = best_d.max() if len(best_d) == k else np.inf
+        if dist > kth:
             break
         store.read(node.page_id)
         if node.is_unrefined:
@@ -112,21 +192,79 @@ def knn_query(
         if node.is_leaf:
             pts = index.points[node.point_idx]
             d2 = np.sum((pts - q) ** 2, axis=1)
-            for dd, row in zip(d2, node.point_idx):
-                if len(best) < k:
-                    heapq.heappush(best, (-dd, int(row)))
-                elif dd < -best[0][0]:
-                    heapq.heapreplace(best, (-dd, int(row)))
+            best_d, best_r = _merge_topk(
+                best_d, best_r, d2, node.point_idx, k
+            )
         else:
-            kth = -best[0][0] if len(best) == k else np.inf
+            kth = best_d.max() if len(best_d) == k else np.inf
             for c in node.children:
                 md = mindist_sq(c.mbb, q)
                 if md <= kth:
                     heapq.heappush(heap, (md, next(counter), c))
-    rows = np.asarray(
-        [r for _, r in sorted(best, key=lambda t: -t[0])], dtype=np.int64
-    )
-    return rows, store.stats.delta(before)
+    order = np.argsort(best_d, kind="stable")
+    return best_r[order], store.stats.delta(before)
+
+
+def knn_query_batch(
+    index: Index,
+    qs: np.ndarray,
+    k: int,
+) -> tuple[list[np.ndarray], IOStats]:
+    """Execute ``Q`` k-NN queries against one leaf-table traversal.
+
+    The tree is walked once per batch: every branch page is read once and
+    the leaf boxes are collected into (L, d) arrays.  Each query then prunes
+    at leaf granularity — box mindists for all leaves in one vectorized
+    pass, leaves scanned in ascending-mindist order until the running k-th
+    distance certifies no unscanned leaf can compete (the best-first
+    guarantee).  Leaf page reads are charged per scan through the shared LRU
+    buffer, so overlapping queries in a batch hit the buffer instead of
+    re-reading.
+
+    Unrefined (AMBI) nodes are not supported here: a batch prunes with the
+    full leaf table, which an on-demand build does not have yet — fully
+    refine first or use per-query :func:`knn_query`.
+    """
+    store = index.store
+    before = store.stats.snapshot()
+    qs = np.atleast_2d(np.asarray(qs, dtype=np.float64))
+
+    # one traversal: collect leaves, charge each branch page once
+    leaves: list[Node] = []
+    stack = [index.root]
+    while stack:
+        node = stack.pop()
+        if node.is_unrefined:
+            raise RuntimeError(
+                "knn_query_batch requires a fully refined index"
+            )
+        if node.is_leaf:
+            leaves.append(node)
+        else:
+            store.read(node.page_id)
+            stack.extend(node.children)
+    leaf_lo = np.stack([l.mbb[0] for l in leaves])
+    leaf_hi = np.stack([l.mbb[1] for l in leaves])
+
+    results: list[np.ndarray] = []
+    for q in qs:
+        gap = np.maximum(leaf_lo - q, 0.0) + np.maximum(q - leaf_hi, 0.0)
+        mind = np.sum(gap * gap, axis=1)  # (L,)
+        order = np.argsort(mind, kind="stable")
+        best_d = np.full(0, np.inf)
+        best_r = np.zeros(0, dtype=np.int64)
+        for li in order:
+            if len(best_d) == k and mind[li] > best_d.max():
+                break
+            leaf = leaves[li]
+            store.read(leaf.page_id)
+            pts = index.points[leaf.point_idx]
+            d2 = np.sum((pts - q) ** 2, axis=1)
+            best_d, best_r = _merge_topk(
+                best_d, best_r, d2, leaf.point_idx, k
+            )
+        results.append(best_r[np.argsort(best_d, kind="stable")])
+    return results, store.stats.delta(before)
 
 
 # --------------------------------------------------------------------------

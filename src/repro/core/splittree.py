@@ -42,23 +42,23 @@ class FlatSplitTree:
         n = points.shape[0]
         if self.n_splits == 0:
             return np.zeros(n, dtype=np.int32)
-        node = np.zeros(n, dtype=np.int32)  # current internal node
+        # Full-width descent: every level is a handful of O(n) gathers with
+        # no per-level subset compaction (the tree is balanced, so the loop
+        # runs ~log2(n_leaves) times and finished lanes just idle).
+        node = np.zeros(n, dtype=np.int32)   # current internal node
         out = np.full(n, -1, dtype=np.int32)
-        live = np.ones(n, dtype=bool)
-        # Tree depth is bounded by n_splits; typical depth ~= log2(C_B).
+        done = np.zeros(n, dtype=bool)
         for _ in range(self.n_splits + 1):
-            if not live.any():
+            d = self.split_dim[node]
+            v = self.split_val[node]
+            coord = np.take_along_axis(points, d[:, None].astype(np.intp), 1)[:, 0]
+            nxt = np.where(coord > v, self.right[node], self.left[node])
+            leaf = (nxt < 0) & ~done
+            out[leaf] = -nxt[leaf] - 1
+            done |= leaf
+            node = np.where(done, node, nxt)
+            if done.all():
                 break
-            idx = node[live]
-            d = self.split_dim[idx]
-            v = self.split_val[idx]
-            go_right = points[live, d] > v
-            nxt = np.where(go_right, self.right[idx], self.left[idx])
-            leaf = nxt < 0
-            lidx = np.flatnonzero(live)
-            out[lidx[leaf]] = -nxt[leaf] - 1
-            node[lidx[~leaf]] = nxt[~leaf]
-            live[lidx[leaf]] = False
         return out
 
 

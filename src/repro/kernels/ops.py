@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from . import knn_topk as _knn
 from . import partition_assign as _pa
 from . import ref
+from . import window_filter as _wf
 
 
 def _on_tpu() -> bool:
@@ -62,19 +63,85 @@ def pairwise_dist2(queries, points, valid=None, *, qt=_knn.DEFAULT_QT,
     return d2[:nq, :n_p]
 
 
-def knn_topk(queries, points, k: int, valid=None, **kw):
+# ceiling on how many distance-matrix elements a single knn_topk dispatch
+# may materialize (fp32: 64 MiB); larger batches stream in query chunks
+KNN_MAX_ELEMS = 16 * 1024 * 1024
+
+
+def knn_topk(queries, points, k: int, valid=None, *,
+             query_chunk: int | None = None, **kw):
     """k nearest points per query: Pallas distance tiles + XLA top-k merge.
 
     Returns (indices (nq, k), dists_sq (nq, k)).  The selection stage is a
     plain ``top_k`` because it is bandwidth-trivial next to the distance
     matrix; on TPU the distance tiles stream from the kernel while top_k
-    consumes them (XLA fuses the consumer)."""
-    d2 = pairwise_dist2(queries, points, valid=valid, **kw)
-    neg, idx = jax.lax.top_k(-d2, k)
-    return idx, -neg
+    consumes them (XLA fuses the consumer).
+
+    Memory is capped: when the full (nq, np) distance matrix would exceed
+    ``KNN_MAX_ELEMS`` elements, the query axis is processed in chunks (of
+    ``query_chunk`` rows when given, else sized to the cap) so only one
+    chunk's distances are live at a time."""
+    nq = queries.shape[0]
+    n_p = points.shape[0]
+    if query_chunk is None and nq * max(n_p, 1) > KNN_MAX_ELEMS:
+        query_chunk = max(KNN_MAX_ELEMS // max(n_p, 1), 1)
+    if query_chunk is None or query_chunk >= nq:
+        d2 = pairwise_dist2(queries, points, valid=valid, **kw)
+        neg, idx = jax.lax.top_k(-d2, k)
+        return idx, -neg
+    idx_parts, dist_parts = [], []
+    for start in range(0, nq, query_chunk):
+        d2 = pairwise_dist2(
+            queries[start : start + query_chunk], points, valid=valid, **kw
+        )
+        neg, idx = jax.lax.top_k(-d2, k)
+        idx_parts.append(idx)
+        dist_parts.append(-neg)
+    return jnp.concatenate(idx_parts), jnp.concatenate(dist_parts)
+
+
+def window_count(lo, hi, points, valid=None, *, qt=_wf.DEFAULT_QT,
+                 pt=_wf.DEFAULT_PT, interpret: bool | None = None):
+    """In-window point counts per query box via the Pallas tile kernel."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    lo = jnp.asarray(lo, jnp.float32)
+    hi = jnp.asarray(hi, jnp.float32)
+    p = jnp.asarray(points, jnp.float32)
+    if valid is None:
+        valid = jnp.ones(p.shape[0], jnp.int32)
+    # query padding boxes are inverted (lo > hi): they can never match
+    lo_p, nq = _pad_rows(lo, qt, 1.0)
+    hi_p, _ = _pad_rows(hi, qt, 0.0)
+    pp, _ = _pad_rows(p, pt, 0.0)
+    vp, _ = _pad_rows(jnp.asarray(valid, jnp.int32), pt, 0)
+    cnt = _wf.window_count_tiles(
+        lo_p, hi_p, pp, vp, qt=qt, pt=pt, interpret=interpret
+    )
+    return cnt[:nq]
+
+
+def window_count_gathered(lo, hi, points, valid, *, pt=_wf.DEFAULT_PT,
+                          interpret: bool | None = None):
+    """Per-query gathered layout: ``points`` is (nq, npp, d) with its own
+    validity mask; the candidate axis is padded to a tile multiple here."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    lo = jnp.asarray(lo, jnp.float32)
+    hi = jnp.asarray(hi, jnp.float32)
+    p = jnp.asarray(points, jnp.float32)
+    v = jnp.asarray(valid, jnp.int32)
+    npp = p.shape[1]
+    npp_pad = -(-max(npp, 1) // pt) * pt
+    if npp_pad != npp:
+        p = jnp.pad(p, ((0, 0), (0, npp_pad - npp), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, npp_pad - npp)))
+    return _wf.window_count_gathered(lo, hi, p, v, pt=pt, interpret=interpret)
 
 
 # re-export oracles for test convenience
 partition_assign_ref = ref.partition_assign_ref
 pairwise_dist2_ref = ref.pairwise_dist2_ref
 knn_topk_ref = ref.knn_topk_ref
+window_count_ref = ref.window_count_ref
+window_count_gathered_ref = ref.window_count_gathered_ref

@@ -32,3 +32,21 @@ def knn_topk_ref(queries, points, valid, k: int):
     d2 = pairwise_dist2_ref(queries, points, valid)
     neg, idx = jax.lax.top_k(-d2, k)
     return idx, -neg
+
+
+def window_count_ref(lo, hi, points, valid):
+    """Reference window counting: one broadcast containment test."""
+    inside = jnp.all(
+        (points[None, :, :] >= lo[:, None, :])
+        & (points[None, :, :] <= hi[:, None, :]),
+        axis=-1,
+    ) & (valid[None, :] > 0)
+    return jnp.sum(inside, axis=1).astype(jnp.int32)
+
+
+def window_count_gathered_ref(lo, hi, points, valid):
+    """Reference for the per-query gathered layout: (nq, npp, d) points."""
+    inside = jnp.all(
+        (points >= lo[:, None, :]) & (points <= hi[:, None, :]), axis=-1
+    ) & (valid > 0)
+    return jnp.sum(inside, axis=1).astype(jnp.int32)

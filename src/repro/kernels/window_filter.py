@@ -1,0 +1,130 @@
+"""Pallas TPU kernel: tiled window-containment counting for range queries.
+
+The leaf-scan stage of batched window queries reduces to: for each query
+box, count the candidate points falling inside it.  On TPU this is a pure
+VPU problem — per (query-tile x point-tile) block the 2d coordinate
+comparisons and the popcount reduction stay resident in VMEM, and the
+per-query partial counts are accumulated across point tiles by revisiting
+the output block along the innermost grid dimension (the standard Pallas
+reduction idiom: zero on the first visit, ``+=`` afterwards).
+
+Two layouts are provided:
+
+  * :func:`window_count_tiles` — one shared point set scanned by every
+    query (the flat leaf table);
+  * :func:`window_count_gathered` — each query brings its own gathered
+    candidate points, the shape ``core.jax_index.window_count`` produces
+    after leaf-level pruning (query-major grid, one query row per block).
+
+Padding points carry ``valid == 0`` and never count, mirroring the row_id
+sentinel convention of ``kernels/knn_topk``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+DEFAULT_QT = 128
+DEFAULT_PT = 512
+
+
+def _tiles_kernel(lo_ref, hi_ref, p_ref, valid_ref, out_ref):
+    j = pl.program_id(1)
+    lo = lo_ref[...]                  # (qt, d)
+    hi = hi_ref[...]                  # (qt, d)
+    p = p_ref[...]                    # (pt, d)
+    valid = valid_ref[...]            # (pt,)
+    acc = jnp.broadcast_to(valid[None, :] > 0, (lo.shape[0], p.shape[0]))
+    for k in range(p.shape[1]):       # static unroll over dimensions keeps
+        pk = p[:, k][None, :]         # the working set at one (qt, pt) plane
+        acc = acc & (pk >= lo[:, k][:, None]) & (pk <= hi[:, k][:, None])
+    cnt = jnp.sum(acc.astype(jnp.int32), axis=1)
+
+    @pl.when(j == 0)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += cnt
+
+
+@functools.partial(jax.jit, static_argnames=("qt", "pt", "interpret"))
+def window_count_tiles(
+    lo: jnp.ndarray,        # (nq, d) float32, nq % qt == 0
+    hi: jnp.ndarray,        # (nq, d) float32
+    points: jnp.ndarray,    # (np, d) float32, np % pt == 0
+    valid: jnp.ndarray,     # (np,) int32: 1 = real point, 0 = padding
+    *,
+    qt: int = DEFAULT_QT,
+    pt: int = DEFAULT_PT,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """(nq,) in-window point counts over one shared point table."""
+    nq, d = lo.shape
+    n_p = points.shape[0]
+    assert nq % qt == 0 and n_p % pt == 0, "pad inputs to tile multiples"
+    grid = (nq // qt, n_p // pt)
+    return pl.pallas_call(
+        _tiles_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((qt, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((qt, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((pt, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((pt,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((qt,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nq,), jnp.int32),
+        interpret=interpret,
+    )(lo, hi, points, valid)
+
+
+def _gathered_kernel(lo_ref, hi_ref, p_ref, valid_ref, out_ref):
+    j = pl.program_id(1)
+    lo = lo_ref[...]                  # (1, d)
+    hi = hi_ref[...]                  # (1, d)
+    p = p_ref[...]                    # (1, pt, d)
+    valid = valid_ref[...]            # (1, pt)
+    acc = valid > 0
+    for k in range(p.shape[2]):
+        pk = p[..., k]                # (1, pt)
+        acc = acc & (pk >= lo[:, k][:, None]) & (pk <= hi[:, k][:, None])
+    cnt = jnp.sum(acc.astype(jnp.int32), axis=1)  # (1,)
+
+    @pl.when(j == 0)
+    def _():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += cnt
+
+
+@functools.partial(jax.jit, static_argnames=("pt", "interpret"))
+def window_count_gathered(
+    lo: jnp.ndarray,        # (nq, d) float32
+    hi: jnp.ndarray,        # (nq, d) float32
+    points: jnp.ndarray,    # (nq, npp, d) float32, npp % pt == 0
+    valid: jnp.ndarray,     # (nq, npp) int32
+    *,
+    pt: int = DEFAULT_PT,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """(nq,) in-window counts; each query scans its own gathered points."""
+    nq, npp, d = points.shape
+    assert npp % pt == 0, "pad the candidate axis to a tile multiple"
+    grid = (nq, npp // pt)
+    return pl.pallas_call(
+        _gathered_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, pt, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, pt), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((nq,), jnp.int32),
+        interpret=interpret,
+    )(lo, hi, points, valid)

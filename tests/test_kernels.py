@@ -75,6 +75,48 @@ def test_kernel_route_agrees_with_index_route():
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+@pytest.mark.parametrize("d", [2, 4])
+@pytest.mark.parametrize("qt,pt", [(64, 128), (128, 512)])
+def test_window_count_tiles_matches_ref(d, qt, pt):
+    rng = np.random.default_rng(d * 7 + qt)
+    lo = rng.random((150, d)).astype(np.float32) * 0.8  # ragged: padding
+    hi = lo + rng.uniform(0.05, 0.4, (150, d)).astype(np.float32)
+    p = rng.random((900, d)).astype(np.float32)
+    valid = (rng.random(900) > 0.15).astype(np.int32)
+    got = ops.window_count(lo, hi, p, valid, qt=qt, pt=pt)
+    want = ops.window_count_ref(
+        jnp.asarray(lo), jnp.asarray(hi), jnp.asarray(p), jnp.asarray(valid)
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert np.asarray(got).sum() > 0  # non-degenerate case
+
+
+@pytest.mark.parametrize("pt", [128, 512])
+def test_window_count_gathered_matches_ref(pt):
+    rng = np.random.default_rng(pt)
+    nq, npp, d = 13, 300, 3  # ragged candidate axis: exercises padding
+    lo = rng.random((nq, d)).astype(np.float32) * 0.7
+    hi = lo + 0.3
+    p = rng.random((nq, npp, d)).astype(np.float32)
+    valid = (rng.random((nq, npp)) > 0.1).astype(np.int32)
+    got = ops.window_count_gathered(lo, hi, p, valid, pt=pt)
+    want = ops.window_count_gathered_ref(
+        jnp.asarray(lo), jnp.asarray(hi), jnp.asarray(p), jnp.asarray(valid)
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_knn_topk_query_chunking_matches_unchunked():
+    """The memory-capped (chunked) path returns the unchunked answer."""
+    rng = np.random.default_rng(3)
+    q = rng.normal(0, 1, (70, 3)).astype(np.float32)
+    p = rng.normal(0, 1, (256, 3)).astype(np.float32)
+    gi, gd = ops.knn_topk(q, p, 5, qt=64, pt=128)
+    ci, cd = ops.knn_topk(q, p, 5, qt=64, pt=128, query_chunk=16)
+    np.testing.assert_allclose(np.asarray(cd), np.asarray(gd), rtol=1e-5)
+    np.testing.assert_array_equal(np.asarray(ci), np.asarray(gi))
+
+
 def test_dist2_dtype_f32_output_for_bf16_inputs():
     rng = np.random.default_rng(0)
     q = jnp.asarray(rng.normal(0, 1, (64, 4)), jnp.bfloat16)

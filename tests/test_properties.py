@@ -1,5 +1,10 @@
 """Property-based tests (hypothesis) on the system's invariants."""
 import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dev dependency (see requirements-dev.txt)"
+)
 from hypothesis import given, settings, strategies as st
 
 from repro.core import PageStore, bulk_load, window_oracle, window_query

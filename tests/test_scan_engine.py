@@ -1,0 +1,161 @@
+"""Vectorized scan engine vs the scalar reference implementation.
+
+Two layers of protection:
+
+  * unit: the prefix-sum Step-2 replay (`_replay_step2`) must reproduce the
+    scalar ``SubspaceBuffers`` state machine decision-for-decision on
+    adversarial assignment streams;
+  * golden: a full ``bulk_load`` under both engines must produce identical
+    ``IOStats``, identical page layout, and identical leaf partitions on a
+    fixed-seed dataset — and both must match the constants captured from the
+    seed (pre-vectorization) implementation, so neither engine can drift.
+"""
+import numpy as np
+import pytest
+
+from repro.core import (
+    PageStore,
+    bulk_load,
+    knn_oracle,
+    knn_query,
+    knn_query_batch,
+    window_oracle,
+    window_query,
+    window_query_batch,
+)
+from repro.core.fmbi import SubspaceBuffers, _replay_step2
+from repro.core.datasets import gaussian, osm_like
+
+# captured from the seed scalar implementation (commit b71a949) on the
+# fixed-seed datasets below: (reads, writes, allocated_pages)
+GOLDEN_OSM_120K = (555, 614, 411)
+GOLDEN_GAUSS_120K = (530, 589, 411)
+
+
+def _scalar_state(assign, c_b, c_l, M, alpha, store):
+    bufs = SubspaceBuffers(c_b, c_l, M, store, [alpha] * c_b)
+    for start in range(0, len(assign), c_l):
+        a = assign[start : start + c_l]
+        for s in np.unique(a):
+            bufs.add_points(int(s), int((a == s).sum()))
+    return bufs
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("skew", [False, True])
+def test_replay_matches_scalar_buffers(seed, skew):
+    rng = np.random.default_rng(seed)
+    c_b, c_l, M, alpha = 20, 8, 25, 1
+    n = 4000
+    if skew:
+        raw = rng.zipf(1.5, n)  # heavy skew: some subspaces flush repeatedly
+        assign = (raw % c_b).astype(np.int64)
+    else:
+        assign = rng.integers(0, c_b, n).astype(np.int64)
+    st_s, st_v = PageStore(M), PageStore(M)
+    bufs = _scalar_state(assign, c_b, c_l, M, alpha, st_s)
+    counts, disk, active = _replay_step2(assign, c_b, c_l, M, alpha, st_v)
+    assert st_v.stats.writes == st_s.stats.writes
+    np.testing.assert_array_equal(counts, bufs.counts)
+    np.testing.assert_array_equal(disk, bufs.disk_pages)
+    np.testing.assert_array_equal(active, bufs.active)
+
+
+def _leaf_partition(idx):
+    return sorted(
+        (int(l.page_id), tuple(sorted(l.point_idx.tolist())))
+        for l in idx.root.iter_leaves()
+    )
+
+
+@pytest.mark.parametrize(
+    "dataset,M,golden",
+    [
+        (lambda: osm_like(120_000, seed=3), 205, GOLDEN_OSM_120K),
+        # tiny buffer: exercises the Step-5 dense recursion under both engines
+        (lambda: gaussian(120_000, 2, seed=5), 230, GOLDEN_GAUSS_120K),
+    ],
+    ids=["osm120k", "gauss120k-dense"],
+)
+def test_bulk_load_engines_identical_and_golden(dataset, M, golden):
+    pts = dataset()
+    results = {}
+    for mode in ("scalar", "vectorized"):
+        store = PageStore(M)
+        idx = bulk_load(pts, M, store, step2=mode)
+        results[mode] = (
+            store.stats.reads,
+            store.stats.writes,
+            store.allocated_pages,
+            _leaf_partition(idx),
+        )
+    # identical IOStats + page layout + leaf partition between engines
+    assert results["scalar"][:3] == results["vectorized"][:3]
+    assert results["scalar"][3] == results["vectorized"][3]
+    # ... and both match the seed-captured constants
+    assert results["vectorized"][:3] == golden
+
+
+# --------------------------------------------------------------------------
+# batched query execution
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def built():
+    pts = osm_like(80_000, seed=9)
+    return pts, bulk_load(pts, 250)
+
+
+def test_window_query_batch_matches_oracle(built):
+    pts, idx = built
+    rng = np.random.default_rng(4)
+    c = rng.random((24, 2)) * 0.8
+    w = rng.uniform(0.01, 0.06, (24, 1))
+    los, his = c - w, c + w
+    res, io = window_query_batch(idx, los, his)
+    assert len(res) == 24 and io.total >= 0
+    for i in range(24):
+        ref = window_oracle(pts, los[i], his[i])
+        assert sorted(res[i].tolist()) == sorted(ref.tolist())
+
+
+def test_window_query_batch_amortizes_io(built):
+    pts, _ = built
+    rng = np.random.default_rng(5)
+    c = rng.random((32, 2)) * 0.8
+    los, his = c - 0.04, c + 0.04
+    idx_b = bulk_load(pts, 250)
+    _, io_batch = window_query_batch(idx_b, los, his)
+    idx_s = bulk_load(pts, 250)  # identical build, fresh LRU state
+    singles = 0
+    for i in range(32):
+        _, io = window_query(idx_s, los[i], his[i])
+        singles += io.total
+    assert io_batch.total <= singles
+
+
+def test_knn_query_batch_matches_oracle(built):
+    pts, idx = built
+    rng = np.random.default_rng(6)
+    qs = rng.random((12, 2))
+    for k in (1, 8, 32):
+        res, io = knn_query_batch(idx, qs, k)
+        assert io.total >= 0
+        for i, q in enumerate(qs):
+            ref = knn_oracle(pts, q, k)
+            np.testing.assert_allclose(
+                np.sort(np.sum((pts[res[i]] - q) ** 2, axis=1)),
+                np.sort(np.sum((pts[ref] - q) ** 2, axis=1)),
+            )
+
+
+def test_knn_batch_agrees_with_single(built):
+    pts, idx = built
+    rng = np.random.default_rng(7)
+    qs = rng.random((6, 2))
+    batch, _ = knn_query_batch(idx, qs, 16)
+    for i, q in enumerate(qs):
+        single, _ = knn_query(idx, q, 16)
+        np.testing.assert_allclose(
+            np.sort(np.sum((pts[batch[i]] - q) ** 2, axis=1)),
+            np.sort(np.sum((pts[single] - q) ** 2, axis=1)),
+        )
