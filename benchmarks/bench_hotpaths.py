@@ -5,8 +5,8 @@ Times the four paths the vectorized scan engine owns —
   * Step-2 routing + distribution (MST route, prefix-sum buffer replay,
     subspace gather),
   * Step-3 refinement (presorted minor-SplitTree recursion),
-  * batched window queries,
-  * batched k-NN queries,
+  * single + batched window queries (flat-table frontier traversal),
+  * single + batched k-NN queries (vectorized leaf-table pruning),
 
 plus the end-to-end ``bulk_load`` and the JAX candidate-leaf
 ``window_count``, and writes the numbers to ``BENCH_CORE.json`` at the repo
@@ -29,7 +29,14 @@ import time
 
 import numpy as np
 
-from repro.core import PageStore, bulk_load, knn_query_batch, window_query_batch
+from repro.core import (
+    PageStore,
+    bulk_load,
+    knn_query,
+    knn_query_batch,
+    window_query,
+    window_query_batch,
+)
 from repro.core.datasets import osm_like
 from repro.core.fmbi import _distribute_vectorized, refine_subspace
 from repro.core.pagestore import branch_capacity, leaf_capacity
@@ -51,7 +58,9 @@ SMOKE_CEILINGS_S = {
     "step2_route_distribute": 1.0,
     "refine": 1.5,
     "bulk_load": 4.0,
+    "window_single": 2.0,
     "window_batch": 1.5,
+    "knn_single": 2.0,
     "knn_batch": 1.5,
 }
 
@@ -120,15 +129,22 @@ def run(n: int = 600_000, seed: int = 0, repeats: int = 3) -> dict:
             SEED_BULK_LOAD_600K_S / results["bulk_load_s"], 2
         )
 
-    # ---- batched queries -------------------------------------------------
+    # ---- query paths (single + batched) ---------------------------------
     idx = bulk_load(pts, M, PageStore(M))
     qrng = np.random.default_rng(1)
     centers = qrng.random((64, d)) * 0.9
     los, his = centers - 0.02, centers + 0.02
+    results["window_single_64_s"] = _timed(
+        lambda: [window_query(idx, los[i], his[i]) for i in range(64)],
+        repeats,
+    )
     results["window_batch_64_s"] = _timed(
         lambda: window_query_batch(idx, los, his), repeats
     )
     qs = qrng.random((64, d))
+    results["knn_single_64_k16_s"] = _timed(
+        lambda: [knn_query(idx, qs[i], 16) for i in range(64)], repeats
+    )
     results["knn_batch_64_k16_s"] = _timed(
         lambda: knn_query_batch(idx, qs, 16), repeats
     )
@@ -176,7 +192,9 @@ def main(argv=None) -> int:
             "step2_route_distribute": res["step2_route_distribute_s"],
             "refine": res["refine_s"],
             "bulk_load": res["bulk_load_s"],
+            "window_single": res["window_single_64_s"],
             "window_batch": res["window_batch_64_s"],
+            "knn_single": res["knn_single_64_k16_s"],
             "knn_batch": res["knn_batch_64_k16_s"],
         }
         for name, got in checks.items():

@@ -4,6 +4,7 @@ from .baselines import LOADERS, bulk_load_hilbert, bulk_load_kdb
 from .baselines import bulk_load_omt, bulk_load_str, bulk_load_waffle
 from .fmbi import Index, Node, bulk_load, refine_subspace
 from .metrics import leaf_stats
+from .nodetable import NodeTable, NodeView
 from .pagestore import IOStats, PageStore, branch_capacity, leaf_capacity
 from .queries import (
     knn_oracle,
@@ -36,6 +37,8 @@ __all__ = [
     "knn_query_batch",
     "leaf_capacity",
     "leaf_stats",
+    "NodeTable",
+    "NodeView",
     "refine_subspace",
     "window_oracle",
     "window_query",

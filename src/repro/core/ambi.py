@@ -42,6 +42,7 @@ from typing import Callable, Optional
 import numpy as np
 
 from .fmbi import Index, Node, merge_branches, refine_subspace
+from .nodetable import NodeTable, NodeView
 from .pagestore import PageStore, branch_capacity, leaf_capacity
 from .queries import knn_query, mindist_sq, window_query
 from .splittree import build_group_median_tree, mbb_of
@@ -64,14 +65,18 @@ class AMBI:
         self.c_l = leaf_capacity(d)
         self.c_b = branch_capacity(d)
         root_page = self.store.alloc()
-        self.root = Node(
+        self.table = NodeTable.single_unrefined(
             mbb=mbb_of(points) if n else np.zeros((2, d)),
             page_id=root_page,
             raw_pages=-(-n // self.c_l),
-            raw_points=np.arange(n),
+            rows=np.arange(n),
         )
         self._query_dist: Callable[[np.ndarray], float] = lambda mbb: 0.0
-        self.index = Index(self.root, d, self.c_l, self.c_b, self.store, points)
+        self.index = Index(self.table, d, self.c_l, self.c_b, self.store, points)
+
+    @property
+    def root(self) -> NodeView:
+        return self.index.root
 
     # -- public query API --------------------------------------------------
     def window(self, lo, hi):
@@ -86,34 +91,32 @@ class AMBI:
         return knn_query(self.index, q, k, refiner=self._refine)
 
     def is_fully_refined(self) -> bool:
-        stack = [self.root]
-        while stack:
-            n = stack.pop()
-            if n.is_unrefined:
-                return False
-            if n.children:
-                stack.extend(n.children)
-        return True
+        return not bool(self.table.unrefined.any())
 
     # -- refinement --------------------------------------------------------
-    def _refine(self, node: Node) -> Optional[Node]:
-        """Refine an unrefined node in place; returns it (or None if empty)."""
-        idx = node.raw_points
-        if idx is None or len(idx) == 0:
-            return None
+    def _refine(self, row: int) -> bool:
+        """Refine unrefined table ``row`` in place (the construction
+        machinery assembles a transient ``Node`` subtree which is grafted
+        into the table); returns False when the row holds no points."""
+        idx = self.table.point_rows(row)
+        if len(idx) == 0:
+            return False
+        idx = idx.copy()  # graft appends to perm; detach the live view
         pages = -(-len(idx) // self.c_l)
         if pages <= self.M:
             # sparse: reload its pages and refine with Algorithm 1
-            self.store.read_run(node.raw_pages)
+            self.store.read_run(int(self.table.raw_pages[row]))
             entries = refine_subspace(
                 self.points, idx, self.c_l, self.c_b, self.store
             )
-            _become(node, entries, self.points, idx)
-            return node
-        return self._adaptive_build(node)
+        else:
+            entries = self._adaptive_build(idx)
+        self.table.graft(row, entries)
+        return True
 
-    def _adaptive_build(self, node: Node) -> Node:
-        """Adaptive Steps 1-4 scoped to a dense unrefined node."""
+    def _adaptive_build(self, idx: np.ndarray) -> list[Node]:
+        """Adaptive Steps 1-4 scoped to a dense unrefined row; returns its
+        root entry list."""
         points, store, c_l, c_b, M = (
             self.points,
             self.store,
@@ -121,7 +124,6 @@ class AMBI:
             self.c_b,
             self.M,
         )
-        idx = node.raw_points
         n = len(idx)
         p_total = -(-n // c_l)
         alpha = max(M // c_b, 1)
@@ -409,9 +411,7 @@ class AMBI:
                 page = store.alloc()
                 store.write(page)
                 tn.page_id = page
-        entries = [tn for tn in top_nodes if tn is not None]
-        _become(node, entries, points, idx)
-        return node
+        return [tn for tn in top_nodes if tn is not None]
 
 
 def _mergeable(n: Optional[Node]) -> bool:
@@ -424,28 +424,6 @@ def _assign_pages(groups, store) -> None:
         store.write(page)
         for nd in group:
             nd.page_id = page
-
-
-def _become(node: Node, entries: list[Node], points, idx) -> None:
-    """Mutate an unrefined node into its refined form (keeps parent links)."""
-    node.raw_points = None
-    node.raw_pages = 0
-    if len(entries) == 1:
-        e = entries[0]
-        node.mbb = e.mbb
-        node.page_id = e.page_id
-        node.children = e.children
-        node.point_idx = e.point_idx
-        node.raw_pages = e.raw_pages
-        node.raw_points = e.raw_points
-    else:
-        node.children = entries
-        node.mbb = np.stack(
-            [
-                np.min([e.mbb[0] for e in entries], axis=0),
-                np.max([e.mbb[1] for e in entries], axis=0),
-            ]
-        )
 
 
 def _mindist_box_sq(mbb: np.ndarray, lo: np.ndarray, hi: np.ndarray) -> float:

@@ -29,6 +29,7 @@ import numpy as np
 
 from . import jax_index
 from .fmbi import Index, bulk_load
+from .nodetable import NodeTable
 from .pagestore import IOStats, PageStore, branch_capacity, leaf_capacity
 from .splittree import build_group_median_tree
 
@@ -48,6 +49,7 @@ class ParallelBuild:
     indexes: list[Index]
     central_io: IOStats
     per_server_io: list[IOStats]
+    row_maps: list[np.ndarray] = dataclasses.field(default_factory=list)
 
     @property
     def makespan_io(self) -> int:
@@ -57,6 +59,36 @@ class ParallelBuild:
     @property
     def total_io(self) -> int:
         return self.central_io.total + sum(s.total for s in self.per_server_io)
+
+    def merged_table(self) -> NodeTable:
+        """Combine the per-server node tables into one global table.
+
+        Local dataset rows are mapped back to global ids through
+        ``row_maps`` and each server's page ids are shifted into a single
+        flat page namespace, so the result is a shippable snapshot of the
+        whole distributed index: a synthetic root over the m server roots
+        that any client can query (or ``NodeTable.save``) without touching
+        the per-server stores.
+        """
+        offsets, off = [], 0
+        for idx in self.indexes:
+            offsets.append(off)
+            off += idx.store.allocated_pages
+        return NodeTable.merged(
+            [idx.table for idx in self.indexes],
+            self.row_maps,
+            offsets,
+            root_page=off,
+        )
+
+    def merged_index(self, points: np.ndarray, buffer_pages: int) -> Index:
+        """A queryable :class:`Index` over :meth:`merged_table` with a fresh
+        (cold) page store — the client-side view of the cluster's index."""
+        d = points.shape[1]
+        table = self.merged_table()
+        store = PageStore(buffer_pages)
+        store.mark_allocated(int(table.page_id.max()) + 1)
+        return Index(table, d, leaf_capacity(d), branch_capacity(d), store, points)
 
 
 def parallel_bulk_load(
@@ -73,7 +105,7 @@ def parallel_bulk_load(
     if m == 1:
         store = PageStore(buffer_pages)
         idx = bulk_load(points, buffer_pages, store, rng)
-        return ParallelBuild([idx], IOStats(), [store.stats])
+        return ParallelBuild([idx], IOStats(), [store.stats], [np.arange(n)])
 
     # central server: SplitTree with m-1 splits over a gamma*m page sample
     gamma = max(buffer_pages // m, 1)
@@ -94,7 +126,7 @@ def parallel_bulk_load(
     rest_assign = tree.route(points[rest]) if len(rest) else np.zeros(0, np.int32)
 
     server_buffer = max(buffer_pages // m, branch_capacity(d) + 1)
-    indexes, per_io = [], []
+    indexes, per_io, row_maps = [], [], []
     for s in range(m):
         rows = np.concatenate(
             [samp[:trim][samp_assign == s], rest[rest_assign == s]]
@@ -103,7 +135,8 @@ def parallel_bulk_load(
         idx = bulk_load(points[rows], server_buffer, store, rng)
         indexes.append(idx)
         per_io.append(store.stats)
-    return ParallelBuild(indexes, central.stats, per_io)
+        row_maps.append(rows)
+    return ParallelBuild(indexes, central.stats, per_io, row_maps)
 
 
 def parallel_window_cost(

@@ -14,10 +14,11 @@ page granularity, faithfully following the paper's cost accounting:
           entry lists share disk pages
   Step 5  recursively bulk load each *dense* subspace as a fresh dataset
 
-The in-memory ``Node`` tree doubles as the physical index: every node carries
-the id of the disk page its entry list (branch) or point payload (leaf) lives
-on, so query processing can charge buffered page reads exactly like the
-paper's framework.
+Construction assembles a transient ``Node`` tree — every node carries the id
+of the disk page its entry list (branch) or point payload (leaf) lives on —
+which ``bulk_load`` flattens into the flat :class:`~repro.core.nodetable.NodeTable`
+the query layer traverses; page-read charging through the table is
+bit-identical to walking the tree (see ``core/queries.py``).
 
 Scan engine
 -----------
@@ -52,6 +53,7 @@ from typing import Optional
 
 import numpy as np
 
+from .nodetable import NodeTable, NodeView
 from .pagestore import IOStats, PageStore, branch_capacity, leaf_capacity
 from .splittree import (
     FlatSplitTree,
@@ -100,39 +102,68 @@ class Node:
                 stack.extend(n.children)
 
 
-@dataclasses.dataclass
 class Index:
-    root: Node
-    dim: int
-    leaf_cap: int
-    branch_cap: int
-    store: PageStore
-    points: np.ndarray  # the dataset (index leaves reference rows)
+    """A built index: a flat :class:`NodeTable` plus its substrate.
+
+    The table is the query-time representation (see ``core/nodetable.py``);
+    construction code passes the transient ``Node`` tree it assembled and
+    the constructor flattens it.  ``root`` exposes a thin read-only
+    ``NodeView`` for code that still walks the object shape (metrics,
+    tests, examples).
+    """
+
+    def __init__(self, root, dim, leaf_cap, branch_cap, store, points):
+        if isinstance(root, NodeTable):
+            self.table = root
+        else:
+            self.table = NodeTable.from_tree(root, dim, n_points_hint=len(points))
+        self.dim = dim
+        self.leaf_cap = leaf_cap
+        self.branch_cap = branch_cap
+        self.store = store
+        self.points = points  # the dataset (leaf perm ranges reference rows)
+
+    @property
+    def root(self) -> NodeView:
+        return NodeView(self.table, 0)
 
     def count_nodes(self) -> tuple[int, int]:
-        leaves = branches = 0
-        stack = [self.root]
-        while stack:
-            n = stack.pop()
-            if n.is_leaf:
-                leaves += 1
-            elif n.is_unrefined:
-                pass
-            else:
-                branches += 1
-                stack.extend(n.children)
+        t = self.table
+        leaves = int(((t.leaf_start >= 0) & ~t.unrefined).sum())
+        branches = int((t.child_count > 0).sum())
         return leaves, branches
 
     def distinct_pages(self) -> int:
         """Physical index size in pages (merged nodes share pages)."""
-        pages = set()
-        stack = [self.root]
-        while stack:
-            n = stack.pop()
-            pages.add(n.page_id)
-            if n.children:
-                stack.extend(n.children)
-        return len(pages)
+        return len(np.unique(self.table.page_id))
+
+    # -- snapshots ---------------------------------------------------------
+    def save(self, path, *, include_points: bool = True) -> None:
+        """Single-``.npz`` snapshot: table + substrate metadata (+ points)."""
+        self.table.save(
+            path,
+            points=self.points if include_points else None,
+            extra={
+                "buffer_pages": self.store.buffer.capacity,
+                "next_page_id": self.store.allocated_pages,
+            },
+        )
+
+    @classmethod
+    def load(cls, path, points: Optional[np.ndarray] = None) -> "Index":
+        """Rebuild an :class:`Index` from a snapshot with a fresh (cold)
+        ``PageStore`` of the original buffer capacity."""
+        table, meta, pts = NodeTable.load(path)
+        if points is not None:
+            pts = points
+        if pts is None:
+            raise ValueError("snapshot has no points; pass them explicitly")
+        store = PageStore(int(meta.get("buffer_pages", 64)))
+        store.mark_allocated(
+            int(meta.get("next_page_id", int(table.page_id.max()) + 1))
+        )
+        d = pts.shape[1]
+        return cls(table, d, leaf_capacity(d), branch_capacity(d), store, pts)
 
 
 # --------------------------------------------------------------------------
@@ -554,16 +585,40 @@ def bulk_load(
     *,
     charge_source_read: bool = True,
     step2: str = "vectorized",
-    _depth: int = 0,
 ) -> Index:
     """Bulk load FMBI over ``points`` with a ``buffer_pages`` buffer.
 
     ``step2`` selects the distribution engine: ``"vectorized"`` (default,
     prefix-sum replay) or ``"scalar"`` (the page-by-page reference loop);
-    both produce identical indexes and identical ``IOStats``.
+    both produce identical indexes and identical ``IOStats``.  The result is
+    a flat :class:`Index` (the construction tree is flattened into a
+    :class:`NodeTable` and discarded).
     """
     rng = rng or np.random.default_rng(0)
     store = store or PageStore(buffer_pages)
+    d = points.shape[1]
+    root = _bulk_load_tree(
+        points,
+        buffer_pages,
+        store,
+        rng,
+        charge_source_read=charge_source_read,
+        step2=step2,
+    )
+    return Index(root, d, leaf_capacity(d), branch_capacity(d), store, points)
+
+
+def _bulk_load_tree(
+    points: np.ndarray,
+    buffer_pages: int,
+    store: PageStore,
+    rng: np.random.Generator,
+    *,
+    charge_source_read: bool = True,
+    step2: str = "vectorized",
+    _depth: int = 0,
+) -> Node:
+    """The five-step construction; returns the transient ``Node`` root."""
     n, d = points.shape
     c_l = leaf_capacity(d)
     c_b = branch_capacity(d)
@@ -576,12 +631,10 @@ def bulk_load(
             store.read_run(p_total)
         entries = refine_subspace(points, np.arange(n), c_l, c_b, store)
         if len(entries) == 1:
-            root = entries[0]
-        else:
-            page = store.alloc()
-            store.write(page)
-            root = Node(mbb=mbb_of(points), page_id=page, children=entries)
-        return Index(root, d, c_l, c_b, store, points)
+            return entries[0]
+        page = store.alloc()
+        store.write(page)
+        return Node(mbb=mbb_of(points), page_id=page, children=entries)
 
     # ---- Step 1: initial partitioning / Major SplitTree -----------------
     sample_pages = alpha * c_b
@@ -660,7 +713,7 @@ def bulk_load(
     for s in dense:
         if counts[s] - disk_pages[s] * c_l > 0:  # trailing partial page
             store.write_run(1)
-        sub = bulk_load(
+        sub_root = _bulk_load_tree(
             points[sub_idx[s]],
             buffer_pages,
             store,
@@ -669,17 +722,16 @@ def bulk_load(
             step2=step2,
             _depth=_depth + 1,
         )
-        _rebase_leaves(sub.root, sub_idx[s])
-        subspace_nodes[s] = sub.root
+        _rebase_leaves(sub_root, sub_idx[s])
+        subspace_nodes[s] = sub_root
 
     root_page = store.alloc()
     store.write(root_page)
-    root = Node(
+    return Node(
         mbb=mbb_of(points),
         page_id=root_page,
         children=[sn for sn in subspace_nodes if sn is not None],
     )
-    return Index(root, d, c_l, c_b, store, points)
 
 
 def _rebase_leaves(node: Node, base_idx: np.ndarray) -> None:

@@ -133,6 +133,17 @@ def pad_points(points: np.ndarray, levels: int) -> tuple[np.ndarray, np.ndarray]
 
 
 @jax.jit
+def nearest_leaf(index: JaxIndex, queries: jnp.ndarray) -> jnp.ndarray:
+    """Leaf id with the smallest box mindist per query (0 for the containing
+    leaf).  Works on any index — including tables bridged through
+    ``NodeTable.to_jax_index``, which carry no split tables for ``route``."""
+    gap = jnp.maximum(index.leaf_lo[None] - queries[:, None, :], 0.0) + jnp.maximum(
+        queries[:, None, :] - index.leaf_hi[None], 0.0
+    )
+    return jnp.argmin(jnp.sum(gap * gap, axis=2), axis=1).astype(jnp.int32)
+
+
+@jax.jit
 def route(index: JaxIndex, queries: jnp.ndarray) -> jnp.ndarray:
     """Leaf id for each query point — the Step-2 routing loop."""
     q = queries

@@ -1,11 +1,16 @@
-"""Index quality metrics: the paper's Table 1 / Figure 4 statistics."""
+"""Index quality metrics: the paper's Table 1 / Figure 4 statistics.
+
+Computed straight off the flat :class:`~repro.core.nodetable.NodeTable` —
+leaf extents, fills, and subtree cardinalities are column reductions, not
+object-graph walks.
+"""
 from __future__ import annotations
 
 import dataclasses
 
 import numpy as np
 
-from .fmbi import Index, Node
+from .fmbi import Index
 
 
 @dataclasses.dataclass
@@ -23,62 +28,47 @@ class LeafStats:
 
 
 def leaf_stats(index: Index) -> LeafStats:
-    sides_sum = 0.0
-    area_sum = 0.0
-    count = 0
-    fill = 0.0
-    for leaf in index.root.iter_leaves():
-        ext = leaf.mbb[1] - leaf.mbb[0]
-        sides_sum += float(ext.sum())
-        area_sum += float(np.prod(ext))
-        count += 1
-        fill += len(leaf.point_idx) / index.leaf_cap
-    # root-entry balance (Fig 4a)
-    sizes = []
-    if index.root.children:
-        for c in index.root.children:
-            sizes.append(_subtree_points(c))
-    sizes = np.asarray(sizes if sizes else [1], dtype=np.float64)
+    t = index.table
+    rows = t.leaf_rows()
+    ext = t.mbb_hi[rows] - t.mbb_lo[rows]
+    count = len(rows)
+    sides_sum = float(ext.sum())
+    area_sum = float(np.prod(ext, axis=1).sum()) if count else 0.0
+    fill = float(t.leaf_count[rows].sum()) / (max(count, 1) * index.leaf_cap)
+    # root-entry balance (Fig 4a): points under each child of the root
+    # (unrefined subtrees count their raw ranges)
+    if t.child_count[0] > 0:
+        subtree = t.subtree_points()
+        sizes = subtree[
+            t.first_child[0] : t.first_child[0] + t.child_count[0]
+        ].astype(np.float64)
+    else:
+        sizes = np.asarray([1.0])
     mean = sizes.mean() if sizes.size else 1.0
     return LeafStats(
         count=count,
         total_area=area_sum,
         total_perimeter=2.0 * sides_sum,
-        avg_fill=fill / max(count, 1),
+        avg_fill=fill,
         max_over_mean=float(sizes.max() / mean),
         min_over_mean=float(sizes.min() / mean),
     )
 
 
-def _subtree_points(node: Node) -> int:
-    total = 0
-    stack = [node]
-    while stack:
-        n = stack.pop()
-        if n.is_leaf:
-            total += len(n.point_idx)
-        elif n.is_unrefined:
-            total += len(n.raw_points)
-        elif n.children:
-            stack.extend(n.children)
-    return total
-
-
 def overlap_area_2d(index: Index) -> float:
     """Total pairwise overlap area of sibling leaf MBBs (0 for FMBI by
     construction; positive for Hilbert packing)."""
-    leaves = list(index.root.iter_leaves())
-    if not leaves or index.dim != 2:
+    t = index.table
+    rows = t.leaf_rows()
+    if len(rows) == 0 or index.dim != 2:
         return 0.0
-    boxes = np.stack([l.mbb for l in leaves])  # (n, 2, d)
-    n = len(boxes)
+    los, his = t.mbb_lo[rows], t.mbb_hi[rows]
+    n = len(rows)
     total = 0.0
-    # grid-bucket to avoid O(n^2) for large leaf counts
     for i in range(n):
-        lo_i, hi_i = boxes[i]
         j = slice(i + 1, n)
-        lo = np.maximum(boxes[j, 0], lo_i)
-        hi = np.minimum(boxes[j, 1], hi_i)
+        lo = np.maximum(los[j], los[i])
+        hi = np.minimum(his[j], his[i])
         ext = np.clip(hi - lo, 0.0, None)
         total += float(np.prod(ext, axis=1).sum())
     return total

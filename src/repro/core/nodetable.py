@@ -1,0 +1,628 @@
+"""Flat index core: one array-backed node table for FMBI/AMBI.
+
+The paper's indexes are defined by arrays-of-pages semantics — near-full,
+zero-overlap nodes — yet the seed reproduction traversed a Python ``Node``
+object graph one node at a time.  This module is the structure-of-arrays
+representation every layer now shares (the move skd-tree and Flood make:
+commit to an array encoding so traversal becomes vectorized arithmetic):
+
+  * ``mbb_lo`` / ``mbb_hi``  (N, d)  node bounding boxes, split columns so
+    whole-frontier intersection tests are two broadcast comparisons;
+  * ``first_child`` / ``child_count``  CSR child ranges: the children of row
+    ``i`` are rows ``first_child[i] : first_child[i] + child_count[i]``
+    (rows are laid out level-by-level, so sibling blocks are contiguous and
+    a frontier expands with one ragged-range gather);
+  * ``page_id``  the disk page backing each node (merged Step-4 nodes share
+    a page, exactly as in the object graph);
+  * ``leaf_start`` / ``leaf_count``  point ranges into ``perm``, a
+    leaf-contiguous permutation of dataset row ids (−1 start for branches);
+  * ``unrefined`` / ``raw_pages``  AMBI's deferred nodes: an unrefined row
+    owns raw disk pages and a ``perm`` range not yet formed into a subtree.
+
+The table is the *query-time* representation.  Construction (FMBI Steps 1–5,
+AMBI's adaptive build, the sort-based baselines) still assembles transient
+``Node`` objects — that machinery is what charges paper-faithful I/O — and
+flattens them here once; ``NodeView`` is the thin read-only object view kept
+for tests, metrics, and examples that walk ``index.root``.
+
+Because the table is plain arrays it is also the serialization and
+accelerator boundary: ``save``/``load`` snapshot an index (optionally with
+its points) into a single ``.npz``, ``merged`` combines per-server tables
+into one global index for distributed snapshot shipping, and
+``to_jax_index`` re-lays the leaf level into the ``JaxIndex`` grid so the
+serving path can boot from a snapshot without rebuilding.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+
+
+# --------------------------------------------------------------------------
+# ragged-range helper (shared with queries.py)
+# --------------------------------------------------------------------------
+def ragged_ranges(starts: np.ndarray, counts: np.ndarray) -> np.ndarray:
+    """Concatenate ``[starts[i], starts[i]+counts[i])`` into one index array
+    without a Python loop (the standard repeat/cumsum trick)."""
+    counts = np.asarray(counts, dtype=np.int64)
+    total = int(counts.sum())
+    if total == 0:
+        return np.zeros(0, dtype=np.int64)
+    offs = np.cumsum(counts) - counts
+    return np.repeat(np.asarray(starts, dtype=np.int64) - offs, counts) + np.arange(
+        total, dtype=np.int64
+    )
+
+
+class NodeTable:
+    """Structure-of-arrays index representation (see module docstring).
+
+    Rows are appended through an amortized-doubling growth policy so AMBI
+    refinement — which grafts freshly built subtrees under unrefined rows —
+    costs O(rows added), not O(table) per refinement.  Public accessors
+    return views trimmed to the live row/perm counts.
+    """
+
+    __slots__ = (
+        "dim",
+        "_n",
+        "_np",
+        "_mbb_lo",
+        "_mbb_hi",
+        "_page_id",
+        "_first_child",
+        "_child_count",
+        "_leaf_start",
+        "_leaf_count",
+        "_raw_pages",
+        "_unrefined",
+        "_perm",
+        "_dfs",
+    )
+
+    def __init__(self, dim: int, node_capacity: int = 8, perm_capacity: int = 8):
+        self.dim = int(dim)
+        self._n = 0
+        self._np = 0
+        self._mbb_lo = np.zeros((node_capacity, dim))
+        self._mbb_hi = np.zeros((node_capacity, dim))
+        self._page_id = np.zeros(node_capacity, dtype=np.int64)
+        self._first_child = np.zeros(node_capacity, dtype=np.int64)
+        self._child_count = np.zeros(node_capacity, dtype=np.int64)
+        self._leaf_start = np.full(node_capacity, -1, dtype=np.int64)
+        self._leaf_count = np.zeros(node_capacity, dtype=np.int64)
+        self._raw_pages = np.zeros(node_capacity, dtype=np.int64)
+        self._unrefined = np.zeros(node_capacity, dtype=bool)
+        self._perm = np.zeros(perm_capacity, dtype=np.int64)
+        self._dfs: Optional[np.ndarray] = None
+
+    # -- trimmed views -----------------------------------------------------
+    @property
+    def n_nodes(self) -> int:
+        return self._n
+
+    @property
+    def n_perm(self) -> int:
+        return self._np
+
+    @property
+    def mbb_lo(self) -> np.ndarray:
+        return self._mbb_lo[: self._n]
+
+    @property
+    def mbb_hi(self) -> np.ndarray:
+        return self._mbb_hi[: self._n]
+
+    @property
+    def page_id(self) -> np.ndarray:
+        return self._page_id[: self._n]
+
+    @property
+    def first_child(self) -> np.ndarray:
+        return self._first_child[: self._n]
+
+    @property
+    def child_count(self) -> np.ndarray:
+        return self._child_count[: self._n]
+
+    @property
+    def leaf_start(self) -> np.ndarray:
+        return self._leaf_start[: self._n]
+
+    @property
+    def leaf_count(self) -> np.ndarray:
+        return self._leaf_count[: self._n]
+
+    @property
+    def raw_pages(self) -> np.ndarray:
+        return self._raw_pages[: self._n]
+
+    @property
+    def unrefined(self) -> np.ndarray:
+        return self._unrefined[: self._n]
+
+    @property
+    def perm(self) -> np.ndarray:
+        return self._perm[: self._np]
+
+    # -- row classification ------------------------------------------------
+    def is_leaf_row(self, rows) -> np.ndarray:
+        return (self.leaf_start[rows] >= 0) & ~self.unrefined[rows]
+
+    def leaf_rows(self) -> np.ndarray:
+        return np.flatnonzero((self.leaf_start >= 0) & ~self.unrefined)
+
+    def point_rows(self, row: int) -> np.ndarray:
+        """Dataset row ids of a leaf/unrefined row (view into ``perm``)."""
+        s = int(self._leaf_start[row])
+        if s < 0:
+            return np.zeros(0, dtype=np.int64)
+        return self._perm[s : s + int(self._leaf_count[row])]
+
+    def children_of(self, row: int) -> range:
+        f = int(self._first_child[row])
+        return range(f, f + int(self._child_count[row]))
+
+    # -- growth ------------------------------------------------------------
+    def _grow_nodes(self, k: int) -> int:
+        """Reserve ``k`` rows; returns the first new row id."""
+        need = self._n + k
+        cap = len(self._page_id)
+        if need > cap:
+            new = max(need, 2 * cap)
+            grow2 = lambda a: np.concatenate(
+                [a, np.zeros((new - cap, self.dim), a.dtype)]
+            )
+            grow1 = lambda a, fill=0: np.concatenate(
+                [a, np.full(new - cap, fill, a.dtype)]
+            )
+            self._mbb_lo = grow2(self._mbb_lo)
+            self._mbb_hi = grow2(self._mbb_hi)
+            self._page_id = grow1(self._page_id)
+            self._first_child = grow1(self._first_child)
+            self._child_count = grow1(self._child_count)
+            self._leaf_start = grow1(self._leaf_start, -1)
+            self._leaf_count = grow1(self._leaf_count)
+            self._raw_pages = grow1(self._raw_pages)
+            self._unrefined = grow1(self._unrefined)
+        first = self._n
+        self._n = need
+        return first
+
+    def _append_perm(self, rows: np.ndarray) -> int:
+        """Append dataset row ids to ``perm``; returns their start offset."""
+        k = len(rows)
+        need = self._np + k
+        cap = len(self._perm)
+        if need > cap:
+            new = max(need, 2 * cap)
+            self._perm = np.concatenate(
+                [self._perm, np.zeros(new - cap, np.int64)]
+            )
+        start = self._np
+        self._perm[start:need] = rows
+        self._np = need
+        return start
+
+    # -- construction from a Node tree ------------------------------------
+    def _set_row(self, row: int, node) -> None:
+        """Write one construction ``Node``'s scalar fields into ``row``
+        (children, if any, are linked by the caller)."""
+        self._mbb_lo[row] = node.mbb[0]
+        self._mbb_hi[row] = node.mbb[1]
+        self._page_id[row] = node.page_id
+        self._first_child[row] = 0
+        self._child_count[row] = 0
+        self._raw_pages[row] = 0
+        self._unrefined[row] = False
+        if node.point_idx is not None:  # leaf
+            self._leaf_start[row] = self._append_perm(
+                np.asarray(node.point_idx, dtype=np.int64)
+            )
+            self._leaf_count[row] = len(node.point_idx)
+        elif node.raw_points is not None:  # AMBI unrefined
+            self._leaf_start[row] = self._append_perm(
+                np.asarray(node.raw_points, dtype=np.int64)
+            )
+            self._leaf_count[row] = len(node.raw_points)
+            self._raw_pages[row] = node.raw_pages
+            self._unrefined[row] = True
+        else:
+            self._leaf_start[row] = -1
+            self._leaf_count[row] = 0
+
+    def _append_level_order(self, queue: list, rows: list[int]) -> None:
+        """Flatten ``queue[i]``'s subtrees below already-written ``rows[i]``,
+        level by level, so every sibling block is contiguous."""
+        head = 0
+        while head < len(queue):
+            node, row = queue[head], rows[head]
+            head += 1
+            kids = node.children
+            if not kids:
+                continue
+            first = self._grow_nodes(len(kids))
+            self._first_child[row] = first
+            self._child_count[row] = len(kids)
+            for j, kid in enumerate(kids):
+                self._set_row(first + j, kid)
+                queue.append(kid)
+                rows.append(first + j)
+        self._dfs = None
+
+    @classmethod
+    def from_tree(cls, root, dim: int, n_points_hint: int = 0) -> "NodeTable":
+        """Flatten a construction ``Node`` tree (level order, root = row 0)."""
+        t = cls(dim, node_capacity=16, perm_capacity=max(n_points_hint, 16))
+        t._grow_nodes(1)
+        t._set_row(0, root)
+        t._append_level_order([root], [0])
+        return t
+
+    @classmethod
+    def single_unrefined(
+        cls, mbb: np.ndarray, page_id: int, raw_pages: int, rows: np.ndarray
+    ) -> "NodeTable":
+        """AMBI's starting state: the whole dataset as one unrefined root."""
+        t = cls(mbb.shape[1], node_capacity=16, perm_capacity=max(len(rows), 16))
+        t._grow_nodes(1)
+        t._mbb_lo[0] = mbb[0]
+        t._mbb_hi[0] = mbb[1]
+        t._page_id[0] = page_id
+        t._leaf_start[0] = t._append_perm(np.asarray(rows, dtype=np.int64))
+        t._leaf_count[0] = len(rows)
+        t._raw_pages[0] = raw_pages
+        t._unrefined[0] = True
+        return t
+
+    # -- AMBI refinement: graft a freshly built subtree ---------------------
+    def graft(self, row: int, entries: list) -> None:
+        """Replace unrefined ``row`` by the subtree ``entries`` (a root entry
+        list from ``refine_subspace`` / the adaptive build).
+
+        Mirrors the object-graph ``_become`` semantics: a single entry is
+        adopted in place (the row takes its MBB, page and payload), multiple
+        entries turn the row into a branch whose MBB tightens to their union.
+        New rows and perm segments are *appended* (amortized growth); the
+        row's previous raw-point segment simply goes dead.
+        """
+        row = int(row)
+        if len(entries) == 1:
+            e = entries[0]
+            self._set_row(row, e)
+            if e.children:
+                self._append_level_order([e], [row])
+            return
+        lo = np.min([e.mbb[0] for e in entries], axis=0)
+        hi = np.max([e.mbb[1] for e in entries], axis=0)
+        self._mbb_lo[row] = lo
+        self._mbb_hi[row] = hi
+        self._leaf_start[row] = -1
+        self._leaf_count[row] = 0
+        self._raw_pages[row] = 0
+        self._unrefined[row] = False
+        first = self._grow_nodes(len(entries))
+        self._first_child[row] = first
+        self._child_count[row] = len(entries)
+        queue, rows = [], []
+        for j, e in enumerate(entries):
+            self._set_row(first + j, e)
+            queue.append(e)
+            rows.append(first + j)
+        self._append_level_order(queue, rows)
+
+    # -- traversal orders ---------------------------------------------------
+    def dfs_order(self) -> np.ndarray:
+        """Rows in the depth-first pop order of the object-graph traversal
+        (children expanded onto a stack, so visited in reverse); cached until
+        the next graft.  This is the order the query layer replays page reads
+        in, which pins IOStats to the PR-1 engine bit for bit."""
+        if self._dfs is None:
+            fc, cc = self._first_child, self._child_count
+            order = np.empty(self._n, dtype=np.int64)
+            stack = [0]
+            i = 0
+            while stack:
+                r = stack.pop()
+                order[i] = r
+                i += 1
+                k = int(cc[r])
+                if k:
+                    stack.extend(range(int(fc[r]), int(fc[r]) + k))
+            self._dfs = order[:i]
+        return self._dfs
+
+    def subtree_points(self) -> np.ndarray:
+        """Points under each row (leaves count their range, unrefined rows
+        their raw range).  Children always live at higher row ids than their
+        parent, so one reverse sweep accumulates bottom-up."""
+        sizes = np.where(self.leaf_start >= 0, self.leaf_count, 0).astype(np.int64)
+        fc, cc = self._first_child, self._child_count
+        for r in range(self._n - 1, -1, -1):
+            k = int(cc[r])
+            if k:
+                f = int(fc[r])
+                sizes[r] += int(sizes[f : f + k].sum())
+        return sizes
+
+    # -- serialization ------------------------------------------------------
+    def save(
+        self,
+        path,
+        points: Optional[np.ndarray] = None,
+        extra: Optional[dict] = None,
+    ) -> None:
+        """Snapshot the table (and optionally the dataset) into one ``.npz``."""
+        payload = {
+            "mbb_lo": self.mbb_lo,
+            "mbb_hi": self.mbb_hi,
+            "page_id": self.page_id,
+            "first_child": self.first_child,
+            "child_count": self.child_count,
+            "leaf_start": self.leaf_start,
+            "leaf_count": self.leaf_count,
+            "raw_pages": self.raw_pages,
+            "unrefined": self.unrefined,
+            "perm": self.perm,
+            "dim": np.int64(self.dim),
+        }
+        if points is not None:
+            payload["points"] = points
+        for k, v in (extra or {}).items():
+            payload[f"meta_{k}"] = np.asarray(v)
+        np.savez(path, **payload)
+
+    @classmethod
+    def load(cls, path) -> tuple["NodeTable", dict, Optional[np.ndarray]]:
+        """Load a snapshot; returns (table, meta, points-or-None)."""
+        with np.load(path) as z:
+            dim = int(z["dim"])
+            n = len(z["page_id"])
+            t = cls(dim, node_capacity=max(n, 1), perm_capacity=max(len(z["perm"]), 1))
+            t._n = n
+            t._np = len(z["perm"])
+            t._mbb_lo[:n] = z["mbb_lo"]
+            t._mbb_hi[:n] = z["mbb_hi"]
+            t._page_id[:n] = z["page_id"]
+            t._first_child[:n] = z["first_child"]
+            t._child_count[:n] = z["child_count"]
+            t._leaf_start[:n] = z["leaf_start"]
+            t._leaf_count[:n] = z["leaf_count"]
+            t._raw_pages[:n] = z["raw_pages"]
+            t._unrefined[:n] = z["unrefined"]
+            t._perm[: t._np] = z["perm"]
+            meta = {
+                k[len("meta_") :]: z[k][()] for k in z.files if k.startswith("meta_")
+            }
+            points = z["points"] if "points" in z.files else None
+        return t, meta, points
+
+    # -- distributed merge ---------------------------------------------------
+    @classmethod
+    def merged(
+        cls,
+        tables: list["NodeTable"],
+        perm_maps: list[np.ndarray],
+        page_offsets: list[int],
+        root_page: int,
+    ) -> "NodeTable":
+        """Merge per-server tables into one global table.
+
+        A synthetic root (row 0) takes the server roots as children; server
+        ``s``'s local dataset rows are mapped to global ids through
+        ``perm_maps[s]`` and its page ids shifted by ``page_offsets[s]`` so
+        the merged snapshot has one flat page namespace.  Server-root rows
+        are relocated to rows ``1..m`` (keeping the root's CSR child block
+        contiguous); every other row shifts by a per-server base offset.
+        """
+        if not (len(tables) == len(perm_maps) == len(page_offsets)):
+            raise ValueError(
+                f"merge inputs misaligned: {len(tables)} tables, "
+                f"{len(perm_maps)} perm maps, {len(page_offsets)} page offsets"
+            )
+        live = [t for t in tables if t.n_nodes > 0]
+        live_maps = [m for t, m in zip(tables, perm_maps) if t.n_nodes > 0]
+        live_offs = [o for t, o in zip(tables, page_offsets) if t.n_nodes > 0]
+        m = len(live)
+        if m == 0:
+            raise ValueError("nothing to merge")
+        dim = live[0].dim
+        total_nodes = 1 + sum(t.n_nodes for t in live)
+        total_perm = sum(t.n_perm for t in live)
+        out = cls(dim, node_capacity=total_nodes, perm_capacity=max(total_perm, 1))
+        out._grow_nodes(total_nodes)
+        # row mapping: server root -> 1 + s; row r > 0 -> base_s + r - 1
+        bases = []
+        base = 1 + m
+        for t in live:
+            bases.append(base)
+            base += t.n_nodes - 1
+        perm_off = 0
+        for s, t in enumerate(live):
+            n = t.n_nodes
+            root_dst = slice(1 + s, 2 + s)
+            rest_dst = slice(bases[s], bases[s] + n - 1)
+            for dst, src in ((root_dst, slice(0, 1)), (rest_dst, slice(1, n))):
+                out._mbb_lo[dst] = t.mbb_lo[src]
+                out._mbb_hi[dst] = t.mbb_hi[src]
+                out._page_id[dst] = t.page_id[src] + live_offs[s]
+                out._child_count[dst] = t.child_count[src]
+                out._leaf_count[dst] = t.leaf_count[src]
+                out._raw_pages[dst] = t.raw_pages[src]
+                out._unrefined[dst] = t.unrefined[src]
+                # child pointers: children are never the server root (row 0)
+                out._first_child[dst] = np.where(
+                    t.child_count[src] > 0, t.first_child[src] + bases[s] - 1, 0
+                )
+                out._leaf_start[dst] = np.where(
+                    t.leaf_start[src] >= 0, t.leaf_start[src] + perm_off, -1
+                )
+            out._perm[perm_off : perm_off + t.n_perm] = live_maps[s][t.perm]
+            perm_off += t.n_perm
+        out._np = perm_off
+        out._mbb_lo[0] = out._mbb_lo[1 : 1 + m].min(axis=0)
+        out._mbb_hi[0] = out._mbb_hi[1 : 1 + m].max(axis=0)
+        out._page_id[0] = root_page
+        out._first_child[0] = 1
+        out._child_count[0] = m
+        out._leaf_start[0] = -1
+        return out
+
+    # -- accelerator bridge --------------------------------------------------
+    def to_jax_index(self, points: np.ndarray, dtype=np.float32):
+        """Re-lay the leaf level into the ``JaxIndex`` grid (serving layout).
+
+        The table's leaf-contiguous ``perm`` *is* the sorted point order the
+        JAX side wants; leaves are padded to a uniform slot count with
+        sentinel rows (``row_id = -1``, coords at dtype-max) and the leaf
+        count to a power of two with empty boxes, which the batched
+        ``knn`` / ``window_count`` kernels already mask out.  Only the leaf
+        gather runs here — no rebuild, no re-sort.  The balanced split
+        tables do not exist for an FMBI tree, so ``jax_index.route`` is not
+        meaningful on a bridged index; use ``jax_index.nearest_leaf``.
+        """
+        import jax.numpy as jnp
+
+        from .jax_index import JaxIndex
+
+        if bool(self.unrefined.any()):
+            raise ValueError("bridge requires a fully refined table")
+        rows = self.leaf_rows()
+        counts = self.leaf_count[rows]
+        l_real = len(rows)
+        leaf_size = int(counts.max()) if l_real else 1
+        n_leaves = 1
+        while n_leaves < l_real:
+            n_leaves *= 2
+        levels = n_leaves.bit_length() - 1
+        d = points.shape[1]
+        big = np.finfo(dtype).max
+        grid = np.full((n_leaves * leaf_size, d), big, dtype=dtype)
+        ids = np.full(n_leaves * leaf_size, -1, dtype=np.int32)
+        sel = ragged_ranges(self.leaf_start[rows], counts)
+        within = np.arange(len(sel), dtype=np.int64) - np.repeat(
+            np.cumsum(counts) - counts, counts
+        )
+        slot = np.repeat(np.arange(l_real, dtype=np.int64) * leaf_size, counts) + within
+        data_rows = self.perm[sel]
+        grid[slot] = points[data_rows].astype(dtype)
+        ids[slot] = data_rows
+        leaf_lo = np.full((n_leaves, d), big, dtype=dtype)
+        leaf_hi = np.full((n_leaves, d), -big, dtype=dtype)
+        leaf_lo[:l_real] = self.mbb_lo[rows]
+        leaf_hi[:l_real] = self.mbb_hi[rows]
+        lv = max(levels, 1)
+        return JaxIndex(
+            points_sorted=jnp.asarray(grid),
+            row_ids=jnp.asarray(ids),
+            split_dim=jnp.zeros((lv, n_leaves), jnp.int32),
+            split_val=jnp.full((lv, n_leaves), np.inf, dtype=dtype),
+            leaf_lo=jnp.asarray(leaf_lo),
+            leaf_hi=jnp.asarray(leaf_hi),
+            levels=levels,
+            leaf_size=leaf_size,
+        )
+
+    # -- invariants ----------------------------------------------------------
+    def check_invariants(self, n_points: Optional[int] = None) -> None:
+        """Assert the structural invariants every layer relies on."""
+        n = self._n
+        assert n >= 1, "empty table"
+        fc, cc = self.first_child, self.child_count
+        branches = np.flatnonzero(cc > 0)
+        # CSR ranges stay inside the table and cover every non-root row once
+        assert np.all(fc[branches] >= 1)
+        assert np.all(fc[branches] + cc[branches] <= n)
+        seen = np.zeros(n, dtype=np.int64)
+        for r in branches:
+            seen[fc[r] : fc[r] + cc[r]] += 1
+        assert np.all(seen[1:] == 1), "child ranges must partition rows 1..N"
+        assert seen[0] == 0, "root must not be a child"
+        # leaf/unrefined perm ranges: in bounds, disjoint, and together a
+        # permutation of the dataset rows (dead segments from grafts allowed)
+        payload = np.flatnonzero(self.leaf_start >= 0)
+        ls, lcnt = self.leaf_start[payload], self.leaf_count[payload]
+        assert np.all(ls + lcnt <= self._np)
+        sel = ragged_ranges(ls, lcnt)
+        assert len(np.unique(sel)) == len(sel), "live perm segments overlap"
+        vals = self.perm[sel]
+        assert len(np.unique(vals)) == len(vals), "duplicate dataset rows"
+        if n_points is not None:
+            assert len(vals) == n_points
+            assert vals.min(initial=0) >= 0
+            if len(vals):
+                assert vals.max() < n_points
+        # parent MBBs contain child MBBs
+        if len(branches):
+            kids = ragged_ranges(fc[branches], cc[branches])
+            par = np.repeat(branches, cc[branches])
+            assert np.all(self.mbb_lo[par] <= self.mbb_lo[kids] + 1e-12)
+            assert np.all(self.mbb_hi[par] >= self.mbb_hi[kids] - 1e-12)
+
+
+# --------------------------------------------------------------------------
+# thin read-only object view (tests / metrics / examples walk this)
+# --------------------------------------------------------------------------
+class NodeView:
+    """Read-only ``Node``-shaped view over one table row."""
+
+    __slots__ = ("_t", "row")
+
+    def __init__(self, table: NodeTable, row: int):
+        self._t = table
+        self.row = int(row)
+
+    @property
+    def mbb(self) -> np.ndarray:
+        return np.stack([self._t.mbb_lo[self.row], self._t.mbb_hi[self.row]])
+
+    @property
+    def page_id(self) -> int:
+        return int(self._t.page_id[self.row])
+
+    @property
+    def is_leaf(self) -> bool:
+        return bool(
+            self._t.leaf_start[self.row] >= 0 and not self._t.unrefined[self.row]
+        )
+
+    @property
+    def is_unrefined(self) -> bool:
+        return bool(self._t.unrefined[self.row])
+
+    @property
+    def point_idx(self) -> Optional[np.ndarray]:
+        return self._t.point_rows(self.row) if self.is_leaf else None
+
+    @property
+    def raw_points(self) -> Optional[np.ndarray]:
+        return self._t.point_rows(self.row) if self.is_unrefined else None
+
+    @property
+    def raw_pages(self) -> int:
+        return int(self._t.raw_pages[self.row])
+
+    @property
+    def children(self) -> Optional[list["NodeView"]]:
+        if self._t.leaf_start[self.row] >= 0:
+            return None
+        return [NodeView(self._t, r) for r in self._t.children_of(self.row)]
+
+    def n_entries(self) -> int:
+        if self.is_leaf:
+            return int(self._t.leaf_count[self.row])
+        if self.is_unrefined:
+            return int(self._t.raw_pages[self.row])
+        return int(self._t.child_count[self.row])
+
+    def iter_leaves(self):
+        t = self._t
+        stack = [self.row]
+        while stack:
+            r = stack.pop()
+            if t.leaf_start[r] >= 0:
+                if not t.unrefined[r]:
+                    yield NodeView(t, r)
+            else:
+                stack.extend(t.children_of(r))

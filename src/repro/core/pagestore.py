@@ -17,6 +17,8 @@ from __future__ import annotations
 import dataclasses
 from collections import OrderedDict
 
+import numpy as np
+
 PAGE_SIZE = 4096
 COORD_BYTES = 4
 ID_BYTES = 4
@@ -83,6 +85,16 @@ class LRUBuffer:
     def clear(self) -> None:
         self._pages.clear()
 
+    def load_run(self, page_ids) -> None:
+        """Set the buffer to exactly ``page_ids`` (oldest first).
+
+        Used by the run fast paths: after touching a run of >= capacity
+        distinct pages, the buffer holds precisely the trailing ``capacity``
+        pages of the run — whatever was resident before is evicted, so the
+        state can be written directly instead of replayed touch by touch.
+        """
+        self._pages = OrderedDict.fromkeys(int(p) for p in page_ids)
+
 
 class PageStore:
     """A page-granular simulated disk.
@@ -110,14 +122,42 @@ class PageStore:
     def allocated_pages(self) -> int:
         return self._next_id
 
+    def mark_allocated(self, n_pages: int) -> None:
+        """Advance the allocator past ``n_pages`` already-existing pages —
+        used when adopting an index whose pages were allocated elsewhere
+        (snapshot load, merged per-server tables)."""
+        self._next_id = max(self._next_id, int(n_pages))
+
     # -- accounted I/O ----------------------------------------------------
     def read(self, page_id: int, *, bypass_buffer: bool = False) -> None:
         if bypass_buffer or not self.buffer.touch(page_id):
             self.stats.reads += 1
 
     def read_many(self, page_ids, *, bypass_buffer: bool = False) -> None:
-        for pid in page_ids:
-            self.read(pid, bypass_buffer=bypass_buffer)
+        """Read a sequence of pages through the buffer.
+
+        Fast path: for a run of *distinct* pages longer than the LRU
+        capacity, a page at run position >= capacity cannot be resident when
+        touched (the preceding ``capacity`` distinct touches have evicted
+        it), so only the leading ``capacity`` pages go through the touch
+        loop; the rest are bulk-charged as misses and the buffer is set to
+        the trailing ``capacity`` pages.  Accounting is identical to the
+        per-page loop — without the O(run) interpreter iteration.
+        """
+        ids = np.asarray(list(page_ids), dtype=np.int64)
+        if bypass_buffer:
+            self.stats.reads += len(ids)
+            return
+        cap = self.buffer.capacity
+        n = len(ids)
+        if n > cap and len(np.unique(ids)) == n:
+            for pid in ids[:cap]:
+                self.read(int(pid))
+            self.stats.reads += n - cap
+            self.buffer.load_run(ids[-cap:])
+            return
+        for pid in ids:
+            self.read(int(pid))
 
     def read_run(self, n_pages: int) -> None:
         """A bulk sequential read of ``n_pages`` fresh (unbuffered) pages."""
@@ -132,11 +172,17 @@ class PageStore:
         """Write ``n_pages`` consecutive pages starting at ``first_id``.
 
         Accounting-equivalent to ``n_pages`` individual :meth:`write` calls in
-        ascending id order (same write count, same LRU touch order) but issued
+        ascending id order (same write count, same final LRU state) but issued
         as one run-granular call so bulk writers avoid per-page call overhead.
+        Runs longer than the buffer capacity skip the touch loop entirely:
+        only the trailing ``capacity`` pages can remain resident.
         """
         n_pages = int(n_pages)
         self.stats.writes += n_pages
+        cap = self.buffer.capacity
+        if n_pages >= cap:
+            self.buffer.load_run(range(first_id + n_pages - cap, first_id + n_pages))
+            return
         for pid in range(first_id, first_id + n_pages):
             self.buffer.touch(pid)
 

@@ -74,7 +74,12 @@ class RetrievalStats:
 
 
 class RetrievalServer:
-    """Batched exact kNN over an FMBI JaxIndex (Pallas distance kernel)."""
+    """Batched exact kNN over an FMBI JaxIndex (Pallas distance kernel).
+
+    Two boot paths: build a balanced index from raw points (``__init__``),
+    or bridge a bulk-loaded CPU ``NodeTable`` snapshot straight into the
+    accelerator layout (``from_snapshot``) — no rebuild, no re-sort.
+    """
 
     def __init__(self, points: np.ndarray, levels: int, *,
                  adaptive: bool = False, hot_capacity: int = 64):
@@ -82,6 +87,32 @@ class RetrievalServer:
         self.index = jax_index.build(
             jnp.asarray(padded), levels, jnp.asarray(ids, jnp.int32)
         )
+        self._routed = True  # built indexes carry split tables for route()
+        self._init_serving(levels, adaptive, hot_capacity)
+
+    @classmethod
+    def from_snapshot(cls, path, *, adaptive: bool = False,
+                      hot_capacity: int = 64) -> "RetrievalServer":
+        """Boot from a ``NodeTable.save`` snapshot (``.npz`` with points).
+
+        The snapshot's leaf-contiguous layout maps directly onto the
+        ``JaxIndex`` grid via ``NodeTable.to_jax_index``; adaptive residency
+        falls back to ``nearest_leaf`` because a bridged FMBI tree has no
+        balanced split tables.
+        """
+        from ..core.nodetable import NodeTable
+
+        table, _meta, points = NodeTable.load(path)
+        if points is None:
+            raise ValueError("snapshot was saved without points")
+        self = cls.__new__(cls)
+        self.index = table.to_jax_index(np.asarray(points))
+        self._routed = False
+        self._init_serving(self.index.levels, adaptive, hot_capacity)
+        return self
+
+    def _init_serving(self, levels: int, adaptive: bool,
+                      hot_capacity: int) -> None:
         self.levels = levels
         self.adaptive = adaptive
         self.hot: dict[int, int] = {}  # leaf -> last-touch tick (AMBI policy)
@@ -95,8 +126,9 @@ class RetrievalServer:
             n_candidate_leaves=n_candidate_leaves,
         )
         if self.adaptive:
+            locate = jax_index.route if self._routed else jax_index.nearest_leaf
             leaves = np.asarray(
-                jax_index.route(self.index, jnp.asarray(queries, jnp.float32))
+                locate(self.index, jnp.asarray(queries, jnp.float32))
             )
             for leaf in leaves:
                 self.tick += 1

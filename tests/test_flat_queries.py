@@ -1,0 +1,234 @@
+"""Flat (NodeTable) query engines vs the PR-1 object-graph references.
+
+The PR-2 query layer traverses the flat node table (level-synchronous
+frontiers, DFS-order read replay).  These tests retain the PR-1 object-graph
+implementations verbatim — they run unchanged over the read-only ``NodeView``
+graph — and assert the flat engines return identical results AND charge
+bit-identical ``IOStats`` per query, window and k-NN, single and batched.
+Two identically seeded builds are used so both sides start from identical
+LRU buffer states.
+"""
+import heapq
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    PageStore,
+    bulk_load,
+    knn_query,
+    knn_query_batch,
+    window_query,
+    window_query_batch,
+)
+from repro.core.datasets import gaussian, osm_like
+from repro.core.queries import _merge_topk, mbb_intersects, mindist_sq
+
+
+# --------------------------------------------------------------------------
+# PR-1 reference implementations (object-graph traversal, verbatim)
+# --------------------------------------------------------------------------
+def window_ref(index, lo, hi):
+    store = index.store
+    before = store.stats.snapshot()
+    lo = np.asarray(lo, dtype=np.float64)
+    hi = np.asarray(hi, dtype=np.float64)
+    out = []
+    stack = [index.root]
+    while stack:
+        node = stack.pop()
+        if not mbb_intersects(node.mbb, lo, hi):
+            continue
+        store.read(node.page_id)
+        if node.is_leaf:
+            pts = index.points[node.point_idx]
+            mask = np.all((pts >= lo) & (pts <= hi), axis=1)
+            if mask.any():
+                out.append(node.point_idx[mask])
+        else:
+            stack.extend(node.children)
+    res = np.concatenate(out) if out else np.zeros(0, dtype=np.int64)
+    return res, store.stats.delta(before)
+
+
+def window_batch_ref(index, los, his):
+    store = index.store
+    before = store.stats.snapshot()
+    los = np.atleast_2d(np.asarray(los, dtype=np.float64))
+    his = np.atleast_2d(np.asarray(his, dtype=np.float64))
+    nq = los.shape[0]
+    out = [[] for _ in range(nq)]
+    stack = [(index.root, np.arange(nq))]
+    while stack:
+        node, qids = stack.pop()
+        hit = np.all(node.mbb[0] <= his[qids], axis=1) & np.all(
+            node.mbb[1] >= los[qids], axis=1
+        )
+        if not hit.any():
+            continue
+        qids = qids[hit]
+        store.read(node.page_id)
+        if node.is_leaf:
+            pts = index.points[node.point_idx]
+            inside = np.all(
+                (pts[None, :, :] >= los[qids, None, :])
+                & (pts[None, :, :] <= his[qids, None, :]),
+                axis=2,
+            )
+            for qi, m in zip(qids, inside):
+                if m.any():
+                    out[qi].append(node.point_idx[m])
+        else:
+            stack.extend((c, qids) for c in node.children)
+    res = [np.concatenate(o) if o else np.zeros(0, dtype=np.int64) for o in out]
+    return res, store.stats.delta(before)
+
+
+def knn_ref(index, q, k):
+    store = index.store
+    before = store.stats.snapshot()
+    q = np.asarray(q, dtype=np.float64)
+    counter = itertools.count()
+    heap = [(0.0, next(counter), index.root)]
+    best_d = np.full(0, np.inf)
+    best_r = np.zeros(0, dtype=np.int64)
+    while heap:
+        dist, _, node = heapq.heappop(heap)
+        kth = best_d.max() if len(best_d) == k else np.inf
+        if dist > kth:
+            break
+        store.read(node.page_id)
+        if node.is_leaf:
+            pts = index.points[node.point_idx]
+            d2 = np.sum((pts - q) ** 2, axis=1)
+            best_d, best_r = _merge_topk(best_d, best_r, d2, node.point_idx, k)
+        else:
+            kth = best_d.max() if len(best_d) == k else np.inf
+            for c in node.children:
+                md = mindist_sq(c.mbb, q)
+                if md <= kth:
+                    heapq.heappush(heap, (md, next(counter), c))
+    order = np.argsort(best_d, kind="stable")
+    return best_r[order], store.stats.delta(before)
+
+
+def knn_batch_ref(index, qs, k):
+    store = index.store
+    before = store.stats.snapshot()
+    qs = np.atleast_2d(np.asarray(qs, dtype=np.float64))
+    leaves = []
+    stack = [index.root]
+    while stack:
+        node = stack.pop()
+        if node.is_leaf:
+            leaves.append(node)
+        else:
+            store.read(node.page_id)
+            stack.extend(node.children)
+    leaf_lo = np.stack([l.mbb[0] for l in leaves])
+    leaf_hi = np.stack([l.mbb[1] for l in leaves])
+    results = []
+    for q in qs:
+        gap = np.maximum(leaf_lo - q, 0.0) + np.maximum(q - leaf_hi, 0.0)
+        mind = np.sum(gap * gap, axis=1)
+        order = np.argsort(mind, kind="stable")
+        best_d = np.full(0, np.inf)
+        best_r = np.zeros(0, dtype=np.int64)
+        for li in order:
+            if len(best_d) == k and mind[li] > best_d.max():
+                break
+            leaf = leaves[li]
+            store.read(leaf.page_id)
+            pts = index.points[leaf.point_idx]
+            d2 = np.sum((pts - q) ** 2, axis=1)
+            best_d, best_r = _merge_topk(best_d, best_r, d2, leaf.point_idx, k)
+        results.append(best_r[np.argsort(best_d, kind="stable")])
+    return results, store.stats.delta(before)
+
+
+# --------------------------------------------------------------------------
+# fixtures: two identically built indexes -> identical starting LRU states
+# --------------------------------------------------------------------------
+def _pair(dataset, M):
+    pts = dataset()
+    return pts, bulk_load(pts, M, PageStore(M)), bulk_load(pts, M, PageStore(M))
+
+
+@pytest.fixture(scope="module", params=["osm", "gauss-dense"])
+def pair(request):
+    if request.param == "osm":
+        return _pair(lambda: osm_like(80_000, seed=9), 250)
+    # tiny buffer forces the Step-5 dense recursion: a deeper, messier tree
+    return _pair(lambda: gaussian(60_000, 2, seed=5), 230)
+
+
+def _io(io):
+    return (io.reads, io.writes)
+
+
+def test_window_flat_matches_reference_io(pair):
+    pts, a, b = pair
+    rng = np.random.default_rng(4)
+    for _ in range(30):
+        c = rng.random(2)
+        w = rng.uniform(0.005, 0.1)
+        res_r, io_r = window_ref(a, c - w, c + w)
+        res_f, io_f = window_query(b, c - w, c + w)
+        assert sorted(res_r.tolist()) == sorted(res_f.tolist())
+        assert _io(io_r) == _io(io_f)
+
+
+def test_window_batch_flat_matches_reference_io(pair):
+    pts, a, b = pair
+    rng = np.random.default_rng(5)
+    for _ in range(4):
+        c = rng.random((16, 2)) * 0.9
+        w = rng.uniform(0.01, 0.06, (16, 1))
+        res_r, io_r = window_batch_ref(a, c - w, c + w)
+        res_f, io_f = window_query_batch(b, c - w, c + w)
+        for x, y in zip(res_r, res_f):
+            assert sorted(x.tolist()) == sorted(y.tolist())
+        assert _io(io_r) == _io(io_f)
+
+
+def test_knn_flat_matches_reference_io(pair):
+    pts, a, b = pair
+    rng = np.random.default_rng(6)
+    for k in (1, 8, 32):
+        for _ in range(8):
+            q = rng.random(2)
+            res_r, io_r = knn_ref(a, q, k)
+            res_f, io_f = knn_query(b, q, k)
+            np.testing.assert_array_equal(res_r, res_f)
+            assert _io(io_r) == _io(io_f)
+
+
+def test_knn_batch_flat_matches_reference_io(pair):
+    pts, a, b = pair
+    rng = np.random.default_rng(7)
+    qs = rng.random((12, 2))
+    for k in (1, 16):
+        res_r, io_r = knn_batch_ref(a, qs, k)
+        res_f, io_f = knn_query_batch(b, qs, k)
+        for x, y in zip(res_r, res_f):
+            np.testing.assert_array_equal(x, y)
+        assert _io(io_r) == _io(io_f)
+
+
+def test_mixed_stream_keeps_lru_in_lockstep(pair):
+    """Interleaved windows and k-NNs share one evolving LRU buffer; the
+    engines must stay I/O-identical across the whole stream, not just on a
+    cold cache."""
+    pts, a, b = pair
+    rng = np.random.default_rng(8)
+    for i in range(40):
+        if i % 2 == 0:
+            c = rng.random(2)
+            _, io_r = window_ref(a, c - 0.03, c + 0.03)
+            _, io_f = window_query(b, c - 0.03, c + 0.03)
+        else:
+            q = rng.random(2)
+            _, io_r = knn_ref(a, q, 16)
+            _, io_f = knn_query(b, q, 16)
+        assert _io(io_r) == _io(io_f)

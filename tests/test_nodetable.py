@@ -1,0 +1,206 @@
+"""NodeTable invariants (hypothesis + fixed seeds), snapshots, merges, grafts."""
+import numpy as np
+import pytest
+
+from repro.core import AMBI, Index, NodeTable, PageStore, bulk_load
+from repro.core.datasets import osm_like
+from repro.core.distributed import parallel_bulk_load
+from repro.core.nodetable import ragged_ranges
+from repro.core.pagestore import leaf_capacity
+from repro.core.queries import knn_query, window_oracle, window_query
+
+try:  # optional dev dependency (see requirements-dev.txt)
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _make_points(kind: str, n: int, d: int, seed: int) -> np.ndarray:
+    rng = np.random.default_rng(seed)
+    if kind == "uniform":
+        pts = rng.random((n, d))
+    elif kind == "gauss":
+        pts = rng.normal(0.5, 0.2, (n, d))
+    elif kind == "skew":
+        pts = rng.random((n, d)) ** 3
+    else:  # "dup": heavy coordinate duplication (degenerate medians)
+        pts = rng.integers(0, 12, (n, d)).astype(np.float64) / 12.0
+    return pts.astype(np.float64)
+
+
+def _sibling_leaf_overlap(table: NodeTable) -> float:
+    """Total pairwise overlap volume between the leaf children of every
+    branch (FMBI's zero-overlap invariant, any dimensionality)."""
+    total = 0.0
+    for r in np.flatnonzero(table.child_count > 0):
+        kids = np.fromiter(table.children_of(r), dtype=np.int64)
+        leaf_kids = kids[table.is_leaf_row(kids)]
+        if len(leaf_kids) < 2:
+            continue
+        los, his = table.mbb_lo[leaf_kids], table.mbb_hi[leaf_kids]
+        for i in range(len(leaf_kids) - 1):
+            lo = np.maximum(los[i + 1 :], los[i])
+            hi = np.minimum(his[i + 1 :], his[i])
+            ext = np.clip(hi - lo, 0.0, None)
+            total += float(np.prod(ext, axis=1).sum())
+    return total
+
+
+def _assert_fullness_at_paper_bound(pts: np.ndarray) -> None:
+    """In-buffer refinement packs exactly ceil(n / C_L) leaves — the paper's
+    full-but-last-page guarantee — so fill sits at the arithmetic optimum."""
+    idx = bulk_load(pts, 250)  # small n: single Algorithm-1 refine
+    t = idx.table
+    c_l = leaf_capacity(pts.shape[1])
+    n_leaves = len(t.leaf_rows())
+    assert n_leaves == -(-len(pts) // c_l)
+    assert len(pts) / (n_leaves * c_l) >= len(pts) / (len(pts) + c_l) - 1e-12
+    assert np.all(t.leaf_count[t.leaf_rows()] <= c_l)
+
+
+# --------------------------------------------------------------------------
+# fixed-seed invariant sweep (always runs, hypothesis or not)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("kind", ["uniform", "gauss", "skew", "dup"])
+@pytest.mark.parametrize("d", [2, 4])
+def test_table_invariants_fixed(kind, d):
+    pts = _make_points(kind, 3000, d, seed=7)
+    idx = bulk_load(pts, 250)
+    idx.table.check_invariants(len(pts))
+    if kind != "dup":  # duplicated coordinates can tie on the cut
+        assert _sibling_leaf_overlap(idx.table) < 1e-9
+    _assert_fullness_at_paper_bound(pts)
+
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def point_sets(draw, min_n=400, max_n=4000, d_max=4, continuous_only=False):
+        n = draw(st.integers(min_value=min_n, max_value=max_n))
+        d = draw(st.integers(min_value=2, max_value=d_max))
+        seed = draw(st.integers(min_value=0, max_value=2**31 - 1))
+        kinds = ["uniform", "gauss", "skew"]
+        if not continuous_only:
+            kinds.append("dup")
+        return _make_points(draw(st.sampled_from(kinds)), n, d, seed)
+
+    @given(point_sets())
+    @settings(max_examples=12, deadline=None)
+    def test_table_invariants(pts):
+        """CSR child ranges partition the rows; live perm segments partition
+        the dataset; parent boxes contain child boxes."""
+        idx = bulk_load(pts, 250)
+        idx.table.check_invariants(len(pts))
+
+    @given(point_sets(continuous_only=True))
+    @settings(max_examples=10, deadline=None)
+    def test_zero_node_overlap(pts):
+        """FMBI's median splits produce zero overlap between sibling leaves
+        (continuous coordinates; duplicates can tie on the cut)."""
+        idx = bulk_load(pts, 250)
+        assert _sibling_leaf_overlap(idx.table) < 1e-9
+
+    @given(point_sets())
+    @settings(max_examples=10, deadline=None)
+    def test_leaf_fullness_at_paper_bound(pts):
+        _assert_fullness_at_paper_bound(pts)
+
+
+def test_invariants_hold_on_full_five_step_build():
+    pts = osm_like(120_000, seed=3)
+    idx = bulk_load(pts, 205)
+    idx.table.check_invariants(len(pts))
+    t = idx.table
+    assert float((t.leaf_count[t.leaf_rows()]).sum()) / (
+        len(t.leaf_rows()) * idx.leaf_cap
+    ) > 0.6
+
+
+def test_ambi_graft_keeps_invariants():
+    pts = osm_like(60_000, seed=11)
+    a = AMBI(pts, 300)
+    rng = np.random.default_rng(0)
+    for _ in range(12):
+        c = rng.random(2)
+        a.window(c - 0.05, c + 0.05)
+        a.index.table.check_invariants(len(pts))
+    # dead perm segments accumulate (grafts append), live ones stay exact
+    assert a.index.table.n_perm >= len(pts)
+
+
+# --------------------------------------------------------------------------
+# snapshot round-trip (acceptance: 100k points, identical results + IOStats)
+# --------------------------------------------------------------------------
+def test_save_load_roundtrip_100k(tmp_path):
+    pts = osm_like(100_000, seed=21)
+    M = 250
+    idx = bulk_load(pts, M, PageStore(M))
+    path = tmp_path / "fmbi_100k.npz"
+    idx.save(path)
+
+    loaded = Index.load(path)
+    assert loaded.store.buffer.capacity == M
+    assert loaded.store.allocated_pages == idx.store.allocated_pages
+    np.testing.assert_array_equal(loaded.points, pts)
+
+    # cold-for-cold comparison: the loaded store starts empty, so clear the
+    # builder's buffer too, then drive both through one query stream
+    idx.store.buffer.clear()
+    rng = np.random.default_rng(1)
+    for i in range(25):
+        if i % 2 == 0:
+            c = rng.random(2)
+            r1, io1 = window_query(idx, c - 0.03, c + 0.03)
+            r2, io2 = window_query(loaded, c - 0.03, c + 0.03)
+            np.testing.assert_array_equal(r1, r2)
+            np.testing.assert_array_equal(
+                np.sort(r1), window_oracle(pts, c - 0.03, c + 0.03)
+            )
+        else:
+            q = rng.random(2)
+            r1, io1 = knn_query(idx, q, 16)
+            r2, io2 = knn_query(loaded, q, 16)
+            np.testing.assert_array_equal(r1, r2)
+        assert (io1.reads, io1.writes) == (io2.reads, io2.writes)
+
+
+def test_snapshot_without_points_needs_explicit_points(tmp_path):
+    pts = osm_like(3_000, seed=2)
+    idx = bulk_load(pts, 250)
+    path = tmp_path / "lean.npz"
+    idx.save(path, include_points=False)
+    with pytest.raises(ValueError):
+        Index.load(path)
+    loaded = Index.load(path, points=pts)
+    c = np.array([0.4, 0.4])
+    r, _ = window_query(loaded, c - 0.1, c + 0.1)
+    assert sorted(r.tolist()) == sorted(window_oracle(pts, c - 0.1, c + 0.1).tolist())
+
+
+# --------------------------------------------------------------------------
+# distributed: per-server tables merge into one global snapshot
+# --------------------------------------------------------------------------
+def test_merged_distributed_table_answers_globally():
+    pts = osm_like(60_000, seed=31)
+    build = parallel_bulk_load(pts, m=4, buffer_pages=600)
+    merged = build.merged_table()
+    merged.check_invariants(len(pts))
+    assert merged.child_count[0] == 4
+    gidx = build.merged_index(pts, buffer_pages=300)
+    rng = np.random.default_rng(3)
+    for _ in range(8):
+        c = rng.random(2)
+        res, io = window_query(gidx, c - 0.04, c + 0.04)
+        ref = window_oracle(pts, c - 0.04, c + 0.04)
+        assert sorted(res.tolist()) == sorted(ref.tolist())
+        assert io.total >= 0
+
+
+def test_ragged_ranges():
+    np.testing.assert_array_equal(
+        ragged_ranges(np.array([5, 0, 9]), np.array([2, 3, 0])),
+        np.array([5, 6, 0, 1, 2]),
+    )
+    assert len(ragged_ranges(np.zeros(0), np.zeros(0))) == 0

@@ -61,3 +61,61 @@ def test_iostats_algebra():
     snap = c.snapshot()
     c.reads += 5
     assert c.delta(snap).reads == 5
+
+
+# --------------------------------------------------------------------------
+# run fast paths: same accounting as the per-page touch loop
+# --------------------------------------------------------------------------
+def _reference_write_seq(store, first_id, n_pages):
+    store.stats.writes += n_pages
+    for pid in range(first_id, first_id + n_pages):
+        store.buffer.touch(pid)
+
+
+def _reference_read_many(store, ids):
+    for pid in ids:
+        store.read(int(pid))
+
+
+def _buffer_state(store):
+    return list(store.buffer._pages.keys())
+
+
+@pytest.mark.parametrize("cap,n", [(8, 3), (8, 8), (8, 30), (64, 200), (3, 4)])
+def test_write_seq_fast_path_matches_reference(cap, n):
+    a, b = PageStore(cap), PageStore(cap)
+    for st_ in (a, b):  # pre-warm with some resident pages, incl. run overlap
+        st_.buffer.touch(2)
+        st_.buffer.touch(5)
+        st_.buffer.touch(100)
+    a.write_seq(4, n)
+    _reference_write_seq(b, 4, n)
+    assert a.stats.writes == b.stats.writes
+    assert _buffer_state(a) == _buffer_state(b)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_read_many_fast_path_matches_reference(seed):
+    rng = np.random.default_rng(seed)
+    cap = int(rng.integers(4, 32))
+    n = int(rng.integers(cap + 1, 6 * cap))
+    ids = rng.permutation(10 * cap)[:n]  # distinct, arbitrary order
+    warm = rng.integers(0, 10 * cap, 5)
+    a, b = PageStore(cap), PageStore(cap)
+    for st_ in (a, b):
+        for w in warm:
+            st_.buffer.touch(int(w))
+    a.read_many(ids)
+    _reference_read_many(b, ids)
+    assert a.stats.reads == b.stats.reads
+    assert _buffer_state(a) == _buffer_state(b)
+
+
+def test_read_many_duplicate_ids_fall_back_to_exact_loop():
+    cap = 4
+    ids = [1, 2, 3, 4, 5, 1, 2, 9, 9, 1]  # repeats: hits depend on order
+    a, b = PageStore(cap), PageStore(cap)
+    a.read_many(ids)
+    _reference_read_many(b, ids)
+    assert a.stats.reads == b.stats.reads
+    assert _buffer_state(a) == _buffer_state(b)
