@@ -12,12 +12,20 @@ plus the end-to-end ``bulk_load`` and the JAX candidate-leaf
 ``window_count``, and writes the numbers to ``BENCH_CORE.json`` at the repo
 root.  Future perf PRs diff against that file.
 
+It also times the compiled device query engine (``queries_jax``) on the
+same workload, recording ``*_jax_s`` entries next to the CPU-engine
+numbers.
+
   PYTHONPATH=src python -m benchmarks.bench_hotpaths            # full, writes BENCH_CORE.json
   PYTHONPATH=src python -m benchmarks.bench_hotpaths --smoke    # quick gate, no write
 
-``--smoke`` runs a reduced dataset and fails (exit 1) if any hot path
-regresses past a generous ceiling — a coarse tripwire for interpreter-loop
-reintroductions, not a precision benchmark.
+``--smoke`` runs a reduced dataset and fails (exit 1) when a named hot path
+(bulk_load, window_batch, knn_batch) regresses more than 30% against the
+smoke-scale baselines committed in BENCH_CORE.json (recorded by the full
+run under ``smoke_*`` keys), with a small absolute floor so container
+timing noise cannot trip the gate on its own.  Paths without a committed
+baseline fall back to the static ceilings — a coarse tripwire for
+interpreter-loop reintroductions, not a precision benchmark.
 """
 from __future__ import annotations
 
@@ -63,6 +71,17 @@ SMOKE_CEILINGS_S = {
     "knn_single": 2.0,
     "knn_batch": 1.5,
 }
+
+# hot paths gated against the committed smoke-scale baselines: >30%
+# regression (plus an absolute noise floor) fails CI
+SMOKE_GATED = {
+    "bulk_load": "bulk_load_s",
+    "window_batch": "window_batch_64_s",
+    "knn_batch": "knn_batch_64_k16_s",
+}
+SMOKE_REGRESSION_FRAC = 0.30
+SMOKE_NOISE_FLOOR_S = 0.05
+SMOKE_N = 120_000
 
 
 def _timed(fn, repeats: int = 1) -> float:
@@ -149,6 +168,28 @@ def run(n: int = 600_000, seed: int = 0, repeats: int = 3) -> dict:
         lambda: knn_query_batch(idx, qs, 16), repeats
     )
 
+    # ---- compiled device query engine (NodeTable -> DeviceTable) --------
+    try:
+        from repro.core.queries_jax import (
+            DeviceTable,
+            knn_query_batch_jax,
+            window_query_batch_jax,
+        )
+
+        dev = DeviceTable.from_index(idx)
+        window_query_batch_jax(dev, los, his)  # compile
+        results["window_batch_64_jax_s"] = _timed(
+            lambda: window_query_batch_jax(dev, los, his), repeats
+        )
+        knn_query_batch_jax(dev, qs, 16)  # compile
+        results["knn_batch_64_k16_jax_s"] = _timed(
+            lambda: knn_query_batch_jax(dev, qs, 16), repeats
+        )
+    except Exception as e:  # pragma: no cover - accelerator-env dependent
+        results["window_batch_64_jax_s"] = -1.0
+        results["knn_batch_64_k16_jax_s"] = -1.0
+        results["device_engine_error"] = str(e)
+
     # ---- JAX candidate-leaf window_count --------------------------------
     try:
         import jax.numpy as jnp
@@ -173,6 +214,39 @@ def run(n: int = 600_000, seed: int = 0, repeats: int = 3) -> dict:
     return results
 
 
+def smoke_gate(res: dict, use_baselines: bool = True) -> list[str]:
+    """Diff fresh smoke timings against the committed baselines.
+
+    A named hot path fails when it exceeds the committed ``smoke_<key>``
+    value by more than ``SMOKE_REGRESSION_FRAC`` *and* by more than the
+    absolute noise floor.  Paths without a committed baseline (older
+    BENCH_CORE.json, a missing file, or a ``--n`` override that makes the
+    workload incomparable to the SMOKE_N baselines) fall back to the
+    static ceilings.
+    """
+    baselines = {}
+    if use_baselines and BENCH_CORE.exists():
+        baselines = json.loads(BENCH_CORE.read_text())
+    failures = []
+    for name, key in SMOKE_GATED.items():
+        got = res[key]
+        base = baselines.get(f"smoke_{key}", -1.0)
+        if base > 0:
+            limit = max(base * (1 + SMOKE_REGRESSION_FRAC),
+                        base + SMOKE_NOISE_FLOOR_S)
+            if got > limit:
+                failures.append(
+                    f"{name}: {got:.3f}s > {limit:.3f}s "
+                    f"(committed smoke baseline {base:.3f}s +30%)"
+                )
+        elif got > SMOKE_CEILINGS_S[name]:
+            failures.append(
+                f"{name}: {got:.3f}s > static ceiling "
+                f"{SMOKE_CEILINGS_S[name]:.3f}s (no committed baseline)"
+            )
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--smoke", action="store_true",
@@ -180,22 +254,21 @@ def main(argv=None) -> int:
     ap.add_argument("--n", type=int, default=None)
     args = ap.parse_args(argv)
 
-    n = args.n or (120_000 if args.smoke else 600_000)
-    res = run(n=n, repeats=1 if args.smoke else 3)
+    n = args.n or (SMOKE_N if args.smoke else 600_000)
+    # smoke takes best-of-2 so one scheduler hiccup cannot trip the
+    # 30%-regression gate against the best-of-3 committed baselines
+    res = run(n=n, repeats=2 if args.smoke else 3)
     res["n_points"] = n
     for k, v in sorted(res.items()):
         print(f"  {k:32s} {v}")
 
     if args.smoke:
-        failures = []
+        failures = smoke_gate(res, use_baselines=(n == SMOKE_N))
         checks = {
             "step2_route_distribute": res["step2_route_distribute_s"],
             "refine": res["refine_s"],
-            "bulk_load": res["bulk_load_s"],
             "window_single": res["window_single_64_s"],
-            "window_batch": res["window_batch_64_s"],
             "knn_single": res["knn_single_64_k16_s"],
-            "knn_batch": res["knn_batch_64_k16_s"],
         }
         for name, got in checks.items():
             if got > SMOKE_CEILINGS_S[name]:
@@ -208,6 +281,12 @@ def main(argv=None) -> int:
             return 1
         print("SMOKE OK")
         return 0
+
+    # record smoke-scale baselines for the CI regression gate alongside the
+    # full-scale numbers (same container, best-of-repeats)
+    smoke_res = run(n=SMOKE_N, repeats=3)
+    for key in SMOKE_GATED.values():
+        res[f"smoke_{key}"] = smoke_res[key]
 
     BENCH_CORE.write_text(json.dumps(res, indent=2, sort_keys=True) + "\n")
     print(f"wrote {BENCH_CORE}")

@@ -1,7 +1,9 @@
 """Serve batched k-NN queries from an FMBI index (paper as a serving
 substrate): exact tree-pruned search, the Pallas distance-kernel path,
-AMBI-style adaptive residency for a focused query stream, and booting a
-server from a bulk-loaded NodeTable snapshot without rebuilding.
+AMBI-style adaptive residency for a focused query stream, booting a
+server from a bulk-loaded NodeTable snapshot without rebuilding, and the
+compiled device query engine (bulk load on CPU, serve windows + k-NN
+through jit-compiled traversal with id-identical results).
 
     PYTHONPATH=src python examples/knn_serving.py
 """
@@ -11,14 +13,17 @@ import time
 
 import numpy as np
 
-from repro.core import PageStore, bulk_load
+from repro.core import PageStore, bulk_load, knn_query_batch, window_query_batch
 from repro.core.datasets import nycyt_like
-from repro.serve.engine import RetrievalServer
+from repro.serve.engine import DeviceQueryServer, RetrievalServer
 
 
 def main():
     print("indexing 200k 5-D trip records (NYCYT-like)...")
-    points = nycyt_like(200_000, d=5, seed=0)
+    # float32-representable coordinates: the device engine's exact-parity
+    # contract (see core/queries_jax.py) holds bit-for-bit
+    points = nycyt_like(200_000, d=5, seed=0).astype(np.float32).astype(
+        np.float64)
     server = RetrievalServer(points, levels=8)
 
     rng = np.random.default_rng(1)
@@ -49,6 +54,29 @@ def main():
                                                 n_candidate_leaves=16)
         print(f"  bridged {idx.table.n_nodes}-row table in {boot:.3f}s; "
               f"exact certificates: {np.mean(exact_s):.0%}")
+
+    # ---- compiled device engine: NodeTable -> DeviceTable -----------------
+    print("\ncompiled device query engine (microbatched, id-identical):")
+    dev_srv = DeviceQueryServer.from_index(idx, microbatch=64)
+    los = queries[:, :] - 0.03
+    his = queries[:, :] + 0.03
+    dev_srv.window(los, his)          # compile once
+    dev_srv.knn(queries, 16)
+    t0 = time.time()
+    dev_windows = dev_srv.window(los, his)
+    t_w = time.time() - t0
+    t0 = time.time()
+    dev_knn = dev_srv.knn(queries, 16)
+    t_k = time.time() - t0
+    cpu_windows, _ = window_query_batch(idx, los.astype(np.float64),
+                                        his.astype(np.float64))
+    cpu_knn, _ = knn_query_batch(idx, queries.astype(np.float64), 16)
+    w_ok = all(np.array_equal(np.sort(a), np.sort(b))
+               for a, b in zip(dev_windows, cpu_windows))
+    k_ok = all(np.array_equal(a, b) for a, b in zip(dev_knn, cpu_knn))
+    print(f"  64 windows {t_w*1e3:.1f} ms, 64 16-NN {t_k*1e3:.1f} ms "
+          f"({dev_srv.stats.microbatches} microbatches)")
+    print(f"  id-parity vs NumPy engine: windows {w_ok}, knn {k_ok}")
 
     # ---- adaptive serving: AMBI residency policy --------------------------
     print("\nadaptive residency (focused stream over one city):")

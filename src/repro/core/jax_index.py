@@ -168,6 +168,24 @@ def _leaf_window_masks(index: JaxIndex, lo: jnp.ndarray, hi: jnp.ndarray):
     return inter, contained
 
 
+# compiled-variant accounting: ``_window_count_core`` retraces once per
+# (shape bucket, candidate budget, use_kernel) combination; budgets are
+# always rounded to powers of two so the variant count stays O(log L) no
+# matter how straddle widths drift across calls.  The counter increments at
+# trace time (the body only runs when XLA compiles a new variant), which is
+# what tests pin.
+_TRACE_COUNTS = {"window_count_core": 0}
+
+
+def window_count_traces() -> int:
+    """How many times the counting core has been (re)compiled."""
+    return _TRACE_COUNTS["window_count_core"]
+
+
+def _pow2(x: int) -> int:
+    return 1 << max(0, int(x - 1).bit_length())
+
+
 @partial(jax.jit, static_argnames=("n_candidate_leaves", "use_kernel"))
 def _window_count_core(
     index: JaxIndex,
@@ -179,6 +197,7 @@ def _window_count_core(
     use_kernel: bool = False,
 ):
     """Counting pass over precomputed (Q, L) leaf masks."""
+    _TRACE_COUNTS["window_count_core"] += 1
     pts = index.points_sorted.reshape(index.n_leaves, index.leaf_size, -1)
     valid = (index.row_ids >= 0).reshape(index.n_leaves, index.leaf_size)
     base = jnp.sum(jnp.where(contained, jnp.sum(valid, axis=1)[None], 0), axis=1)
@@ -226,13 +245,18 @@ def window_count_candidates(
     certifies that no straddling leaf was left unscanned; where ``exact``
     is False the count is a lower bound, NOT the window cardinality.  Use
     :func:`window_count` for guaranteed-exact answers.
+
+    ``n_candidate_leaves`` is rounded *up* to a power of two (the compiled
+    variant actually scans that many leaves) so repeated calls with
+    drifting budgets reuse a bounded set of compilations; certificates and
+    counts reflect the rounded budget.
     """
     lo = jnp.asarray(lo)
     hi = jnp.asarray(hi)
     inter, contained = _leaf_window_masks(index, lo, hi)
+    c = max(1, min(_pow2(n_candidate_leaves), index.n_leaves))
     return _window_count_core(
-        index, lo, hi, contained, inter & ~contained,
-        n_candidate_leaves, use_kernel,
+        index, lo, hi, contained, inter & ~contained, c, use_kernel,
     )
 
 
@@ -250,10 +274,11 @@ def window_count(
     batches reuse a handful of compiled shapes.  Work therefore scales with
     the candidate leaves (plus an O(L) per-query box test), never with the
     total point count — the same pruning ``knn`` already does.  An explicit
-    ``n_candidate_leaves`` is taken as a starting budget: if the exactness
-    certificate fails it is doubled until every query is certified, so the
-    result is exact either way (pin budgets via
-    :func:`window_count_candidates` if a lower bound is acceptable).
+    ``n_candidate_leaves`` is taken as a starting budget (rounded up to a
+    power of two to bound recompiles): if the exactness certificate fails
+    it is doubled until every query is certified, so the result is exact
+    either way (pin budgets via :func:`window_count_candidates` if a lower
+    bound is acceptable).
     """
     lo = jnp.asarray(lo)
     hi = jnp.asarray(hi)
@@ -261,11 +286,9 @@ def window_count(
     straddle = inter & ~contained
     if n_candidate_leaves is None:
         need = int(jnp.max(jnp.sum(straddle, axis=1)))
-        c = 1
-        while c < need:
-            c *= 2
+        c = _pow2(max(need, 1))
     else:
-        c = n_candidate_leaves
+        c = _pow2(n_candidate_leaves)  # pow2 buckets bound recompiles
     c = max(1, min(c, index.n_leaves))
     while True:
         counts, exact = _window_count_core(

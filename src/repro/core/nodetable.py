@@ -524,6 +524,86 @@ class NodeTable:
             leaf_size=leaf_size,
         )
 
+    # -- device layout --------------------------------------------------------
+    def device_layout(self, points: np.ndarray, dtype=np.float32) -> dict:
+        """Fixed-shape arrays for the compiled query engine (numpy side).
+
+        The ragged table is re-blocked so every shape is static and every
+        query-time access is a dense gather (see ``core/queries_jax.py``,
+        which wraps these arrays in a jit-able ``DeviceTable`` pytree):
+
+          * ``leaf_pts``/``leaf_ids``  (L, S, d)/(L, S): each leaf's points
+            gathered once through ``perm`` into uniform ``S``-slot blocks
+            (S = max leaf fullness; padding slots carry ``id = -1`` and
+            dtype-max coordinates so containment and distance tests mask
+            them for free);
+          * ``leaf_lo``/``leaf_hi``  (L, d): leaf MBBs, slot-aligned;
+          * ``levels``: one block per tree depth — row MBBs, each row's
+            parent *position* within the previous level's block, and the
+            row's leaf slot (or ``L`` for branches).  Level blocks drive the
+            masked level-synchronous frontier descent; BFS order is computed
+            here so grafted (AMBI-refined) tables, whose rows are not
+            level-contiguous, lay out identically to freshly built ones.
+
+        Requires a fully refined table: an unrefined row has no subtree to
+        descend and its raw pages live host-side only.
+        """
+        if bool(self.unrefined.any()):
+            raise ValueError("device layout requires a fully refined table")
+        d = self.dim
+        big = np.finfo(dtype).max
+        rows = self.leaf_rows()
+        counts = self.leaf_count[rows]
+        L = len(rows)
+        S = int(counts.max()) if L and counts.size else 1
+        S = max(S, 1)
+        leaf_pts = np.full((L, S, d), big, dtype=dtype)
+        leaf_ids = np.full((L, S), -1, dtype=np.int32)
+        if L:
+            sel = ragged_ranges(self.leaf_start[rows], counts)
+            within = np.arange(len(sel), dtype=np.int64) - np.repeat(
+                np.cumsum(counts) - counts, counts
+            )
+            slot_l = np.repeat(np.arange(L, dtype=np.int64), counts)
+            data_rows = self.perm[sel]
+            leaf_pts[slot_l, within] = points[data_rows].astype(dtype)
+            leaf_ids[slot_l, within] = data_rows
+        slot_of = np.full(self._n, L, dtype=np.int64)
+        slot_of[rows] = np.arange(L)
+        # BFS level blocks
+        pos = np.zeros(self._n, dtype=np.int64)
+        levels: list[dict] = []
+        cur = np.zeros(1, dtype=np.int64)
+        parent_pos = np.zeros(1, dtype=np.int64)
+        while cur.size:
+            pos[cur] = np.arange(cur.size)
+            levels.append(
+                {
+                    "lo": self.mbb_lo[cur].astype(dtype),
+                    "hi": self.mbb_hi[cur].astype(dtype),
+                    "parent": parent_pos.astype(np.int32),
+                    "slot": slot_of[cur].astype(np.int32),
+                }
+            )
+            cc = self.child_count[cur]
+            nxt = ragged_ranges(self.first_child[cur], cc)
+            parent_pos = pos[np.repeat(cur, cc)]
+            cur = nxt
+        return {
+            "leaf_pts": leaf_pts,
+            "leaf_ids": leaf_ids,
+            "leaf_counts": counts.astype(np.int32),
+            "leaf_lo": self.mbb_lo[rows].astype(dtype),
+            "leaf_hi": self.mbb_hi[rows].astype(dtype),
+            "levels": levels,
+        }
+
+    def to_device(self, points: np.ndarray, dtype=np.float32):
+        """Wrap :meth:`device_layout` into the jit-able ``DeviceTable``."""
+        from .queries_jax import DeviceTable
+
+        return DeviceTable.from_table(self, points, dtype=dtype)
+
     # -- invariants ----------------------------------------------------------
     def check_invariants(self, n_points: Optional[int] = None) -> None:
         """Assert the structural invariants every layer relies on."""

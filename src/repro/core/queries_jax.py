@@ -1,0 +1,432 @@
+"""Compiled device-resident query engine over the flat ``NodeTable``.
+
+The NumPy engine in ``queries.py`` is the paper-faithful authority — it
+charges the LRU page I/O the paper costs indexes by — but its batched hot
+paths still execute on the host.  This module compiles the same batched
+window and k-NN queries for the accelerator: the ``NodeTable`` is exported
+once into fixed-shape device arrays (:class:`DeviceTable`) and every query
+batch then runs as a couple of jit-compiled dispatches with no per-query
+Python on the geometry path.
+
+Execution model
+---------------
+  * **Level-synchronous frontier traversal.**  The table's rows are
+    re-blocked by BFS depth (``NodeTable.device_layout``); descending the
+    tree is a static unrolled loop over level blocks in which the whole
+    level's MBBs are tested against the whole query batch with one masked
+    broadcast comparison, and survival propagates to the next level through
+    a fixed-fanout parent-position gather.  There is no dynamic frontier —
+    every row is tested, masked by its parent's bit — which keeps all
+    shapes static while computing exactly the visited set of the NumPy
+    engine (MBB nesting makes the hit set downward-closed).
+  * **Window collection is work-proportional.**  The traversal's (Q, L)
+    leaf hit mask is flattened into a list of (query, leaf) *pairs* — the
+    batch's true candidate set — padded to a power-of-two bucket and
+    scanned leaf-block by leaf-block.  Cost scales with the candidate
+    leaves the batch actually touches (the property the NumPy engine has),
+    not with Q x max-per-query, and the compiled variants are bounded by
+    the pair-bucket sizes.  Qualifying ids are packed host-side with two
+    vectorized NumPy selections (the only remaining host work).
+  * **k-NN scans fixed candidate budgets with certificates.**  Each query
+    takes its C closest leaves by box mindist (indices-only ``top_k`` —
+    XLA CPU's top_k with live values is pathologically slow), scans them,
+    and certifies exactness against the mindist of the closest unscanned
+    leaf (computed by masking the scanned leaves to +inf and taking a row
+    min).  The budget doubles until every certificate holds, so results
+    are exact; budgets are powers of two, bounding compiled variants.
+  * **Fused leaf kernels.**  The per-candidate containment test
+    (``kernels/window_filter.window_mask_gathered``) and candidate
+    distance scan (``kernels/knn_topk.gathered_dist2``) run as Pallas
+    kernels on TPU (``use_kernel=None`` auto-selects; interpret mode
+    exercises the same kernels on CPU CI) with an equivalent jnp path for
+    plain XLA backends.
+
+Parity contract
+---------------
+For float32-representable inputs, window results are exactly the NumPy
+engine's id sets: containment is an exact comparison on identical values.
+k-NN candidate sets are certified complete by the best-first bound (k-th
+distance <= mindist of the closest unscanned leaf), so returned ids are
+exact nearest neighbors *under float32 distance arithmetic*: the NumPy
+engine ranks by float64, so two neighbors whose true squared distances
+differ by less than one f32 ulp can order differently at the k-th
+boundary (never observed under the suite's pinned seeds; exact ties are
+unspecified in both engines — tie-heavy tests compare distances).
+Result *order* within a window result set is unspecified; compare as
+sets.  The device path charges no simulated I/O — ``IOStats`` remain the
+NumPy engine's job.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .jax_index import _pow2
+from .nodetable import NodeTable
+
+BIG = float(np.finfo(np.float32).max)
+
+# one dispatch scans at most this many (query, leaf) pairs; bigger
+# candidate sets stream in chunks so memory stays bounded and compiled
+# variants stay the handful of power-of-two bucket sizes below the cap
+PAIR_CHUNK = 16384
+
+# retrace counters (trace-time side effects): tests pin compile growth
+TRACE_COUNTS = {"frontier": 0, "window_collect": 0, "knn_core": 0}
+
+
+def _use_kernel_default() -> bool:
+    from ..kernels import ops as kops
+
+    return kops._on_tpu()
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DeviceTable:
+    """Fixed-shape device export of a fully refined ``NodeTable``.
+
+    ``levels`` is a tuple of per-depth blocks ``(lo, hi, parent, slot)``
+    (see ``NodeTable.device_layout`` for the exact semantics).  The whole
+    object is a pytree, so it is passed to jitted cores as a runtime
+    argument and two tables with identical shapes share compilations.
+    ``leaf_ids_host`` keeps the id blocks host-side for the NumPy packing
+    stage of window collection.
+    """
+
+    leaf_pts: jnp.ndarray    # (L, S, d) leaf-blocked points, pad = dtype max
+    leaf_ids: jnp.ndarray    # (L, S) int32 dataset rows, pad = -1
+    leaf_counts: jnp.ndarray # (L,) int32 live slots per leaf block
+    leaf_lo: jnp.ndarray     # (L, d)
+    leaf_hi: jnp.ndarray     # (L, d)
+    levels: tuple            # per depth: (lo (n,d), hi (n,d), parent, slot)
+    n_points: int
+    leaf_ids_host: np.ndarray = None
+
+    def tree_flatten(self):
+        # leaf_ids_host is host-only scaffolding: excluded from the pytree
+        # (aux must hash for the jit cache); traced reconstructions carry
+        # None, which no jitted core touches
+        return (
+            (self.leaf_pts, self.leaf_ids, self.leaf_counts, self.leaf_lo,
+             self.leaf_hi, self.levels),
+            (self.n_points,),
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children, n_points=aux[0], leaf_ids_host=None)
+
+    @property
+    def n_leaves(self) -> int:
+        return self.leaf_pts.shape[0]
+
+    @property
+    def leaf_size(self) -> int:
+        return self.leaf_pts.shape[1]
+
+    @property
+    def dim(self) -> int:
+        return self.leaf_pts.shape[2]
+
+    @property
+    def host_ids(self) -> np.ndarray:
+        """Host-side leaf id blocks; rebuilt (and cached) if this instance
+        came out of a pytree round-trip that dropped the scaffolding."""
+        if self.leaf_ids_host is None:
+            self.leaf_ids_host = np.asarray(self.leaf_ids)
+        return self.leaf_ids_host
+
+    @classmethod
+    def from_table(
+        cls, table: NodeTable, points: np.ndarray, dtype=np.float32
+    ) -> "DeviceTable":
+        lay = table.device_layout(np.asarray(points), dtype=dtype)
+        levels = tuple(
+            (
+                jnp.asarray(lv["lo"]),
+                jnp.asarray(lv["hi"]),
+                jnp.asarray(lv["parent"]),
+                jnp.asarray(lv["slot"]),
+            )
+            for lv in lay["levels"]
+        )
+        return cls(
+            leaf_pts=jnp.asarray(lay["leaf_pts"]),
+            leaf_ids=jnp.asarray(lay["leaf_ids"]),
+            leaf_counts=jnp.asarray(lay["leaf_counts"]),
+            leaf_lo=jnp.asarray(lay["leaf_lo"]),
+            leaf_hi=jnp.asarray(lay["leaf_hi"]),
+            levels=levels,
+            n_points=len(points),
+            leaf_ids_host=lay["leaf_ids"],
+        )
+
+    @classmethod
+    def from_index(cls, index, dtype=np.float32) -> "DeviceTable":
+        """From a built ``core.fmbi.Index`` (table + dataset)."""
+        return cls.from_table(index.table, index.points, dtype=dtype)
+
+
+# --------------------------------------------------------------------------
+# level-synchronous frontier traversal
+# --------------------------------------------------------------------------
+@jax.jit
+def frontier_leaf_hits(
+    dev: DeviceTable, los: jnp.ndarray, his: jnp.ndarray
+) -> jnp.ndarray:
+    """(Q, L) mask of leaves whose MBB intersects each query window.
+
+    One masked broadcast box test per level block; survival propagates
+    down through the parent-position gather.  Branch rows scatter into the
+    sentinel row ``L`` of the accumulator, which is dropped.
+    """
+    TRACE_COUNTS["frontier"] += 1
+    q = los.shape[0]
+    n_l = dev.n_leaves
+    d = dev.dim
+    leaf_hit = jnp.zeros((n_l + 1, q), dtype=bool)
+    prev = None
+    for lo_l, hi_l, parent, slot in dev.levels:
+        # static unroll over dimensions: (n_level, Q) planes, no
+        # (n_level, Q, d) temporaries
+        hit = None
+        for j in range(d):
+            h = (lo_l[:, j][:, None] <= his[:, j][None, :]) & (
+                hi_l[:, j][:, None] >= los[:, j][None, :]
+            )
+            hit = h if hit is None else hit & h
+        if prev is not None:
+            hit = hit & prev[parent]
+        leaf_hit = leaf_hit.at[slot].max(hit)
+        prev = hit
+    return leaf_hit[:n_l].T
+
+
+# --------------------------------------------------------------------------
+# window: pair-list candidate collection
+# --------------------------------------------------------------------------
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def _pair_collect(
+    dev: DeviceTable,
+    los: jnp.ndarray,
+    his: jnp.ndarray,
+    q_idx: jnp.ndarray,      # (P,) query of each candidate pair
+    leaf_idx: jnp.ndarray,   # (P,) leaf slot of each candidate pair
+    pair_valid: jnp.ndarray, # (P,) padding mask
+    use_kernel: bool,
+):
+    """Scan one bucket of (query, leaf) candidate pairs: gather each
+    pair's leaf block and test containment against its query's box."""
+    TRACE_COUNTS["window_collect"] += 1
+    s = dev.leaf_size
+    lo_p = los[q_idx]                         # (P, d)
+    hi_p = his[q_idx]
+    pts = dev.leaf_pts[leaf_idx]              # (P, S, d)
+    # slot validity from the per-leaf fill counts: no (P, S) id gather
+    valid = (
+        jnp.arange(s, dtype=jnp.int32)[None, :]
+        < dev.leaf_counts[leaf_idx][:, None]
+    ) & pair_valid[:, None]
+    if use_kernel:
+        from ..kernels import ops as kops
+
+        inside = (
+            kops.window_mask_gathered(lo_p, hi_p, pts,
+                                      valid.astype(jnp.int32)) > 0
+        )
+    else:
+        inside = (
+            jnp.all((pts >= lo_p[:, None, :]) & (pts <= hi_p[:, None, :]),
+                    axis=2)
+            & valid
+        )
+    return inside
+
+
+def _pad_batch(arrs, fills):
+    """Pad the query axis to a power-of-two bucket (bounds compiled
+    variants across ragged batch sizes)."""
+    q0 = arrs[0].shape[0]
+    qp = _pow2(max(q0, 1))
+    if qp == q0:
+        return arrs, q0
+    out = []
+    for a, fill in zip(arrs, fills):
+        pad = np.full((qp - q0,) + a.shape[1:], fill, dtype=a.dtype)
+        out.append(np.concatenate([a, pad]))
+    return out, q0
+
+
+def window_query_batch_jax(
+    dev: DeviceTable,
+    los: np.ndarray,
+    his: np.ndarray,
+    *,
+    use_kernel: bool | None = None,
+) -> list[np.ndarray]:
+    """Compiled batched window query: per-query arrays of dataset row ids.
+
+    Ids are identical (as sets) to ``queries.window_query_batch`` for
+    float32-representable inputs, and completeness is structural — every
+    intersecting leaf becomes a candidate pair, so there is no budget to
+    escalate.  Work scales with the candidate pairs the batch actually
+    touches; the pair list streams in power-of-two buckets capped at
+    ``PAIR_CHUNK`` so compiled variants stay bounded.
+    """
+    if use_kernel is None:
+        use_kernel = _use_kernel_default()
+    los = np.atleast_2d(np.asarray(los, dtype=np.float32))
+    his = np.atleast_2d(np.asarray(his, dtype=np.float32))
+    # padding boxes are inverted: they can never intersect a leaf
+    (los, his), q0 = _pad_batch([los, his], [BIG, -BIG])
+    losj, hisj = jnp.asarray(los), jnp.asarray(his)
+    inter = np.asarray(frontier_leaf_hits(dev, losj, hisj))
+    q_idx, leaf_idx = np.nonzero(inter[:q0])  # row-major: query-grouped
+    p0 = len(q_idx)
+    if p0 == 0:
+        return [np.zeros(0, dtype=np.int64) for _ in range(q0)]
+    parts, pair_counts = [], []
+    for a in range(0, p0, PAIR_CHUNK):
+        b = min(a + PAIR_CHUNK, p0)
+        p = _pow2(b - a)
+        qi = np.zeros(p, dtype=np.int32)
+        li = np.zeros(p, dtype=np.int32)
+        qi[: b - a] = q_idx[a:b]
+        li[: b - a] = leaf_idx[a:b]
+        pv = np.arange(p) < (b - a)
+        inside = np.asarray(
+            _pair_collect(
+                dev, losj, hisj, jnp.asarray(qi), jnp.asarray(li),
+                jnp.asarray(pv), use_kernel,
+            )
+        )
+        ids = dev.host_ids[li]                # (P, S) host gather
+        parts.append(ids[inside].astype(np.int64))
+        pair_counts.append(inside.sum(axis=1)[: b - a])
+    all_ids = np.concatenate(parts)
+    per_pair = np.concatenate(pair_counts)
+    per_query = np.bincount(q_idx, weights=per_pair, minlength=q0)
+    return np.split(all_ids, np.cumsum(per_query.astype(np.int64))[:-1])
+
+
+# --------------------------------------------------------------------------
+# k-NN: candidate-leaf scan + top-k merge
+# --------------------------------------------------------------------------
+@functools.partial(
+    jax.jit, static_argnames=("k", "n_candidate_leaves", "use_kernel")
+)
+def _knn_core(
+    dev: DeviceTable,
+    qs: jnp.ndarray,
+    k: int,
+    n_candidate_leaves: int,
+    use_kernel: bool,
+):
+    """Scan each query's C closest leaves (by box mindist) and merge top-k.
+
+    Returns (ids, d2, exact): ``exact`` certifies the best-first bound —
+    the k-th distance does not exceed the mindist of the closest leaf left
+    unscanned, so no unscanned leaf can hold a closer neighbor."""
+    TRACE_COUNTS["knn_core"] += 1
+    q = qs.shape[0]
+    n_l, s, d = dev.leaf_pts.shape
+    c = min(n_candidate_leaves, n_l)
+    # box mindists accumulated per dimension: (Q, L) planes only
+    mind = jnp.zeros((q, n_l), dtype=dev.leaf_lo.dtype)
+    for j in range(d):
+        g = jnp.maximum(
+            dev.leaf_lo[:, j][None, :] - qs[:, j][:, None], 0.0
+        ) + jnp.maximum(qs[:, j][:, None] - dev.leaf_hi[:, j][None, :], 0.0)
+        mind = mind + g * g
+    # indices-only top_k: keeping the values output live trips XLA CPU's
+    # slow generic sort path (~10x); the unscanned bound is recovered below
+    _, cand = jax.lax.top_k(-mind, c)
+    flat_pts = dev.leaf_pts[cand].reshape(q, c * s, d)
+    if use_kernel:
+        from ..kernels import ops as kops
+
+        # slot validity from the per-leaf fill counts: no (Q, C*S) id
+        # gather — result ids are recovered after selection below
+        flat_valid = (
+            jnp.arange(s, dtype=jnp.int32)[None, None, :]
+            < dev.leaf_counts[cand][:, :, None]
+        ).reshape(q, c * s)
+        d2 = kops.gathered_dist2(qs, flat_pts, flat_valid.astype(jnp.int32))
+    else:
+        # no mask needed: padding slots carry dtype-max coordinates, so
+        # their squared distances overflow to +inf and never select
+        d2 = jnp.sum((flat_pts - qs[:, None, :]) ** 2, axis=2)
+    kk = min(k, c * s)
+    # two-level merge: top-k within each leaf block, then across the C
+    # block winners — same result set, much smaller sort fronts
+    kl = min(kk, s)
+    negl, til = jax.lax.top_k(-d2.reshape(q, c, s), kl)   # (Q, C, kl)
+    negd, tim = jax.lax.top_k(negl.reshape(q, c * kl), kk)
+    ti = (
+        jnp.take_along_axis(til.reshape(q, c * kl), tim, axis=1)
+        + (tim // kl) * s
+    )
+    leaf_sel = jnp.take_along_axis(cand, ti // s, axis=1)
+    ids = dev.leaf_ids[leaf_sel, ti % s]
+    d2k = -negd
+    if c >= n_l:
+        exact = jnp.ones(q, dtype=bool)
+    elif kk < k:
+        # fewer candidate slots than k: only a full scan certifies
+        exact = jnp.zeros(q, dtype=bool)
+    else:
+        masked = mind.at[jnp.arange(q)[:, None], cand].set(jnp.inf)
+        unscanned = jnp.min(masked, axis=1)
+        # a kth drawn from a padding slot is BIG/inf: certificate fails
+        exact = d2k[:, -1] <= unscanned
+    return ids, d2k, exact
+
+
+def knn_query_batch_jax(
+    dev: DeviceTable,
+    qs: np.ndarray,
+    k: int,
+    *,
+    use_kernel: bool | None = None,
+    n_candidate_leaves: int | None = None,
+) -> list[np.ndarray]:
+    """Compiled batched k-NN: per-query ascending-distance row-id arrays.
+
+    The candidate budget starts at a small power of two and doubles until
+    every query's exactness certificate holds (or the whole leaf table is
+    scanned), so results match ``queries.knn_query_batch`` — returned ids
+    are exact k nearest (length ``min(k, n)``); among exactly tied
+    distances the chosen ids may differ.  Escalation reruns only the
+    queries whose certificate failed (repacked into a smaller power-of-two
+    bucket), so one hard query does not double the whole batch's work."""
+    if use_kernel is None:
+        use_kernel = _use_kernel_default()
+    qs = np.atleast_2d(np.asarray(qs, dtype=np.float32))
+    q0 = qs.shape[0]
+    s = dev.leaf_size
+    cap = _pow2(dev.n_leaves)
+    if n_candidate_leaves is None:
+        c = min(_pow2(max(8, -(-2 * k) // s)), cap)
+    else:
+        c = min(_pow2(max(n_candidate_leaves, 1)), cap)
+    results: list = [None] * q0
+    pending = np.arange(q0)
+    while len(pending):
+        (batch,), b0 = _pad_batch([qs[pending]], [0.0])
+        ids, d2k, exact = jax.device_get(
+            _knn_core(dev, jnp.asarray(batch), k, c, use_kernel)
+        )
+        done = exact[:b0] if c < dev.n_leaves else np.ones(b0, dtype=bool)
+        # padding fill (BIG/inf distances) sorts last, so the result is
+        # always the first min(k, n) entries — no distance threshold needed
+        m = min(k, dev.n_points)
+        for j in np.flatnonzero(done):
+            results[pending[j]] = ids[j, :m].astype(np.int64)
+        pending = pending[~done]
+        c = min(c * 2, cap)
+    return results

@@ -42,6 +42,53 @@ def _dist2_kernel(q_ref, p_ref, valid_ref, out_ref):
     out_ref[...] = jnp.where(valid[None, :] > 0, d2, big)
 
 
+def _gathered_dist2_kernel(q_ref, p_ref, valid_ref, out_ref):
+    q = q_ref[...]                    # (1, d)
+    p = p_ref[...]                    # (1, pt, d)
+    valid = valid_ref[...]            # (1, pt)
+    acc = jnp.zeros(p.shape[:2], jnp.float32)
+    for k in range(p.shape[2]):       # static unroll over dimensions keeps
+        diff = p[..., k] - q[:, k][:, None]   # the working set at one plane
+        acc = acc + diff * diff
+    big = jnp.asarray(jnp.finfo(jnp.float32).max, jnp.float32)
+    out_ref[...] = jnp.where(valid > 0, acc, big)
+
+
+@functools.partial(jax.jit, static_argnames=("pt", "interpret"))
+def gathered_dist2(
+    queries: jnp.ndarray,   # (nq, d) float32
+    points: jnp.ndarray,    # (nq, npp, d) float32, npp % pt == 0
+    valid: jnp.ndarray,     # (nq, npp) int32: 1 = real candidate, 0 = padding
+    *,
+    pt: int = DEFAULT_PT,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """(nq, npp) masked squared distances, per-query gathered layout.
+
+    This is the candidate-leaf scan of the device query engine: each query
+    brings its own gathered candidate points (the contents of its closest
+    leaves, padded to a fixed shape).  Query-major grid, one query row per
+    block — the same layout as ``window_filter.window_count_gathered``.
+    Selection (top-k merge) runs as plain XLA ``top_k`` on the output, which
+    the consumer fuses.
+    """
+    nq, npp, d = points.shape
+    assert npp % pt == 0, "pad the candidate axis to a tile multiple"
+    grid = (nq, npp // pt)
+    return pl.pallas_call(
+        _gathered_dist2_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, pt, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, pt), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, pt), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nq, npp), jnp.float32),
+        interpret=interpret,
+    )(queries, points, valid)
+
+
 @functools.partial(
     jax.jit, static_argnames=("qt", "pt", "interpret")
 )

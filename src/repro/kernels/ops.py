@@ -7,6 +7,7 @@ handle padding to tile multiples so callers can pass ragged sizes.
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -24,6 +25,17 @@ def _on_tpu() -> bool:
         return False
 
 
+def interpret_default() -> bool:
+    """Resolve the interpret flag: the ``REPRO_PALLAS_INTERPRET`` env var
+    (1/0) wins — CI uses it to force interpret-mode kernel coverage on
+    CPU-only runners — else compile to Mosaic exactly when a TPU is
+    attached."""
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None and env != "":
+        return env not in ("0", "false", "False")
+    return not _on_tpu()
+
+
 def _pad_rows(x, mult, fill):
     n = x.shape[0]
     n_pad = -(-n // mult) * mult
@@ -38,7 +50,7 @@ def partition_assign(points, split_dim, split_val, *, levels: int,
                      interpret: bool | None = None):
     """Leaf/subspace id per point via the Pallas routing kernel."""
     if interpret is None:
-        interpret = not _on_tpu()
+        interpret = interpret_default()
     pts, n = _pad_rows(jnp.asarray(points, jnp.float32), tile, 0.0)
     out = _pa.partition_assign(
         pts, split_dim, split_val, levels=levels, tile=tile,
@@ -51,7 +63,7 @@ def pairwise_dist2(queries, points, valid=None, *, qt=_knn.DEFAULT_QT,
                    pt=_knn.DEFAULT_PT, interpret: bool | None = None):
     """Masked (nq, np) squared distances via the Pallas tile kernel."""
     if interpret is None:
-        interpret = not _on_tpu()
+        interpret = interpret_default()
     q = jnp.asarray(queries, jnp.float32)
     p = jnp.asarray(points, jnp.float32)
     if valid is None:
@@ -104,7 +116,7 @@ def window_count(lo, hi, points, valid=None, *, qt=_wf.DEFAULT_QT,
                  pt=_wf.DEFAULT_PT, interpret: bool | None = None):
     """In-window point counts per query box via the Pallas tile kernel."""
     if interpret is None:
-        interpret = not _on_tpu()
+        interpret = interpret_default()
     lo = jnp.asarray(lo, jnp.float32)
     hi = jnp.asarray(hi, jnp.float32)
     p = jnp.asarray(points, jnp.float32)
@@ -126,7 +138,7 @@ def window_count_gathered(lo, hi, points, valid, *, pt=_wf.DEFAULT_PT,
     """Per-query gathered layout: ``points`` is (nq, npp, d) with its own
     validity mask; the candidate axis is padded to a tile multiple here."""
     if interpret is None:
-        interpret = not _on_tpu()
+        interpret = interpret_default()
     lo = jnp.asarray(lo, jnp.float32)
     hi = jnp.asarray(hi, jnp.float32)
     p = jnp.asarray(points, jnp.float32)
@@ -139,9 +151,48 @@ def window_count_gathered(lo, hi, points, valid, *, pt=_wf.DEFAULT_PT,
     return _wf.window_count_gathered(lo, hi, p, v, pt=pt, interpret=interpret)
 
 
+def _pad_gathered(lo, hi, points, valid, pt):
+    """Shared prep for the per-query gathered kernels: cast + pad the
+    candidate axis to a tile multiple."""
+    lo = jnp.asarray(lo, jnp.float32)
+    hi = None if hi is None else jnp.asarray(hi, jnp.float32)
+    p = jnp.asarray(points, jnp.float32)
+    v = jnp.asarray(valid, jnp.int32)
+    npp = p.shape[1]
+    npp_pad = -(-max(npp, 1) // pt) * pt
+    if npp_pad != npp:
+        p = jnp.pad(p, ((0, 0), (0, npp_pad - npp), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, npp_pad - npp)))
+    return lo, hi, p, v, npp
+
+
+def window_mask_gathered(lo, hi, points, valid, *, pt=_wf.DEFAULT_PT,
+                         interpret: bool | None = None):
+    """Per-candidate containment mask (nq, npp) for the gathered layout —
+    the collection stage of the device window engine."""
+    if interpret is None:
+        interpret = interpret_default()
+    lo, hi, p, v, npp = _pad_gathered(lo, hi, points, valid, pt)
+    out = _wf.window_mask_gathered(lo, hi, p, v, pt=pt, interpret=interpret)
+    return out[:, :npp]
+
+
+def gathered_dist2(queries, points, valid, *, pt=_knn.DEFAULT_PT,
+                   interpret: bool | None = None):
+    """Per-query gathered squared distances (nq, npp) — the candidate-leaf
+    scan of the device k-NN engine (invalid slots carry float32 max)."""
+    if interpret is None:
+        interpret = interpret_default()
+    q, _, p, v, npp = _pad_gathered(queries, None, points, valid, pt)
+    out = _knn.gathered_dist2(q, p, v, pt=pt, interpret=interpret)
+    return out[:, :npp]
+
+
 # re-export oracles for test convenience
 partition_assign_ref = ref.partition_assign_ref
 pairwise_dist2_ref = ref.pairwise_dist2_ref
 knn_topk_ref = ref.knn_topk_ref
 window_count_ref = ref.window_count_ref
 window_count_gathered_ref = ref.window_count_gathered_ref
+window_mask_gathered_ref = ref.window_mask_gathered_ref
+gathered_dist2_ref = ref.gathered_dist2_ref

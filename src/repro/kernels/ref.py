@@ -50,3 +50,20 @@ def window_count_gathered_ref(lo, hi, points, valid):
         (points >= lo[:, None, :]) & (points <= hi[:, None, :]), axis=-1
     ) & (valid > 0)
     return jnp.sum(inside, axis=1).astype(jnp.int32)
+
+
+def window_mask_gathered_ref(lo, hi, points, valid):
+    """Reference containment mask for the per-query gathered layout."""
+    inside = jnp.all(
+        (points >= lo[:, None, :]) & (points <= hi[:, None, :]), axis=-1
+    ) & (valid > 0)
+    return inside.astype(jnp.int32)
+
+
+def gathered_dist2_ref(queries, points, valid):
+    """Reference per-query gathered squared distances: (nq, npp, d) points."""
+    d2 = jnp.sum((points - queries[:, None, :]) ** 2, axis=-1).astype(
+        jnp.float32
+    )
+    big = jnp.finfo(jnp.float32).max
+    return jnp.where(valid > 0, d2, big)

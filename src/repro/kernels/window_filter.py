@@ -82,6 +82,54 @@ def window_count_tiles(
     )(lo, hi, points, valid)
 
 
+def _gathered_mask_kernel(lo_ref, hi_ref, p_ref, valid_ref, out_ref):
+    lo = lo_ref[...]                  # (1, d)
+    hi = hi_ref[...]                  # (1, d)
+    p = p_ref[...]                    # (1, pt, d)
+    valid = valid_ref[...]            # (1, pt)
+    acc = valid > 0
+    for k in range(p.shape[2]):
+        pk = p[..., k]                # (1, pt)
+        acc = acc & (pk >= lo[:, k][:, None]) & (pk <= hi[:, k][:, None])
+    out_ref[...] = acc.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("pt", "interpret"))
+def window_mask_gathered(
+    lo: jnp.ndarray,        # (nq, d) float32
+    hi: jnp.ndarray,        # (nq, d) float32
+    points: jnp.ndarray,    # (nq, npp, d) float32, npp % pt == 0
+    valid: jnp.ndarray,     # (nq, npp) int32
+    *,
+    pt: int = DEFAULT_PT,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """(nq, npp) per-candidate containment mask (1 = inside the query box).
+
+    The *collection* variant of :func:`window_count_gathered`: instead of
+    reducing to a count it keeps the full mask so the device query engine
+    can pack the qualifying candidate ids into its fixed-shape result
+    buffer.  Pure map over (query, candidate-tile) blocks — no revisit
+    accumulation is needed.
+    """
+    nq, npp, d = points.shape
+    assert npp % pt == 0, "pad the candidate axis to a tile multiple"
+    grid = (nq, npp // pt)
+    return pl.pallas_call(
+        _gathered_mask_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, pt, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, pt), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, pt), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nq, npp), jnp.int32),
+        interpret=interpret,
+    )(lo, hi, points, valid)
+
+
 def _gathered_kernel(lo_ref, hi_ref, p_ref, valid_ref, out_ref):
     j = pl.program_id(1)
     lo = lo_ref[...]                  # (1, d)

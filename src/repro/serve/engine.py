@@ -6,6 +6,10 @@ kNN/window queries over an FMBI ``JaxIndex``; in ``adaptive=True`` mode it
 applies AMBI's residency policy — only leaves that the live query stream
 touches are kept "hot" (the TPU analogue of the paper's buffer retention),
 with hit statistics exposed for the workload-adaptation benchmark.
+``DeviceQueryServer`` serves batched window and k-NN traffic straight off a
+bulk-loaded ``NodeTable`` through the compiled ``queries_jax`` engine, with
+microbatching so arbitrary client batch sizes reuse a bounded set of
+compiled variants.
 """
 from __future__ import annotations
 
@@ -152,3 +156,81 @@ class RetrievalServer:
             valid=(self.index.row_ids >= 0).astype(jnp.int32),
         )
         return np.asarray(idx), np.asarray(d2)
+
+
+@dataclasses.dataclass
+class DeviceQueryStats:
+    queries: int = 0
+    microbatches: int = 0
+
+
+class DeviceQueryServer:
+    """Batched window/k-NN serving over a ``NodeTable`` via the compiled
+    device engine (``core/queries_jax.py``).
+
+    Boots from a built CPU index (or its ``.npz`` snapshot) by exporting
+    the flat table to the device once; every query batch afterwards is one
+    compiled dispatch.  Incoming traffic is split into ``microbatch``-sized
+    chunks — each chunk pads to a power-of-two bucket inside the engine —
+    so any client batch size is served by a bounded set of compiled
+    variants instead of a fresh compilation per shape.  Exactness matches
+    the NumPy engine (see the queries_jax parity contract); the simulated
+    LRU I/O accounting stays with the CPU path.
+    """
+
+    def __init__(self, table, points: np.ndarray, *,
+                 microbatch: int = 64, use_kernel: bool | None = None):
+        from ..core.queries_jax import DeviceTable
+
+        self.dev = DeviceTable.from_table(table, np.asarray(points))
+        self.microbatch = int(microbatch)
+        self.use_kernel = use_kernel
+        self.stats = DeviceQueryStats()
+
+    @classmethod
+    def from_index(cls, index, **kw) -> "DeviceQueryServer":
+        """From a built ``core.fmbi.Index`` (or AMBI's ``.index``)."""
+        return cls(index.table, index.points, **kw)
+
+    @classmethod
+    def from_snapshot(cls, path, **kw) -> "DeviceQueryServer":
+        """From a ``NodeTable.save``/``Index.save`` snapshot with points."""
+        from ..core.nodetable import NodeTable
+
+        table, _meta, points = NodeTable.load(path)
+        if points is None:
+            raise ValueError("snapshot was saved without points")
+        return cls(table, points, **kw)
+
+    def _chunks(self, n: int):
+        for start in range(0, n, self.microbatch):
+            yield start, min(start + self.microbatch, n)
+
+    def window(self, los: np.ndarray, his: np.ndarray) -> list[np.ndarray]:
+        """Per-query dataset row ids inside each [lo, hi] box."""
+        from ..core.queries_jax import window_query_batch_jax
+
+        los = np.atleast_2d(np.asarray(los))
+        his = np.atleast_2d(np.asarray(his))
+        out: list[np.ndarray] = []
+        for a, b in self._chunks(los.shape[0]):
+            out.extend(window_query_batch_jax(
+                self.dev, los[a:b], his[a:b], use_kernel=self.use_kernel
+            ))
+            self.stats.microbatches += 1
+        self.stats.queries += los.shape[0]
+        return out
+
+    def knn(self, qs: np.ndarray, k: int) -> list[np.ndarray]:
+        """Per-query ascending-distance row ids (length min(k, n))."""
+        from ..core.queries_jax import knn_query_batch_jax
+
+        qs = np.atleast_2d(np.asarray(qs))
+        out: list[np.ndarray] = []
+        for a, b in self._chunks(qs.shape[0]):
+            out.extend(knn_query_batch_jax(
+                self.dev, qs[a:b], k, use_kernel=self.use_kernel
+            ))
+            self.stats.microbatches += 1
+        self.stats.queries += qs.shape[0]
+        return out

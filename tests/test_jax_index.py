@@ -95,6 +95,33 @@ def test_knn_exact_with_certificate(k):
     assert np.mean(np.asarray(exact)) > 0.8  # certificate usually holds
 
 
+def test_window_count_compile_cache_bounded():
+    """Recompiles are bounded: budgets are bucketed to powers of two, so a
+    workload whose straddle widths grow across calls reuses the warm
+    variants — a repeated sweep adds zero retraces of the counting core."""
+    pts = osm_like(16_384, seed=6).astype(np.float32)
+    padded, ids = jax_index.pad_points(pts, 7)
+    idx = jax_index.build(jnp.asarray(padded), 7, jnp.asarray(ids, jnp.int32))
+    rng = np.random.default_rng(3)
+    los = (rng.random((16, 2)) * 0.5).astype(np.float32)
+
+    def sweep():
+        for w in (0.02, 0.05, 0.1, 0.2, 0.35, 0.5):  # growing straddle
+            jax_index.window_count(idx, jnp.asarray(los),
+                                   jnp.asarray(los + w))
+        # explicit non-pow2 budgets land in the same pow2 bucket
+        for budget in (5, 6, 7, 8):
+            jax_index.window_count(idx, jnp.asarray(los),
+                                   jnp.asarray(los + 0.1),
+                                   n_candidate_leaves=budget)
+
+    sweep()  # warm every bucket this workload can reach
+    before = jax_index.window_count_traces()
+    sweep()
+    sweep()
+    assert jax_index.window_count_traces() == before
+
+
 DIST_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"

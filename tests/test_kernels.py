@@ -106,6 +106,46 @@ def test_window_count_gathered_matches_ref(pt):
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
+@pytest.mark.parametrize("pt", [128, 512])
+def test_window_mask_gathered_matches_ref(pt):
+    """Collection variant: the per-candidate mask, not just its sum."""
+    rng = np.random.default_rng(pt + 1)
+    nq, npp, d = 11, 300, 2  # ragged candidate axis: exercises padding
+    lo = rng.random((nq, d)).astype(np.float32) * 0.7
+    hi = lo + 0.3
+    p = rng.random((nq, npp, d)).astype(np.float32)
+    valid = (rng.random((nq, npp)) > 0.1).astype(np.int32)
+    got = ops.window_mask_gathered(lo, hi, p, valid, pt=pt)
+    want = ops.window_mask_gathered_ref(
+        jnp.asarray(lo), jnp.asarray(hi), jnp.asarray(p), jnp.asarray(valid)
+    )
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # mask sums agree with the counting kernel
+    cnt = ops.window_count_gathered(lo, hi, p, valid, pt=pt)
+    np.testing.assert_array_equal(
+        np.asarray(got).sum(axis=1), np.asarray(cnt)
+    )
+
+
+@pytest.mark.parametrize("pt", [128, 512])
+@pytest.mark.parametrize("d", [2, 5])
+def test_gathered_dist2_matches_ref(pt, d):
+    rng = np.random.default_rng(pt * 3 + d)
+    nq, npp = 9, 275  # ragged candidate axis: exercises padding
+    q = rng.normal(0, 1, (nq, d)).astype(np.float32)
+    p = rng.normal(0, 1, (nq, npp, d)).astype(np.float32)
+    valid = (rng.random((nq, npp)) > 0.2).astype(np.int32)
+    got = ops.gathered_dist2(q, p, valid, pt=pt)
+    want = ops.gathered_dist2_ref(
+        jnp.asarray(q), jnp.asarray(p), jnp.asarray(valid)
+    )
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-6
+    )
+    big = np.finfo(np.float32).max
+    assert np.all(np.asarray(got)[valid == 0] == big)
+
+
 def test_knn_topk_query_chunking_matches_unchunked():
     """The memory-capped (chunked) path returns the unchunked answer."""
     rng = np.random.default_rng(3)
