@@ -14,7 +14,8 @@ root.  Future perf PRs diff against that file.
 
 It also times the compiled device query engine (``queries_jax``) on the
 same workload, recording ``*_jax_s`` entries next to the CPU-engine
-numbers.
+numbers, and the sharded device engine (``distributed_jax``, 4-way
+partition behind the subspace-MBB router) as ``*_sharded_*`` entries.
 
   PYTHONPATH=src python -m benchmarks.bench_hotpaths            # full, writes BENCH_CORE.json
   PYTHONPATH=src python -m benchmarks.bench_hotpaths --smoke    # quick gate, no write
@@ -70,6 +71,8 @@ SMOKE_CEILINGS_S = {
     "window_batch": 1.5,
     "knn_single": 2.0,
     "knn_batch": 1.5,
+    "window_batch_sharded": 2.0,
+    "knn_batch_sharded": 2.0,
 }
 
 # hot paths gated against the committed smoke-scale baselines: >30%
@@ -78,6 +81,8 @@ SMOKE_GATED = {
     "bulk_load": "bulk_load_s",
     "window_batch": "window_batch_64_s",
     "knn_batch": "knn_batch_64_k16_s",
+    "window_batch_sharded": "window_batch_sharded_64_s",
+    "knn_batch_sharded": "knn_batch_sharded_64_k16_s",
 }
 SMOKE_REGRESSION_FRAC = 0.30
 SMOKE_NOISE_FLOOR_S = 0.05
@@ -190,6 +195,28 @@ def run(n: int = 600_000, seed: int = 0, repeats: int = 3) -> dict:
         results["knn_batch_64_k16_jax_s"] = -1.0
         results["device_engine_error"] = str(e)
 
+    # ---- sharded device engine (4-way partition + MBB router) ------------
+    try:
+        from repro.core.distributed_jax import (
+            ShardedDeviceTable,
+            knn_query_batch_sharded,
+            window_query_batch_sharded,
+        )
+
+        sdev = ShardedDeviceTable.from_index(idx, 4)
+        window_query_batch_sharded(sdev, los, his)  # compile
+        results["window_batch_sharded_64_s"] = _timed(
+            lambda: window_query_batch_sharded(sdev, los, his), repeats
+        )
+        knn_query_batch_sharded(sdev, qs, 16)  # compile
+        results["knn_batch_sharded_64_k16_s"] = _timed(
+            lambda: knn_query_batch_sharded(sdev, qs, 16), repeats
+        )
+    except Exception as e:  # pragma: no cover - accelerator-env dependent
+        results["window_batch_sharded_64_s"] = -1.0
+        results["knn_batch_sharded_64_k16_s"] = -1.0
+        results["sharded_engine_error"] = str(e)
+
     # ---- JAX candidate-leaf window_count --------------------------------
     try:
         import jax.numpy as jnp
@@ -230,6 +257,10 @@ def smoke_gate(res: dict, use_baselines: bool = True) -> list[str]:
     failures = []
     for name, key in SMOKE_GATED.items():
         got = res[key]
+        if got < 0:  # error sentinel: the path under gate never executed
+            failures.append(f"{name}: errored instead of running "
+                            "(see *_error entry in the results)")
+            continue
         base = baselines.get(f"smoke_{key}", -1.0)
         if base > 0:
             limit = max(base * (1 + SMOKE_REGRESSION_FRAC),

@@ -42,9 +42,10 @@ from typing import Callable, Optional
 import numpy as np
 
 from .fmbi import Index, Node, merge_branches, refine_subspace
+from .geometry import mindist_box_sq, mindist_sq
 from .nodetable import NodeTable, NodeView
 from .pagestore import PageStore, branch_capacity, leaf_capacity
-from .queries import knn_query, mindist_sq, window_query
+from .queries import knn_query, window_query
 from .splittree import build_group_median_tree, mbb_of
 
 
@@ -82,7 +83,7 @@ class AMBI:
     def window(self, lo, hi):
         lo = np.asarray(lo, dtype=np.float64)
         hi = np.asarray(hi, dtype=np.float64)
-        self._query_dist = lambda mbb: _mindist_box_sq(mbb, lo, hi)
+        self._query_dist = lambda mbb: mindist_box_sq(mbb, lo, hi)
         return window_query(self.index, lo, hi, refiner=self._refine)
 
     def knn(self, q, k: int):
@@ -424,8 +425,3 @@ def _assign_pages(groups, store) -> None:
         store.write(page)
         for nd in group:
             nd.page_id = page
-
-
-def _mindist_box_sq(mbb: np.ndarray, lo: np.ndarray, hi: np.ndarray) -> float:
-    gap = np.maximum(mbb[0] - hi, 0.0) + np.maximum(lo - mbb[1], 0.0)
-    return float(np.dot(gap, gap))

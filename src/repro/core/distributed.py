@@ -144,7 +144,8 @@ def parallel_window_cost(
 ) -> tuple[int, int]:
     """(n results, makespan page reads) for one window across servers —
     only qualified servers (subspace intersects the window) are probed."""
-    from .queries import mbb_intersects, window_query
+    from .geometry import mbb_intersects
+    from .queries import window_query
 
     total, costs = 0, []
     for idx in build.indexes:
@@ -160,6 +161,24 @@ def parallel_window_cost(
 # --------------------------------------------------------------------------
 # 2. shard_map distributed build + queries (TPU-native Section 5)
 # --------------------------------------------------------------------------
+def gather_topk_merge(d2, rows, axis: str, k_out: int):
+    """Global round of the two-round k-NN protocol, inside ``shard_map``:
+    all-gather every shard's per-query (distance, id) top-k and merge to
+    the ``k_out`` global best.  Returns (d2, ids, source) where ``source``
+    is each result's position on the gather axis (its shard).  Shared by
+    the ``JaxIndex`` path (``shard_knn``) and the DeviceTable path
+    (``distributed_jax.knn_batch_shard_map``)."""
+    all_d2 = jax.lax.all_gather(d2, axis)      # (m, Q, kk)
+    all_rows = jax.lax.all_gather(rows, axis)
+    m, q, kk = all_d2.shape
+    flat_d2 = jnp.moveaxis(all_d2, 0, 1).reshape(q, m * kk)
+    flat_rw = jnp.moveaxis(all_rows, 0, 1).reshape(q, m * kk)
+    negv, topi = jax.lax.top_k(-flat_d2, k_out)
+    sel_rows = jnp.take_along_axis(flat_rw, topi, axis=1)
+    sel_src = (topi // kk).astype(jnp.int32)
+    return -negv, sel_rows, sel_src
+
+
 def _median_splits(sample: jnp.ndarray, levels: int):
     """Replicated median splits over a gathered sample (central Step 1)."""
     n, d = sample.shape
@@ -201,7 +220,10 @@ def shard_build(points, mesh, levels_local: int, axis: str = "data",
     ``points``: (n, d) global array, row-sharded over ``axis``.  Returns the
     local index arrays, each with a leading per-shard dimension sharded over
     ``axis``:  (points_sorted, row_ids, split_dim, split_val, leaf_lo,
-    leaf_hi, n_mine, gsplit_dim, gsplit_val).
+    leaf_hi, n_mine, gsplit_dim, gsplit_val).  ``row_ids`` carry *global*
+    dataset row ids through the all_to_all (-1 for padding), so local
+    query answers need no slot translation and ``shard_build_tables`` can
+    flatten each shard into a globally-addressed :class:`NodeTable`.
     """
     n_shards = mesh.shape[axis]
     levels_global = int(np.log2(n_shards))
@@ -212,6 +234,12 @@ def shard_build(points, mesh, levels_local: int, axis: str = "data",
 
     def body(pts_local):
         pts_local = pts_local.reshape(per, d)
+        # global row ids of this shard's input slice (the input is
+        # row-sharded contiguously over the mesh axis)
+        ids_local = (
+            jax.lax.axis_index(axis).astype(jnp.int32) * per
+            + jnp.arange(per, dtype=jnp.int32)
+        )
         # --- central step: sample -> global splits (replicated) ----------
         stride = max(per // sample_per_shard, 1)
         sample_local = pts_local[::stride][:sample_per_shard]
@@ -222,10 +250,14 @@ def shard_build(points, mesh, levels_local: int, axis: str = "data",
         else:
             gs_dim = jnp.zeros((1, 1), jnp.int32)
             gs_val = jnp.zeros((1, 1), pts_local.dtype)
-            owner = jnp.zeros(per, jnp.int32)
+            # derived from a device-varying value (not a closed-over
+            # constant): jax 0.4.x shard_map's replication check rejects
+            # sorting a pure constant on a 1-device mesh
+            owner = ids_local * 0
         # --- fixed-capacity dispatch to owner shards ----------------------
         order = jnp.argsort(owner)
         pts_sorted = pts_local[order]
+        ids_sorted = ids_local[order]
         owner_sorted = owner[order]
         first = jnp.searchsorted(owner_sorted, jnp.arange(n_shards))
         pos = jnp.arange(per) - first[owner_sorted]
@@ -233,24 +265,31 @@ def shard_build(points, mesh, levels_local: int, axis: str = "data",
         send = jnp.full((n_shards, cap + 1, d),
                         jnp.finfo(pts_local.dtype).max,
                         dtype=pts_local.dtype)
+        send_ids = jnp.full((n_shards, cap + 1), -1, dtype=jnp.int32)
         sendmask = jnp.zeros((n_shards, cap + 1), dtype=jnp.int32)
         safe_pos = jnp.where(dropped, cap, pos)
         send = send.at[owner_sorted, safe_pos].set(pts_sorted)
+        send_ids = send_ids.at[owner_sorted, safe_pos].set(ids_sorted)
         sendmask = sendmask.at[owner_sorted, safe_pos].max(
             jnp.where(dropped, 0, 1))
-        send, sendmask = send[:, :cap], sendmask[:, :cap]
+        send, send_ids = send[:, :cap], send_ids[:, :cap]
+        sendmask = sendmask[:, :cap]
         if n_shards > 1:
             recv = jax.lax.all_to_all(send, axis, split_axis=0,
                                       concat_axis=0, tiled=True)
+            recv_ids = jax.lax.all_to_all(send_ids, axis, split_axis=0,
+                                          concat_axis=0, tiled=True)
             recvmask = jax.lax.all_to_all(sendmask, axis, split_axis=0,
                                           concat_axis=0, tiled=True)
         else:
-            recv, recvmask = send, sendmask
+            recv, recv_ids, recvmask = send, send_ids, sendmask
         pts_mine = recv.reshape(-1, d)
         valid = recvmask.reshape(-1).astype(bool)
         big = jnp.finfo(pts_mine.dtype).max
         pts_mine = jnp.where(valid[:, None], pts_mine, big)
-        row_ids = jnp.where(valid, 1, -1).astype(jnp.int32)
+        # carry the points' global identities through the shuffle: local
+        # indexes answer with dataset row ids, not anonymous slots
+        row_ids = jnp.where(valid, recv_ids.reshape(-1), -1)
         # --- local FMBI build ---------------------------------------------
         local = jax_index.build(pts_mine, levels_local, row_ids)
         n_mine = valid.sum().reshape(1)
@@ -282,6 +321,62 @@ def unpack_local_index(shard_out, shard: int, levels_local: int):
     )
 
 
+def table_from_jax_index(jidx) -> NodeTable:
+    """Flatten a ``JaxIndex`` leaf grid into a one-level :class:`NodeTable`.
+
+    Empty (all-padding) leaves are dropped and leaf MBBs are recomputed
+    tight over the valid points (the grid's segment boxes include the
+    +inf padding sentinels).  ``perm`` takes the grid's ``row_ids``
+    verbatim, so a ``shard_build`` shard — which carries global dataset
+    ids through the all_to_all — flattens into a table that addresses the
+    global dataset, ready for the sharded device engine.
+    """
+    from .fmbi import Node
+
+    pts = np.asarray(jidx.points_sorted, dtype=np.float64)
+    ids = np.asarray(jidx.row_ids)
+    n_l, s = jidx.n_leaves, jidx.leaf_size
+    d = pts.shape[1]
+    grid = pts.reshape(n_l, s, d)
+    ids2 = ids.reshape(n_l, s)
+    valid = ids2 >= 0
+    live = np.flatnonzero(valid.any(axis=1))
+    if len(live) == 0:
+        raise ValueError("grid holds no valid points")
+    lo = np.where(valid[..., None], grid, np.inf).min(axis=1)
+    hi = np.where(valid[..., None], grid, -np.inf).max(axis=1)
+    leaves = [
+        Node(
+            mbb=np.stack([lo[l], hi[l]]),
+            page_id=1 + j,
+            point_idx=ids2[l][valid[l]].astype(np.int64),
+        )
+        for j, l in enumerate(live)
+    ]
+    if len(leaves) == 1:
+        root = leaves[0]
+        root.page_id = 0
+    else:
+        root = Node(
+            mbb=np.stack([lo[live].min(axis=0), hi[live].max(axis=0)]),
+            page_id=0,
+            children=leaves,
+        )
+    return NodeTable.from_tree(root, d, n_points_hint=int(valid.sum()))
+
+
+def shard_build_tables(shard_out, levels_local: int) -> list[NodeTable]:
+    """Per-shard :class:`NodeTable`s from ``shard_build`` output — the
+    bridge that lands the TPU build on the same representation as the
+    host m-server simulation (``ParallelBuild`` / ``NodeTable.merged`` /
+    the sharded device engine)."""
+    n_shards = np.asarray(shard_out[0]).shape[0]
+    return [
+        table_from_jax_index(unpack_local_index(shard_out, s, levels_local))
+        for s in range(n_shards)
+    ]
+
+
 def shard_knn(shard_out, queries, k: int, mesh, levels_local: int,
               axis: str = "data", n_candidate_leaves: int = 8):
     """Two-round distributed k-NN (paper Section 5 / SpatialHadoop):
@@ -304,16 +399,8 @@ def shard_knn(shard_out, queries, k: int, mesh, levels_local: int,
         )
         rows, d2, _ = jax_index.knn(local, queries, k,
                                     n_candidate_leaves=n_candidate_leaves)
-        all_d2 = jax.lax.all_gather(d2, axis)      # (m, Q, k)
-        all_rows = jax.lax.all_gather(rows, axis)  # (m, Q, k) local slots
-        m = all_d2.shape[0]
-        q = queries.shape[0]
-        flat_d2 = jnp.moveaxis(all_d2, 0, 1).reshape(q, m * k)
-        flat_rw = jnp.moveaxis(all_rows, 0, 1).reshape(q, m * k)
-        topv, topi = jax.lax.top_k(-flat_d2, k)
-        sel_rows = jnp.take_along_axis(flat_rw, topi, axis=1)
-        sel_shard = (topi // k).astype(jnp.int32)  # owner shard per result
-        return (-topv)[None], sel_rows[None], sel_shard[None]
+        top_d2, sel_rows, sel_shard = gather_topk_merge(d2, rows, axis, k)
+        return top_d2[None], sel_rows[None], sel_shard[None]
 
     fn = _shard_map(
         body, mesh=mesh,

@@ -469,6 +469,76 @@ class NodeTable:
         out._leaf_start[0] = -1
         return out
 
+    # -- sharding ------------------------------------------------------------
+    def subtable(self, roots, sizes: Optional[np.ndarray] = None) -> "NodeTable":
+        """Extract the subtrees rooted at ``roots`` into a standalone table.
+
+        A single root is adopted in place; multiple roots hang under a
+        synthetic root whose MBB tightens to their union (the same shape
+        :meth:`merged` produces).  ``perm`` values are copied verbatim, so
+        the sub-table keeps addressing the *parent's* dataset rows — the
+        property the sharded query engine relies on: every shard answers
+        with global ids and results merge by concatenation.  ``sizes`` is
+        an optional precomputed :meth:`subtree_points` array (callers that
+        extract several sub-tables pass it once instead of re-sweeping).
+        """
+        from .fmbi import Node  # function-local: fmbi imports this module
+
+        roots = [int(r) for r in roots]
+        if not roots:
+            raise ValueError("subtable needs at least one root row")
+        if len(roots) == 1:
+            src = NodeView(self, roots[0])
+        else:
+            src = Node(
+                mbb=np.stack(
+                    [
+                        self.mbb_lo[roots].min(axis=0),
+                        self.mbb_hi[roots].max(axis=0),
+                    ]
+                ),
+                page_id=int(self._page_id[0]),
+                children=[NodeView(self, r) for r in roots],
+            )
+        if sizes is None:
+            sizes = self.subtree_points()
+        hint = int(sizes[roots].sum())
+        return NodeTable.from_tree(src, self.dim, n_points_hint=hint)
+
+    def shard(self, m: int) -> list["NodeTable"]:
+        """Partition the table into at most ``m`` sub-tables of balanced
+        point count (the distributed engine's per-shard tables).
+
+        The root's child subtrees form the starting units — for a
+        :meth:`merged` table these are exactly the per-server subspaces, so
+        the central SplitTree's partition is recovered verbatim when ``m``
+        matches the server count.  While there are fewer units than shards
+        the largest unit is split into its children, then units are packed
+        into ``m`` bins by greedy longest-processing-time assignment.  Fewer
+        than ``m`` shards come back when the tree cannot be cut that finely
+        (e.g. a single-leaf table).  Deterministic for a given table.
+        """
+        if m < 1:
+            raise ValueError(f"shard count must be >= 1, got {m}")
+        if m == 1 or self._child_count[0] == 0:
+            return [self if m == 1 else self.subtable([0])]
+        sizes = self.subtree_points()
+        frontier = list(self.children_of(0))
+        while len(frontier) < m:
+            branches = [r for r in frontier if self._child_count[r] > 0]
+            if not branches:
+                break
+            big = max(branches, key=lambda r: (sizes[r], -r))
+            frontier.remove(big)
+            frontier.extend(self.children_of(big))
+        bins: list[list[int]] = [[] for _ in range(m)]
+        loads = [0] * m
+        for r in sorted(frontier, key=lambda r: (-sizes[r], r)):
+            i = min(range(m), key=lambda j: (loads[j], j))
+            bins[i].append(r)
+            loads[i] += int(sizes[r])
+        return [self.subtable(sorted(b), sizes=sizes) for b in bins if b]
+
     # -- accelerator bridge --------------------------------------------------
     def to_jax_index(self, points: np.ndarray, dtype=np.float32):
         """Re-lay the leaf level into the ``JaxIndex`` grid (serving layout).

@@ -45,21 +45,9 @@ import itertools
 import numpy as np
 
 from .fmbi import Index
+from .geometry import mbb_intersects, mindist_sq  # re-exported (legacy home)
 from .nodetable import NodeTable, ragged_ranges
 from .pagestore import IOStats
-
-
-# --------------------------------------------------------------------------
-# geometry helpers
-# --------------------------------------------------------------------------
-def mbb_intersects(mbb: np.ndarray, lo: np.ndarray, hi: np.ndarray) -> bool:
-    return bool(np.all(mbb[0] <= hi) and np.all(mbb[1] >= lo))
-
-
-def mindist_sq(mbb: np.ndarray, q: np.ndarray) -> float:
-    """Squared min distance from point ``q`` to box ``mbb`` (0 if inside)."""
-    d = np.maximum(mbb[0] - q, 0.0) + np.maximum(q - mbb[1], 0.0)
-    return float(np.dot(d, d))
 
 
 def _merge_topk(

@@ -108,18 +108,20 @@ class DeviceTable:
     leaf_ids_host: np.ndarray = None
 
     def tree_flatten(self):
-        # leaf_ids_host is host-only scaffolding: excluded from the pytree
-        # (aux must hash for the jit cache); traced reconstructions carry
-        # None, which no jitted core touches
+        # n_points and leaf_ids_host are host-only scaffolding: excluded
+        # from the pytree (aux is part of the jit cache key, and no jitted
+        # core reads either), so shard tables with identical shapes but
+        # different live fills share compilations; traced reconstructions
+        # carry None, which no jitted core touches
         return (
             (self.leaf_pts, self.leaf_ids, self.leaf_counts, self.leaf_lo,
              self.leaf_hi, self.levels),
-            (self.n_points,),
+            (),
         )
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, n_points=aux[0], leaf_ids_host=None)
+        return cls(*children, n_points=None, leaf_ids_host=None)
 
     @property
     def n_leaves(self) -> int:
@@ -145,6 +147,14 @@ class DeviceTable:
     def from_table(
         cls, table: NodeTable, points: np.ndarray, dtype=np.float32
     ) -> "DeviceTable":
+        """Export ``table`` over ``points``.
+
+        ``n_points`` is the table's *live* point count (the sum of its leaf
+        fills), not ``len(points)`` — a shard table addresses the global
+        dataset but owns only its slice, and result lengths truncate to
+        what the table can actually return.  For a whole-dataset table the
+        two are equal.
+        """
         lay = table.device_layout(np.asarray(points), dtype=dtype)
         levels = tuple(
             (
@@ -162,7 +172,7 @@ class DeviceTable:
             leaf_lo=jnp.asarray(lay["leaf_lo"]),
             leaf_hi=jnp.asarray(lay["leaf_hi"]),
             levels=levels,
-            n_points=len(points),
+            n_points=int(lay["leaf_counts"].sum()),
             leaf_ids_host=lay["leaf_ids"],
         )
 
@@ -394,6 +404,7 @@ def knn_query_batch_jax(
     *,
     use_kernel: bool | None = None,
     n_candidate_leaves: int | None = None,
+    return_dists: bool = False,
 ) -> list[np.ndarray]:
     """Compiled batched k-NN: per-query ascending-distance row-id arrays.
 
@@ -403,7 +414,13 @@ def knn_query_batch_jax(
     are exact k nearest (length ``min(k, n)``); among exactly tied
     distances the chosen ids may differ.  Escalation reruns only the
     queries whose certificate failed (repacked into a smaller power-of-two
-    bucket), so one hard query does not double the whole batch's work."""
+    bucket), so one hard query does not double the whole batch's work.
+
+    With ``return_dists`` the per-query float32 squared distances come
+    back too, as ``(ids_list, d2_list)`` — the distributed two-round
+    merge consumes them (the same f32 values every shard computes for the
+    same (point, query) pair, so a cross-shard merge reproduces the
+    single-table ranking)."""
     if use_kernel is None:
         use_kernel = _use_kernel_default()
     qs = np.atleast_2d(np.asarray(qs, dtype=np.float32))
@@ -415,6 +432,7 @@ def knn_query_batch_jax(
     else:
         c = min(_pow2(max(n_candidate_leaves, 1)), cap)
     results: list = [None] * q0
+    dists: list = [None] * q0
     pending = np.arange(q0)
     while len(pending):
         (batch,), b0 = _pad_batch([qs[pending]], [0.0])
@@ -427,6 +445,7 @@ def knn_query_batch_jax(
         m = min(k, dev.n_points)
         for j in np.flatnonzero(done):
             results[pending[j]] = ids[j, :m].astype(np.int64)
+            dists[pending[j]] = d2k[j, :m]
         pending = pending[~done]
         c = min(c * 2, cap)
-    return results
+    return (results, dists) if return_dists else results

@@ -162,6 +162,7 @@ class RetrievalServer:
 class DeviceQueryStats:
     queries: int = 0
     microbatches: int = 0
+    shards: int = 1
 
 
 class DeviceQueryServer:
@@ -176,16 +177,32 @@ class DeviceQueryServer:
     variants instead of a fresh compilation per shape.  Exactness matches
     the NumPy engine (see the queries_jax parity contract); the simulated
     LRU I/O accounting stays with the CPU path.
+
+    ``shards=m`` serves through the *sharded* engine instead
+    (``core/distributed_jax.py``): the table partitions into m per-shard
+    DeviceTables behind a subspace-MBB router, windows fan out only to
+    qualified shards, and k-NN runs the two-round certified protocol —
+    same results, distributed execution.
     """
 
     def __init__(self, table, points: np.ndarray, *,
-                 microbatch: int = 64, use_kernel: bool | None = None):
+                 microbatch: int = 64, use_kernel: bool | None = None,
+                 shards: int | None = None):
+        from ..core.distributed_jax import ShardedDeviceTable
         from ..core.queries_jax import DeviceTable
 
-        self.dev = DeviceTable.from_table(table, np.asarray(points))
+        points = np.asarray(points)
+        if shards is not None and shards > 1:
+            self.sdev = ShardedDeviceTable.from_table(table, points, shards)
+            self.dev = None
+            n_shards = self.sdev.m
+        else:
+            self.dev = DeviceTable.from_table(table, points)
+            self.sdev = None
+            n_shards = 1
         self.microbatch = int(microbatch)
         self.use_kernel = use_kernel
-        self.stats = DeviceQueryStats()
+        self.stats = DeviceQueryStats(shards=n_shards)
 
     @classmethod
     def from_index(cls, index, **kw) -> "DeviceQueryServer":
@@ -208,29 +225,42 @@ class DeviceQueryServer:
 
     def window(self, los: np.ndarray, his: np.ndarray) -> list[np.ndarray]:
         """Per-query dataset row ids inside each [lo, hi] box."""
+        from ..core.distributed_jax import window_query_batch_sharded
         from ..core.queries_jax import window_query_batch_jax
 
         los = np.atleast_2d(np.asarray(los))
         his = np.atleast_2d(np.asarray(his))
         out: list[np.ndarray] = []
         for a, b in self._chunks(los.shape[0]):
-            out.extend(window_query_batch_jax(
-                self.dev, los[a:b], his[a:b], use_kernel=self.use_kernel
-            ))
+            if self.sdev is not None:
+                out.extend(window_query_batch_sharded(
+                    self.sdev, los[a:b], his[a:b],
+                    use_kernel=self.use_kernel,
+                ))
+            else:
+                out.extend(window_query_batch_jax(
+                    self.dev, los[a:b], his[a:b], use_kernel=self.use_kernel
+                ))
             self.stats.microbatches += 1
         self.stats.queries += los.shape[0]
         return out
 
     def knn(self, qs: np.ndarray, k: int) -> list[np.ndarray]:
         """Per-query ascending-distance row ids (length min(k, n))."""
+        from ..core.distributed_jax import knn_query_batch_sharded
         from ..core.queries_jax import knn_query_batch_jax
 
         qs = np.atleast_2d(np.asarray(qs))
         out: list[np.ndarray] = []
         for a, b in self._chunks(qs.shape[0]):
-            out.extend(knn_query_batch_jax(
-                self.dev, qs[a:b], k, use_kernel=self.use_kernel
-            ))
+            if self.sdev is not None:
+                out.extend(knn_query_batch_sharded(
+                    self.sdev, qs[a:b], k, use_kernel=self.use_kernel
+                ))
+            else:
+                out.extend(knn_query_batch_jax(
+                    self.dev, qs[a:b], k, use_kernel=self.use_kernel
+                ))
             self.stats.microbatches += 1
         self.stats.queries += qs.shape[0]
         return out

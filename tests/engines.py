@@ -1,0 +1,161 @@
+"""Reusable engine-parity harness (the PR-4 pinning fixture).
+
+Builds the same FMBI / grafted-AMBI tables and runs every query engine the
+repo has over them:
+
+  * the NumPy ``NodeTable`` engine (``core/queries.py``) — the
+    paper-faithful authority,
+  * the single compiled ``DeviceTable`` engine (``core/queries_jax.py``),
+  * the m-shard distributed engine (``core/distributed_jax.py``) for each
+    requested shard count,
+
+and asserts id-identical results, the same way ``test_flat_queries.py``
+pinned the PR-2 flat engine and ``test_queries_jax.py`` pinned the PR-3
+device engine.  Windows compare as id sets (result order is unspecified
+across engines); k-NN compares ascending id sequences on continuous data
+and falls back to distance-sequence equality when the workload carries
+exact ties (grid data), mirroring the queries_jax parity contract.
+
+All generated coordinates are float32-representable so the f32 device
+engines agree bit-for-bit with the f64 host engine.
+"""
+import numpy as np
+
+from repro.core import (
+    AMBI,
+    PageStore,
+    bulk_load,
+    knn_query_batch,
+    window_query_batch,
+)
+from repro.core.distributed_jax import (
+    ShardedDeviceTable,
+    knn_query_batch_sharded,
+    window_query_batch_sharded,
+)
+from repro.core.queries_jax import (
+    DeviceTable,
+    knn_query_batch_jax,
+    window_query_batch_jax,
+)
+
+
+# --------------------------------------------------------------------------
+# workloads: float32-representable point sets + index builders
+# --------------------------------------------------------------------------
+def f32_points(n, d, seed, kind="uniform"):
+    """Float32-representable coordinates (stored as float64)."""
+    rng = np.random.default_rng(seed)
+    if kind == "skew":
+        pts = rng.random((n, d)) ** 3
+    elif kind == "grid":  # heavy duplication, exact f32 arithmetic
+        pts = rng.integers(0, 48, (n, d)) / np.float64(64.0)
+    else:
+        pts = rng.random((n, d))
+    return pts.astype(np.float32).astype(np.float64)
+
+
+def build_fmbi(pts, M=250):
+    return bulk_load(pts, M, PageStore(M))
+
+
+def build_grafted_ambi(pts, M=250):
+    """A fully refined AMBI index whose table rows were grafted on demand
+    (not level-contiguous — the layout case the device engines must
+    normalize)."""
+    ambi = AMBI(pts, M)
+    d = pts.shape[1]
+    rng = np.random.default_rng(0)
+    for _ in range(4):  # partial refinement first: interleaved grafts
+        c = rng.random(d)
+        ambi.window(c - 0.05, c + 0.05)
+    ambi.window(np.zeros(d), np.ones(d))  # then refine everything
+    assert ambi.is_fully_refined()
+    return ambi.index
+
+
+# --------------------------------------------------------------------------
+# engines under test
+# --------------------------------------------------------------------------
+class NumpyEngine:
+    name = "numpy"
+
+    def __init__(self, index):
+        self.index = index
+
+    def window(self, los, his):
+        return window_query_batch(self.index, los, his)[0]
+
+    def knn(self, qs, k):
+        return knn_query_batch(self.index, qs, k)[0]
+
+
+class DeviceEngine:
+    name = "device"
+
+    def __init__(self, index):
+        self.dev = DeviceTable.from_index(index)
+
+    def window(self, los, his):
+        return window_query_batch_jax(self.dev, los, his)
+
+    def knn(self, qs, k):
+        return knn_query_batch_jax(self.dev, qs, k)
+
+
+class ShardedEngine:
+    def __init__(self, index, m):
+        self.sdev = ShardedDeviceTable.from_index(index, m)
+        self.name = f"sharded[m={m}]"
+
+    def window(self, los, his):
+        return window_query_batch_sharded(self.sdev, los, his)
+
+    def knn(self, qs, k):
+        return knn_query_batch_sharded(self.sdev, qs, k)
+
+
+def engine_suite(index, ms=(1, 2, 4)):
+    """Every engine over one built index; first entry is the NumPy oracle."""
+    return [NumpyEngine(index), DeviceEngine(index)] + [
+        ShardedEngine(index, m) for m in ms
+    ]
+
+
+# --------------------------------------------------------------------------
+# parity assertions
+# --------------------------------------------------------------------------
+def assert_window_parity(engines, los, his):
+    """Every engine returns the NumPy engine's id set, per query."""
+    los = np.atleast_2d(los)
+    his = np.atleast_2d(his)
+    ref = engines[0].window(los, his)
+    for eng in engines[1:]:
+        got = eng.window(los, his)
+        assert len(got) == len(ref), eng.name
+        for i, (a, b) in enumerate(zip(got, ref)):
+            assert np.array_equal(np.sort(a), np.sort(b)), (eng.name, i)
+    return ref
+
+
+def assert_knn_parity(engines, pts, qs, k, ids_exact=True):
+    """Every engine returns the NumPy engine's ascending-id sequence.
+
+    ``ids_exact=False`` (tie-heavy workloads): sorted squared-distance
+    sequences must match and ids must agree wherever distances are unique.
+    """
+    qs = np.atleast_2d(qs)
+    ref = engines[0].knn(qs, k)
+    for eng in engines[1:]:
+        got = eng.knn(qs, k)
+        assert len(got) == len(ref), eng.name
+        for i, (a, b) in enumerate(zip(got, ref)):
+            if ids_exact:
+                assert np.array_equal(a, b), (eng.name, i)
+            else:
+                da = np.sort(np.sum((pts[a] - qs[i]) ** 2, axis=1))
+                db = np.sort(np.sum((pts[b] - qs[i]) ** 2, axis=1))
+                np.testing.assert_array_equal(da, db, err_msg=f"{eng.name} q{i}")
+                if len(np.unique(db)) == len(db):
+                    assert np.array_equal(np.sort(a), np.sort(b)), (eng.name, i)
+    return ref

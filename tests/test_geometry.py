@@ -1,0 +1,72 @@
+"""Shared box-geometry helpers (`core/geometry.py`): the single home the
+per-file copies in queries/ambi/distributed were folded into."""
+import numpy as np
+
+from repro.core.geometry import (
+    boxes_intersect_windows,
+    boxes_mindist_sq,
+    mbb_intersects,
+    mindist_box_sq,
+    mindist_sq,
+)
+
+
+def _mbb(lo, hi):
+    return np.stack([np.asarray(lo, float), np.asarray(hi, float)])
+
+
+def test_mbb_intersects():
+    box = _mbb([0.0, 0.0], [1.0, 1.0])
+    assert mbb_intersects(box, np.array([0.5, 0.5]), np.array([2.0, 2.0]))
+    # closed intervals: touching at a face/corner counts
+    assert mbb_intersects(box, np.array([1.0, 1.0]), np.array([2.0, 2.0]))
+    assert not mbb_intersects(box, np.array([1.1, 0.0]), np.array([2.0, 1.0]))
+    # disjoint in one dimension only is still disjoint
+    assert not mbb_intersects(box, np.array([0.0, 1.5]), np.array([1.0, 2.0]))
+
+
+def test_mindist_sq():
+    box = _mbb([0.0, 0.0], [1.0, 1.0])
+    assert mindist_sq(box, np.array([0.5, 0.5])) == 0.0  # inside
+    assert mindist_sq(box, np.array([1.0, 1.0])) == 0.0  # on the boundary
+    assert mindist_sq(box, np.array([2.0, 1.0])) == 1.0  # face distance
+    np.testing.assert_allclose(
+        mindist_sq(box, np.array([2.0, 2.0])), 2.0  # corner distance
+    )
+
+
+def test_mindist_box_sq():
+    box = _mbb([0.0, 0.0], [1.0, 1.0])
+    assert mindist_box_sq(box, np.array([0.5, 0.5]), np.array([2.0, 2.0])) == 0.0
+    assert mindist_box_sq(box, np.array([1.0, 0.0]), np.array([2.0, 1.0])) == 0.0
+    assert mindist_box_sq(box, np.array([3.0, 0.0]), np.array([4.0, 1.0])) == 4.0
+    np.testing.assert_allclose(
+        mindist_box_sq(box, np.array([2.0, 2.0]), np.array([3.0, 3.0])), 2.0
+    )
+
+
+def test_batched_forms_match_scalar_forms():
+    rng = np.random.default_rng(0)
+    m, q, d = 7, 13, 3
+    lo = rng.random((m, d))
+    hi = lo + rng.random((m, d))
+    los = rng.random((q, d)) * 1.5 - 0.2
+    his = los + rng.random((q, d)) * 0.5
+    qs = rng.random((q, d)) * 2 - 0.5
+
+    inter = boxes_intersect_windows(lo, hi, los, his)
+    mind = boxes_mindist_sq(lo, hi, qs)
+    assert inter.shape == (q, m) and mind.shape == (q, m)
+    for i in range(q):
+        for j in range(m):
+            box = _mbb(lo[j], hi[j])
+            assert inter[i, j] == mbb_intersects(box, los[i], his[i])
+            np.testing.assert_allclose(mind[i, j], mindist_sq(box, qs[i]))
+
+
+def test_legacy_import_location_still_works():
+    """queries.py re-exports the scalar helpers (its historical home)."""
+    from repro.core.queries import mbb_intersects as mi, mindist_sq as ms
+
+    assert mi is mbb_intersects
+    assert ms is mindist_sq

@@ -1,0 +1,202 @@
+"""Parallel bulk loading: golden IOStats (Figure-11 quantities), merged-table
+invariants, and the merge+graft row-permutation audit.
+
+The makespan/total page-I/O numbers of ``parallel_bulk_load`` are the
+paper's Figure-11 measurements; they were previously untested, so any
+accounting drift in the central sample/stream or per-server builds went
+unnoticed.  The goldens below pin them on a seeded 100k OSM-like dataset.
+
+The audit tests exercise the interleaving the distributed path actually
+produces — per-server AMBI tables partially refined (grafted) locally,
+merged into one global table, then grafted further on demand — and assert
+after every step that ``perm``'s live segments stay disjoint and together
+a permutation of the dataset rows.
+"""
+import numpy as np
+import pytest
+
+from engines import f32_points
+from repro.core import AMBI, Index, NodeTable, PageStore, refine_subspace
+from repro.core.datasets import osm_like
+from repro.core.distributed import parallel_bulk_load
+from repro.core.nodetable import ragged_ranges
+from repro.core.pagestore import branch_capacity, leaf_capacity
+from repro.core.queries import knn_query, window_oracle, window_query
+from test_nodetable import _sibling_leaf_overlap
+
+try:  # optional dev dependency (see requirements-dev.txt)
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+# --------------------------------------------------------------------------
+# golden IOStats: the Figure-11 quantities on the seeded 100k dataset
+# --------------------------------------------------------------------------
+GOLDEN_100K = {
+    # m: (makespan_io, total_io, central_io)
+    1: (721, 721, 0),
+    2: (295, 886, 296),
+    4: (149, 892, 296),
+    8: (75, 900, 300),
+}
+
+
+@pytest.fixture(scope="module")
+def pts_100k():
+    return osm_like(100_000, seed=17)
+
+
+@pytest.mark.parametrize("m", sorted(GOLDEN_100K))
+def test_parallel_bulk_load_golden_io(pts_100k, m):
+    build = parallel_bulk_load(pts_100k, m=m, buffer_pages=400)
+    makespan, total, central = GOLDEN_100K[m]
+    assert build.makespan_io == makespan
+    assert build.total_io == total
+    assert build.central_io.total == central
+    assert len(build.indexes) == m
+    assert sum(len(rm) for rm in build.row_maps) == len(pts_100k)
+
+
+def test_parallel_speedup_shape(pts_100k):
+    """Makespan falls roughly linearly with m while total I/O stays within
+    a constant factor of the single-server cost (the paper's claim)."""
+    makespans = {
+        m: parallel_bulk_load(pts_100k, m=m, buffer_pages=400).makespan_io
+        for m in (1, 4)
+    }
+    assert makespans[4] < makespans[1] / 2
+    total4 = GOLDEN_100K[4][1]
+    assert total4 < 2 * GOLDEN_100K[1][1]
+
+
+# --------------------------------------------------------------------------
+# merged_table invariants (the test_nodetable property checks, distributed)
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("m", [1, 3, 4])
+def test_merged_table_invariants(pts_100k, m):
+    pts = pts_100k[:40_000]
+    build = parallel_bulk_load(pts, m=m, buffer_pages=600)
+    merged = build.merged_table()
+    merged.check_invariants(len(pts))
+    assert merged.child_count[0] == m
+    # zero overlap within each server's sibling-leaf blocks (continuous data)
+    assert _sibling_leaf_overlap(merged) < 1e-9
+    # perm is a permutation of the global dataset rows
+    live = np.flatnonzero(merged.leaf_start >= 0)
+    sel = ragged_ranges(merged.leaf_start[live], merged.leaf_count[live])
+    np.testing.assert_array_equal(np.sort(merged.perm[sel]), np.arange(len(pts)))
+    # and the merged index answers globally
+    gidx = build.merged_index(pts, buffer_pages=300)
+    rng = np.random.default_rng(5)
+    for _ in range(4):
+        c = rng.random(2)
+        res, _ = window_query(gidx, c - 0.03, c + 0.03)
+        assert np.array_equal(np.sort(res), window_oracle(pts, c - 0.03, c + 0.03))
+
+
+# --------------------------------------------------------------------------
+# merge + graft interleavings: the row-permutation audit
+# --------------------------------------------------------------------------
+def _audit_perm(table: NodeTable, n_points: int) -> None:
+    """Live perm segments must be in-bounds, pairwise disjoint, and
+    together a permutation of the dataset rows."""
+    live = np.flatnonzero(table.leaf_start >= 0)
+    starts = table.leaf_start[live]
+    counts = table.leaf_count[live]
+    assert np.all(starts + counts <= table.n_perm)
+    sel = ragged_ranges(starts, counts)
+    assert len(np.unique(sel)) == len(sel), "live perm segments overlap"
+    vals = table.perm[sel]
+    np.testing.assert_array_equal(np.sort(vals), np.arange(n_points))
+
+
+def _merged_partial_ambi(pts, m, M, seed, refine_windows=1):
+    """Per-server AMBI tables, partially refined locally, then merged."""
+    d = pts.shape[1]
+    rng = np.random.default_rng(seed)
+    chunks = np.array_split(rng.permutation(len(pts)), m)
+    tables, row_maps, offsets = [], [], []
+    off = 0
+    for rows in chunks:
+        a = AMBI(pts[rows], M)
+        for _ in range(refine_windows):  # local grafts before the merge
+            c = rng.random(d) * 0.6
+            a.window(c, c + 0.25)
+        tables.append(a.table)
+        row_maps.append(rows)
+        offsets.append(off)
+        off += a.store.allocated_pages
+    return NodeTable.merged(tables, row_maps, offsets, root_page=off), off
+
+
+def _graft_all(merged, pts, store, rng, audit_every=1):
+    """Refine every remaining unrefined row of the merged table in a
+    random order, auditing the permutation as grafts interleave."""
+    d = pts.shape[1]
+    c_l, c_b = leaf_capacity(d), branch_capacity(d)
+    step = 0
+    while bool(merged.unrefined.any()):
+        rows = np.flatnonzero(merged.unrefined)
+        row = int(rng.choice(rows))
+        idx = merged.point_rows(row).copy()
+        merged.graft(row, refine_subspace(pts, idx, c_l, c_b, store))
+        step += 1
+        if step % audit_every == 0:
+            _audit_perm(merged, len(pts))
+    return step
+
+
+def test_merge_then_graft_keeps_permutation():
+    # M small relative to the per-server page count so the adaptive build
+    # leaves genuinely unrefined subspaces behind for post-merge grafting
+    pts = f32_points(60_000, 2, 41, "skew")
+    merged, pages = _merged_partial_ambi(pts, m=3, M=25, seed=1)
+    assert bool(merged.unrefined.any())  # the merge carried unrefined rows
+    _audit_perm(merged, len(pts))
+    merged.check_invariants(len(pts))
+    store = PageStore(300)
+    store.mark_allocated(int(merged.page_id.max()) + 1)
+    rng = np.random.default_rng(2)
+    grafts = _graft_all(merged, pts, store, rng)
+    assert grafts >= 1  # the interleaving actually exercised graft
+    merged.check_invariants(len(pts))
+    # fully refined merged table answers exactly
+    d = pts.shape[1]
+    idx = Index(merged, d, leaf_capacity(d), branch_capacity(d), store, pts)
+    qrng = np.random.default_rng(3)
+    for _ in range(4):
+        c = qrng.random(2)
+        res, _ = window_query(idx, c - 0.04, c + 0.04)
+        assert np.array_equal(np.sort(res), window_oracle(pts, c - 0.04, c + 0.04))
+        q = qrng.random(2)
+        got, _ = knn_query(idx, q, 8)
+        d2 = np.sum((pts - q) ** 2, axis=1)
+        np.testing.assert_array_equal(np.sort(d2[got]), np.sort(d2)[:8])
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        m=st.integers(1, 4),
+        seed=st.integers(0, 2**31 - 1),
+        refine_windows=st.integers(0, 3),
+    )
+    def test_merge_graft_interleavings_property(m, seed, refine_windows):
+        """perm stays a permutation and live leaf ranges stay disjoint
+        under randomized merge+graft interleavings (a small buffer keeps
+        the per-server builds adaptive, so unrefined rows cross the
+        merge)."""
+        pts = f32_points(24_000, 2, seed % 7, "skew")
+        merged, _ = _merged_partial_ambi(
+            pts, m=m, M=12, seed=seed, refine_windows=refine_windows
+        )
+        _audit_perm(merged, len(pts))
+        store = PageStore(250)
+        store.mark_allocated(int(merged.page_id.max()) + 1)
+        _graft_all(merged, pts, store, np.random.default_rng(seed))
+        _audit_perm(merged, len(pts))
+        merged.check_invariants(len(pts))
