@@ -73,6 +73,8 @@ SMOKE_CEILINGS_S = {
     "knn_batch": 1.5,
     "window_batch_sharded": 2.0,
     "knn_batch_sharded": 2.0,
+    "adaptive_serve_first": 8.0,
+    "adaptive_serve_steady": 1.5,
 }
 
 # hot paths gated against the committed smoke-scale baselines: >30%
@@ -83,9 +85,14 @@ SMOKE_GATED = {
     "knn_batch": "knn_batch_64_k16_s",
     "window_batch_sharded": "window_batch_sharded_64_s",
     "knn_batch_sharded": "knn_batch_sharded_64_k16_s",
+    "adaptive_serve_first": "adaptive_serve_first_result_s",
+    "adaptive_serve_steady": "adaptive_serve_steady_batch_64_s",
 }
 SMOKE_REGRESSION_FRAC = 0.30
 SMOKE_NOISE_FLOOR_S = 0.05
+# one-shot cold-start paths carry jit-compile variance well above the
+# default floor; a regression that matters there costs seconds, not 100ms
+SMOKE_NOISE_FLOOR_OVERRIDES_S = {"adaptive_serve_first": 0.5}
 SMOKE_N = 120_000
 
 
@@ -217,6 +224,41 @@ def run(n: int = 600_000, seed: int = 0, repeats: int = 3) -> dict:
         results["knn_batch_sharded_64_k16_s"] = -1.0
         results["sharded_engine_error"] = str(e)
 
+    # ---- adaptive device serving (hotspot workload) ----------------------
+    # time-to-first-result: boot DeviceQueryServer from the
+    # single-unrefined-root AMBI state and answer the first hotspot batch
+    # (host refinement + delta upload included); steady state: the same
+    # hotspot batch once the hot set is resident (pure device dispatch)
+    try:
+        from repro.core import AMBI
+        from repro.serve.engine import DeviceQueryServer
+
+        hot_c = qrng.random((64, d)) * 0.08 + 0.45
+        hot_c = hot_c.astype(np.float32).astype(np.float64)
+        hot_lo, hot_hi = hot_c - 0.02, hot_c + 0.02
+
+        def first_result():
+            ambi = AMBI(pts, M)
+            srv = DeviceQueryServer.from_ambi(ambi, microbatch=64)
+            srv.window(hot_lo, hot_hi)
+            return srv
+
+        t0 = time.perf_counter()
+        adaptive_srv = first_result()
+        results["adaptive_serve_first_result_s"] = time.perf_counter() - t0
+        adaptive_srv.window(hot_lo, hot_hi)  # compile/warm the hot path
+        results["adaptive_serve_steady_batch_64_s"] = _timed(
+            lambda: adaptive_srv.window(hot_lo, hot_hi), repeats
+        )
+        results["adaptive_serve_cold_queries"] = (
+            adaptive_srv.stats.cold_queries
+        )
+        results["adaptive_serve_grafts"] = adaptive_srv.stats.grafts
+    except Exception as e:  # pragma: no cover - accelerator-env dependent
+        results["adaptive_serve_first_result_s"] = -1.0
+        results["adaptive_serve_steady_batch_64_s"] = -1.0
+        results["adaptive_serve_error"] = str(e)
+
     # ---- JAX candidate-leaf window_count --------------------------------
     try:
         import jax.numpy as jnp
@@ -263,8 +305,10 @@ def smoke_gate(res: dict, use_baselines: bool = True) -> list[str]:
             continue
         base = baselines.get(f"smoke_{key}", -1.0)
         if base > 0:
-            limit = max(base * (1 + SMOKE_REGRESSION_FRAC),
-                        base + SMOKE_NOISE_FLOOR_S)
+            floor = SMOKE_NOISE_FLOOR_OVERRIDES_S.get(
+                name, SMOKE_NOISE_FLOOR_S
+            )
+            limit = max(base * (1 + SMOKE_REGRESSION_FRAC), base + floor)
             if got > limit:
                 failures.append(
                     f"{name}: {got:.3f}s > {limit:.3f}s "

@@ -72,7 +72,6 @@ class AMBI:
             raw_pages=-(-n // self.c_l),
             rows=np.arange(n),
         )
-        self._query_dist: Callable[[np.ndarray], float] = lambda mbb: 0.0
         self.index = Index(self.table, d, self.c_l, self.c_b, self.store, points)
 
     @property
@@ -83,22 +82,42 @@ class AMBI:
     def window(self, lo, hi):
         lo = np.asarray(lo, dtype=np.float64)
         hi = np.asarray(hi, dtype=np.float64)
-        self._query_dist = lambda mbb: mindist_box_sq(mbb, lo, hi)
-        return window_query(self.index, lo, hi, refiner=self._refine)
+        return window_query(
+            self.index, lo, hi, refiner=self.window_refiner(lo, hi)
+        )
 
     def knn(self, q, k: int):
         q = np.asarray(q, dtype=np.float64)
-        self._query_dist = lambda mbb: mindist_sq(mbb, q)
-        return knn_query(self.index, q, k, refiner=self._refine)
+        return knn_query(self.index, q, k, refiner=self.knn_refiner(q))
+
+    # -- refiners: the query context is bound explicitly, never held as
+    # instance state (a refinement triggered outside a query — the serving
+    # loop's case — must flush against *that* query, not the last one)
+    def window_refiner(self, lo, hi) -> Callable[[int], bool]:
+        """Row refiner whose flush policy keys on distance to [lo, hi]."""
+        lo = np.asarray(lo, dtype=np.float64)
+        hi = np.asarray(hi, dtype=np.float64)
+        return lambda row: self._refine(
+            row, lambda mbb: mindist_box_sq(mbb, lo, hi)
+        )
+
+    def knn_refiner(self, q) -> Callable[[int], bool]:
+        """Row refiner whose flush policy keys on distance to point ``q``."""
+        q = np.asarray(q, dtype=np.float64)
+        return lambda row: self._refine(row, lambda mbb: mindist_sq(mbb, q))
 
     def is_fully_refined(self) -> bool:
         return not bool(self.table.unrefined.any())
 
     # -- refinement --------------------------------------------------------
-    def _refine(self, row: int) -> bool:
+    def _refine(
+        self, row: int, query_dist: Callable[[np.ndarray], float]
+    ) -> bool:
         """Refine unrefined table ``row`` in place (the construction
         machinery assembles a transient ``Node`` subtree which is grafted
-        into the table); returns False when the row holds no points."""
+        into the table); returns False when the row holds no points.
+        ``query_dist`` maps a subspace MBB to its distance from the query
+        that triggered refinement (the adaptive build's max-heap key)."""
         idx = self.table.point_rows(row)
         if len(idx) == 0:
             return False
@@ -111,11 +130,13 @@ class AMBI:
                 self.points, idx, self.c_l, self.c_b, self.store
             )
         else:
-            entries = self._adaptive_build(idx)
+            entries = self._adaptive_build(idx, query_dist)
         self.table.graft(row, entries)
         return True
 
-    def _adaptive_build(self, idx: np.ndarray) -> list[Node]:
+    def _adaptive_build(
+        self, idx: np.ndarray, query_dist: Callable[[np.ndarray], float]
+    ) -> list[Node]:
         """Adaptive Steps 1-4 scoped to a dense unrefined row; returns its
         root entry list."""
         points, store, c_l, c_b, M = (
@@ -207,7 +228,7 @@ class AMBI:
         def qdist(i: int) -> float:
             if count[i] == 0:
                 return np.inf
-            return self._query_dist(np.stack([mbb_lo[i], mbb_hi[i]]))
+            return query_dist(np.stack([mbb_lo[i], mbb_hi[i]]))
 
         def mem_used() -> int:
             return int(mem.sum())

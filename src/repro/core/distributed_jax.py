@@ -75,12 +75,22 @@ except AttributeError:  # older jax: experimental namespace
 # --------------------------------------------------------------------------
 @dataclasses.dataclass
 class ShardedDeviceTable:
-    """m per-shard :class:`DeviceTable` pytrees behind an MBB router."""
+    """m per-shard :class:`DeviceTable` pytrees behind an MBB router.
+
+    When built through :meth:`from_table` the instance remembers its
+    source table, dataset, and each shard's subspace root rows, so the
+    adaptive serving path can re-export *only* the shards whose subspaces
+    a graft touched (:meth:`refresh`) instead of re-sharding the world.
+    """
 
     shards: list
     shard_lo: np.ndarray  # (m, d) float32 router MBBs (shard root boxes)
     shard_hi: np.ndarray
     n_points: int
+    source_table: NodeTable = None   # refresh scaffolding (from_table only)
+    source_points: np.ndarray = None
+    shard_roots: list = None         # per shard: source-table root rows
+    partial: bool = False
 
     @property
     def m(self) -> int:
@@ -92,26 +102,97 @@ class ShardedDeviceTable:
 
     @classmethod
     def from_tables(
-        cls, tables: list[NodeTable], points: np.ndarray, dtype=np.float32
+        cls,
+        tables: list[NodeTable],
+        points: np.ndarray,
+        dtype=np.float32,
+        *,
+        partial: bool = False,
     ) -> "ShardedDeviceTable":
         """From per-shard tables whose ``perm`` entries are global row ids
         (``NodeTable.shard`` output, or ``shard_build_tables``)."""
         if not tables:
             raise ValueError("need at least one shard table")
         points = np.asarray(points)
-        shards = [DeviceTable.from_table(t, points, dtype=dtype) for t in tables]
+        shards = [
+            DeviceTable.from_table(t, points, dtype=dtype, partial=partial)
+            for t in tables
+        ]
         return cls(
             shards=shards,
             shard_lo=np.stack([t.mbb_lo[0].astype(dtype) for t in tables]),
             shard_hi=np.stack([t.mbb_hi[0].astype(dtype) for t in tables]),
             n_points=int(sum(s.n_points for s in shards)),
+            partial=partial,
         )
 
     @classmethod
     def from_table(
-        cls, table: NodeTable, points: np.ndarray, m: int, dtype=np.float32
+        cls,
+        table: NodeTable,
+        points: np.ndarray,
+        m: int,
+        dtype=np.float32,
+        *,
+        partial: bool = False,
     ) -> "ShardedDeviceTable":
-        return cls.from_tables(table.shard(m), points, dtype=dtype)
+        sizes = table.subtree_points()
+        plan = table.shard_plan(m, sizes)
+        tables = [cls._extract(table, roots, sizes) for roots in plan]
+        self = cls.from_tables(tables, points, dtype=dtype, partial=partial)
+        self.source_table = table
+        self.source_points = np.asarray(points)
+        self.shard_roots = plan
+        return self
+
+    @staticmethod
+    def _extract(table: NodeTable, roots, sizes) -> NodeTable:
+        if list(roots) == [0]:
+            return table
+        return table.subtable(roots, sizes=sizes)
+
+    # -- adaptive refresh ---------------------------------------------------
+    def shards_of_rows(self, rows) -> list[int]:
+        """Which shards own the given source-table rows (ancestor climb
+        through the parent array — grafted rows always hang below a root
+        that existed when the shard plan was made)."""
+        if self.shard_roots is None:
+            raise ValueError("no shard plan recorded; build via from_table")
+        owner = {int(r): s for s, b in enumerate(self.shard_roots) for r in b}
+        par = self.source_table.parent_rows()
+        out: set[int] = set()
+        for r in rows:
+            r = int(r)
+            while r >= 0 and r not in owner:
+                r = int(par[r])
+            if r >= 0:
+                out.add(owner[r])
+        return sorted(out)
+
+    def refresh(self, shard_ids) -> None:
+        """Re-export only the listed shards from the (grafted) source
+        table — the delta unit of the sharded serving path: a graft
+        invalidates exactly the shard owning its subspace, every other
+        shard's device arrays are untouched."""
+        if self.source_table is None:
+            raise ValueError("no source recorded; build via from_table")
+        sizes = self.source_table.subtree_points()
+        dtype = self.shard_lo.dtype
+        for s in sorted(set(int(s) for s in shard_ids)):
+            t = self._extract(self.source_table, self.shard_roots[s], sizes)
+            self.shards[s] = DeviceTable.from_table(
+                t, self.source_points, dtype=dtype, partial=self.partial
+            )
+            self.shard_lo[s] = t.mbb_lo[0].astype(dtype)
+            self.shard_hi[s] = t.mbb_hi[0].astype(dtype)
+        self.n_points = int(sum(s.n_points for s in self.shards))
+
+    def remap_source_rows(self, remap: np.ndarray) -> None:
+        """Rebase the shard plan after ``NodeTable.compact``."""
+        if self.shard_roots is not None:
+            self.shard_roots = [
+                [int(remap[r]) for r in b] for b in self.shard_roots
+            ]
 
     @classmethod
     def from_index(cls, index, m: int, dtype=np.float32) -> "ShardedDeviceTable":
@@ -137,6 +218,11 @@ class ShardedDeviceTable:
         MBBs, dtype-max coordinates, zero fill counts) that every masked
         test already ignores.  Levels are not stacked — the collective
         round scans leaf blocks directly."""
+        if any(s.n_cold for s in self.shards):
+            raise ValueError(
+                "stacked() needs fully refined shards (partial exports "
+                "carry cold rows only the host-routed path can serve)"
+            )
         L = max(s.n_leaves for s in self.shards)
         S = max(s.leaf_size for s in self.shards)
         d = self.dim

@@ -312,7 +312,80 @@ class NodeTable:
             rows.append(first + j)
         self._append_level_order(queue, rows)
 
+    # -- vacuum --------------------------------------------------------------
+    def compact(self) -> np.ndarray:
+        """Vacuum the dead ``perm`` segments (and any unreachable rows)
+        that grafting accumulates.
+
+        Grafting never rewrites in place: refining an unrefined row appends
+        a fresh perm segment for every new leaf and the row's old raw
+        segment simply goes dead, so a long refinement workload leaves
+        ``n_perm`` far above the live point count (and the next snapshot or
+        device export correspondingly padded).  ``compact`` rebuilds the
+        table in BFS level order — rows renumber, sibling blocks stay
+        contiguous, children keep higher ids than their parent — and
+        rewrites ``perm`` to exactly the live segments in that row order,
+        so afterwards ``n_perm`` equals the live point count.  Page ids,
+        tree shape, and therefore traversal I/O are unchanged.
+
+        Returns the old-row -> new-row map (``-1`` for dropped rows) so
+        host-side scaffolding (device-table slot maps, shard root lists)
+        can be rebased instead of rebuilt.
+        """
+        blocks = []
+        cur = np.zeros(1, dtype=np.int64)
+        while cur.size:
+            blocks.append(cur)
+            cur = ragged_ranges(self.first_child[cur], self.child_count[cur])
+        order = np.concatenate(blocks)
+        n_new = len(order)
+        remap = np.full(self._n, -1, dtype=np.int64)
+        remap[order] = np.arange(n_new)
+        mbb_lo = self.mbb_lo[order].copy()
+        mbb_hi = self.mbb_hi[order].copy()
+        page_id = self.page_id[order].copy()
+        child_count = self.child_count[order].copy()
+        first_child = np.where(
+            child_count > 0, remap[self.first_child[order]], 0
+        )
+        leaf_count = self.leaf_count[order].copy()
+        raw_pages = self.raw_pages[order].copy()
+        unrefined = self.unrefined[order].copy()
+        payload = self.leaf_start[order] >= 0
+        starts = self.leaf_start[order]
+        sel = ragged_ranges(starts[payload], leaf_count[payload])
+        perm = self.perm[sel].copy()
+        leaf_start = np.full(n_new, -1, dtype=np.int64)
+        leaf_start[payload] = (
+            np.cumsum(leaf_count[payload]) - leaf_count[payload]
+        )
+        self._n = n_new
+        self._np = len(perm)
+        self._mbb_lo = mbb_lo
+        self._mbb_hi = mbb_hi
+        self._page_id = page_id
+        self._first_child = first_child
+        self._child_count = child_count
+        self._leaf_start = leaf_start
+        self._leaf_count = leaf_count
+        self._raw_pages = raw_pages
+        self._unrefined = unrefined
+        self._perm = perm
+        self._dfs = None
+        return remap
+
     # -- traversal orders ---------------------------------------------------
+    def parent_rows(self) -> np.ndarray:
+        """Parent row of every row (−1 for the root); one ragged gather."""
+        par = np.full(self._n, -1, dtype=np.int64)
+        branches = np.flatnonzero(self.child_count > 0)
+        if len(branches):
+            kids = ragged_ranges(
+                self.first_child[branches], self.child_count[branches]
+            )
+            par[kids] = np.repeat(branches, self.child_count[branches])
+        return par
+
     def dfs_order(self) -> np.ndarray:
         """Rows in the depth-first pop order of the object-graph traversal
         (children expanded onto a stack, so visited in reverse); cached until
@@ -505,24 +578,21 @@ class NodeTable:
         hint = int(sizes[roots].sum())
         return NodeTable.from_tree(src, self.dim, n_points_hint=hint)
 
-    def shard(self, m: int) -> list["NodeTable"]:
-        """Partition the table into at most ``m`` sub-tables of balanced
-        point count (the distributed engine's per-shard tables).
-
-        The root's child subtrees form the starting units — for a
-        :meth:`merged` table these are exactly the per-server subspaces, so
-        the central SplitTree's partition is recovered verbatim when ``m``
-        matches the server count.  While there are fewer units than shards
-        the largest unit is split into its children, then units are packed
-        into ``m`` bins by greedy longest-processing-time assignment.  Fewer
-        than ``m`` shards come back when the tree cannot be cut that finely
-        (e.g. a single-leaf table).  Deterministic for a given table.
+    def shard_plan(
+        self, m: int, sizes: Optional[np.ndarray] = None
+    ) -> list[list[int]]:
+        """The root-row lists :meth:`shard` extracts its sub-tables from
+        (exposed so callers that later need to *re-extract* a shard — the
+        adaptive refresh path — can record which subspaces each shard
+        owns).  Row lists are sorted; empty bins are dropped.  ``sizes``
+        is an optional precomputed :meth:`subtree_points` array.
         """
         if m < 1:
             raise ValueError(f"shard count must be >= 1, got {m}")
         if m == 1 or self._child_count[0] == 0:
-            return [self if m == 1 else self.subtable([0])]
-        sizes = self.subtree_points()
+            return [[0]]
+        if sizes is None:
+            sizes = self.subtree_points()
         frontier = list(self.children_of(0))
         while len(frontier) < m:
             branches = [r for r in frontier if self._child_count[r] > 0]
@@ -537,7 +607,27 @@ class NodeTable:
             i = min(range(m), key=lambda j: (loads[j], j))
             bins[i].append(r)
             loads[i] += int(sizes[r])
-        return [self.subtable(sorted(b), sizes=sizes) for b in bins if b]
+        return [sorted(b) for b in bins if b]
+
+    def shard(self, m: int) -> list["NodeTable"]:
+        """Partition the table into at most ``m`` sub-tables of balanced
+        point count (the distributed engine's per-shard tables).
+
+        The root's child subtrees form the starting units — for a
+        :meth:`merged` table these are exactly the per-server subspaces, so
+        the central SplitTree's partition is recovered verbatim when ``m``
+        matches the server count.  While there are fewer units than shards
+        the largest unit is split into its children, then units are packed
+        into ``m`` bins by greedy longest-processing-time assignment.  Fewer
+        than ``m`` shards come back when the tree cannot be cut that finely
+        (e.g. a single-leaf table).  Deterministic for a given table.
+        """
+        if m == 1:
+            return [self]
+        sizes = self.subtree_points()
+        return [
+            self.subtable(b, sizes=sizes) for b in self.shard_plan(m, sizes)
+        ]
 
     # -- accelerator bridge --------------------------------------------------
     def to_jax_index(self, points: np.ndarray, dtype=np.float32):
@@ -595,52 +685,48 @@ class NodeTable:
         )
 
     # -- device layout --------------------------------------------------------
-    def device_layout(self, points: np.ndarray, dtype=np.float32) -> dict:
-        """Fixed-shape arrays for the compiled query engine (numpy side).
-
-        The ragged table is re-blocked so every shape is static and every
-        query-time access is a dense gather (see ``core/queries_jax.py``,
-        which wraps these arrays in a jit-able ``DeviceTable`` pytree):
-
-          * ``leaf_pts``/``leaf_ids``  (L, S, d)/(L, S): each leaf's points
-            gathered once through ``perm`` into uniform ``S``-slot blocks
-            (S = max leaf fullness; padding slots carry ``id = -1`` and
-            dtype-max coordinates so containment and distance tests mask
-            them for free);
-          * ``leaf_lo``/``leaf_hi``  (L, d): leaf MBBs, slot-aligned;
-          * ``levels``: one block per tree depth — row MBBs, each row's
-            parent *position* within the previous level's block, and the
-            row's leaf slot (or ``L`` for branches).  Level blocks drive the
-            masked level-synchronous frontier descent; BFS order is computed
-            here so grafted (AMBI-refined) tables, whose rows are not
-            level-contiguous, lay out identically to freshly built ones.
-
-        Requires a fully refined table: an unrefined row has no subtree to
-        descend and its raw pages live host-side only.
+    def pack_leaf_blocks(
+        self, rows: np.ndarray, points: np.ndarray, S: int, dtype=np.float32
+    ) -> tuple[np.ndarray, np.ndarray]:
+        """Uniform ``S``-slot point/id blocks for the given payload rows
+        (padding slots carry ``id = -1`` and dtype-max coordinates).  The
+        device export and the incremental delta refresh share this packing.
         """
-        if bool(self.unrefined.any()):
-            raise ValueError("device layout requires a fully refined table")
         d = self.dim
         big = np.finfo(dtype).max
-        rows = self.leaf_rows()
+        k = len(rows)
         counts = self.leaf_count[rows]
-        L = len(rows)
-        S = int(counts.max()) if L and counts.size else 1
-        S = max(S, 1)
-        leaf_pts = np.full((L, S, d), big, dtype=dtype)
-        leaf_ids = np.full((L, S), -1, dtype=np.int32)
-        if L:
+        leaf_pts = np.full((k, S, d), big, dtype=dtype)
+        leaf_ids = np.full((k, S), -1, dtype=np.int32)
+        if k:
             sel = ragged_ranges(self.leaf_start[rows], counts)
             within = np.arange(len(sel), dtype=np.int64) - np.repeat(
                 np.cumsum(counts) - counts, counts
             )
-            slot_l = np.repeat(np.arange(L, dtype=np.int64), counts)
+            slot_l = np.repeat(np.arange(k, dtype=np.int64), counts)
             data_rows = self.perm[sel]
             leaf_pts[slot_l, within] = points[data_rows].astype(dtype)
             leaf_ids[slot_l, within] = data_rows
-        slot_of = np.full(self._n, L, dtype=np.int64)
-        slot_of[rows] = np.arange(L)
-        # BFS level blocks
+        return leaf_pts, leaf_ids
+
+    def slot_map(
+        self, leaf_rows: np.ndarray, cold_rows: np.ndarray
+    ) -> np.ndarray:
+        """Per-row frontier slots: leaves take ``[0, L)`` in ``leaf_rows``
+        order, cold (unrefined) rows ``[L, L + U)``, branches the dropped
+        sentinel ``L + U``.  One encoding shared by the full export and
+        the incremental delta refresh."""
+        L, U = len(leaf_rows), len(cold_rows)
+        slot_of = np.full(self._n, L + U, dtype=np.int64)
+        slot_of[leaf_rows] = np.arange(L)
+        slot_of[cold_rows] = L + np.arange(U)
+        return slot_of
+
+    def level_blocks(self, slot_of: np.ndarray, dtype=np.float32) -> list:
+        """BFS level blocks for the frontier descent: per depth, row MBBs,
+        each row's parent *position* within the previous level's block, and
+        the row's slot from ``slot_of`` (leaf slot, cold slot, or the
+        dropped sentinel for branches)."""
         pos = np.zeros(self._n, dtype=np.int64)
         levels: list[dict] = []
         cur = np.zeros(1, dtype=np.int64)
@@ -659,13 +745,65 @@ class NodeTable:
             nxt = ragged_ranges(self.first_child[cur], cc)
             parent_pos = pos[np.repeat(cur, cc)]
             cur = nxt
+        return levels
+
+    def device_layout(
+        self, points: np.ndarray, dtype=np.float32, *, partial: bool = False
+    ) -> dict:
+        """Fixed-shape arrays for the compiled query engine (numpy side).
+
+        The ragged table is re-blocked so every shape is static and every
+        query-time access is a dense gather (see ``core/queries_jax.py``,
+        which wraps these arrays in a jit-able ``DeviceTable`` pytree):
+
+          * ``leaf_pts``/``leaf_ids``  (L, S, d)/(L, S): each leaf's points
+            gathered once through ``perm`` into uniform ``S``-slot blocks
+            (S = max leaf fullness; padding slots carry ``id = -1`` and
+            dtype-max coordinates so containment and distance tests mask
+            them for free);
+          * ``leaf_lo``/``leaf_hi``  (L, d): leaf MBBs, slot-aligned;
+          * ``levels``: one block per tree depth — row MBBs, each row's
+            parent *position* within the previous level's block, and the
+            row's slot: leaf slot, ``L + cold slot`` for unrefined rows,
+            or the dropped sentinel ``L + U`` for branches.  Level blocks
+            drive the masked level-synchronous frontier descent; BFS order
+            is computed here so grafted (AMBI-refined) tables, whose rows
+            are not level-contiguous, lay out identically to freshly built
+            ones.
+
+        With ``partial=False`` (default) the table must be fully refined:
+        an unrefined row has no subtree to descend and its raw pages live
+        host-side only.  With ``partial=True`` unrefined rows are exported
+        as *cold* entries — their MBBs land in ``cold_lo``/``cold_hi`` and
+        their slots in the level blocks address the cold range, so the
+        frontier traversal surfaces "this query reaches unindexed space"
+        as a mask the serving layer answers host-side (refining on
+        demand).  ``leaf_rows``/``cold_rows`` map slots back to table rows
+        (the scaffolding the incremental delta refresh rebases).
+        """
+        if not partial and bool(self.unrefined.any()):
+            raise ValueError(
+                "device layout requires a fully refined table "
+                "(pass partial=True to export unrefined rows as cold)"
+            )
+        rows = self.leaf_rows()
+        cold = np.flatnonzero(self.unrefined)
+        counts = self.leaf_count[rows]
+        L = len(rows)
+        S = max(int(counts.max()) if L and counts.size else 1, 1)
+        leaf_pts, leaf_ids = self.pack_leaf_blocks(rows, points, S, dtype)
+        slot_of = self.slot_map(rows, cold)
         return {
             "leaf_pts": leaf_pts,
             "leaf_ids": leaf_ids,
             "leaf_counts": counts.astype(np.int32),
             "leaf_lo": self.mbb_lo[rows].astype(dtype),
             "leaf_hi": self.mbb_hi[rows].astype(dtype),
-            "levels": levels,
+            "cold_lo": self.mbb_lo[cold].astype(dtype),
+            "cold_hi": self.mbb_hi[cold].astype(dtype),
+            "levels": self.level_blocks(slot_of, dtype),
+            "leaf_rows": rows,
+            "cold_rows": cold,
         }
 
     def to_device(self, points: np.ndarray, dtype=np.float32):

@@ -78,6 +78,24 @@ PAIR_CHUNK = 16384
 # retrace counters (trace-time side effects): tests pin compile growth
 TRACE_COUNTS = {"frontier": 0, "window_collect": 0, "knn_core": 0}
 
+# host -> device upload accounting: the adaptive-serving tests prove a graft
+# refreshes the device table by uploading only its delta (full_exports stays
+# at the boot count; each refresh uploads exactly the new leaf blocks)
+UPLOAD_STATS = {
+    "full_exports": 0,       # DeviceTable.from_table calls
+    "delta_refreshes": 0,    # DeviceTable.apply_delta calls
+    "uploaded_leaf_blocks": 0,  # leaf blocks shipped host -> device
+    "uploaded_points": 0,       # live points inside those blocks
+}
+
+
+def reset_upload_stats() -> dict:
+    """Zero the upload counters; returns the pre-reset values."""
+    old = dict(UPLOAD_STATS)
+    for k in UPLOAD_STATS:
+        UPLOAD_STATS[k] = 0
+    return old
+
 
 def _use_kernel_default() -> bool:
     from ..kernels import ops as kops
@@ -85,10 +103,24 @@ def _use_kernel_default() -> bool:
     return kops._on_tpu()
 
 
+def _levels_to_jax(levels) -> tuple:
+    """Host level blocks -> the per-depth device tuples ``DeviceTable``
+    carries (shared by the full export and the delta refresh)."""
+    return tuple(
+        (
+            jnp.asarray(lv["lo"]),
+            jnp.asarray(lv["hi"]),
+            jnp.asarray(lv["parent"]),
+            jnp.asarray(lv["slot"]),
+        )
+        for lv in levels
+    )
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class DeviceTable:
-    """Fixed-shape device export of a fully refined ``NodeTable``.
+    """Fixed-shape device export of a ``NodeTable``.
 
     ``levels`` is a tuple of per-depth blocks ``(lo, hi, parent, slot)``
     (see ``NodeTable.device_layout`` for the exact semantics).  The whole
@@ -96,6 +128,13 @@ class DeviceTable:
     argument and two tables with identical shapes share compilations.
     ``leaf_ids_host`` keeps the id blocks host-side for the NumPy packing
     stage of window collection.
+
+    A *partial* export (``from_table(..., partial=True)`` over a table with
+    unrefined AMBI rows) additionally carries the cold axis: unrefined-row
+    MBBs in ``cold_lo``/``cold_hi`` whose hits :func:`frontier_leaf_hits`
+    surfaces past the leaf columns, and the ``leaf_rows``/``cold_rows``
+    host maps :meth:`apply_delta` uses to refresh the export incrementally
+    after the host grafts new subtrees.
     """
 
     leaf_pts: jnp.ndarray    # (L, S, d) leaf-blocked points, pad = dtype max
@@ -104,28 +143,36 @@ class DeviceTable:
     leaf_lo: jnp.ndarray     # (L, d)
     leaf_hi: jnp.ndarray     # (L, d)
     levels: tuple            # per depth: (lo (n,d), hi (n,d), parent, slot)
-    n_points: int
+    cold_lo: jnp.ndarray = None  # (U, d) unrefined-row MBBs (partial export)
+    cold_hi: jnp.ndarray = None  # (U, d)
+    n_points: int = None
     leaf_ids_host: np.ndarray = None
+    leaf_rows: np.ndarray = None  # (L,) table row behind each leaf slot
+    cold_rows: np.ndarray = None  # (U,) table row behind each cold slot
 
     def tree_flatten(self):
-        # n_points and leaf_ids_host are host-only scaffolding: excluded
+        # n_points and the host maps are host-only scaffolding: excluded
         # from the pytree (aux is part of the jit cache key, and no jitted
-        # core reads either), so shard tables with identical shapes but
-        # different live fills share compilations; traced reconstructions
-        # carry None, which no jitted core touches
+        # core reads any of them), so shard tables with identical shapes
+        # but different live fills share compilations; traced
+        # reconstructions carry None, which lazy accessors rebuild
         return (
             (self.leaf_pts, self.leaf_ids, self.leaf_counts, self.leaf_lo,
-             self.leaf_hi, self.levels),
+             self.leaf_hi, self.levels, self.cold_lo, self.cold_hi),
             (),
         )
 
     @classmethod
     def tree_unflatten(cls, aux, children):
-        return cls(*children, n_points=None, leaf_ids_host=None)
+        return cls(*children)
 
     @property
     def n_leaves(self) -> int:
         return self.leaf_pts.shape[0]
+
+    @property
+    def n_cold(self) -> int:
+        return 0 if self.cold_lo is None else self.cold_lo.shape[0]
 
     @property
     def leaf_size(self) -> int:
@@ -143,28 +190,38 @@ class DeviceTable:
             self.leaf_ids_host = np.asarray(self.leaf_ids)
         return self.leaf_ids_host
 
+    def live_points(self) -> int:
+        """Live point count (sum of leaf fills); like :attr:`host_ids`,
+        lazily recovered when a pytree round-trip dropped the scaffolding."""
+        if self.n_points is None:
+            self.n_points = int(np.asarray(self.leaf_counts).sum())
+        return self.n_points
+
     @classmethod
     def from_table(
-        cls, table: NodeTable, points: np.ndarray, dtype=np.float32
+        cls,
+        table: NodeTable,
+        points: np.ndarray,
+        dtype=np.float32,
+        *,
+        partial: bool = False,
     ) -> "DeviceTable":
-        """Export ``table`` over ``points``.
+        """Export ``table`` over ``points`` (a full upload).
 
         ``n_points`` is the table's *live* point count (the sum of its leaf
         fills), not ``len(points)`` — a shard table addresses the global
         dataset but owns only its slice, and result lengths truncate to
-        what the table can actually return.  For a whole-dataset table the
-        two are equal.
+        what the table can actually return.  For a whole-dataset fully
+        refined table the two are equal; a partial export counts only the
+        refined points.
         """
-        lay = table.device_layout(np.asarray(points), dtype=dtype)
-        levels = tuple(
-            (
-                jnp.asarray(lv["lo"]),
-                jnp.asarray(lv["hi"]),
-                jnp.asarray(lv["parent"]),
-                jnp.asarray(lv["slot"]),
-            )
-            for lv in lay["levels"]
+        lay = table.device_layout(
+            np.asarray(points), dtype=dtype, partial=partial
         )
+        levels = _levels_to_jax(lay["levels"])
+        UPLOAD_STATS["full_exports"] += 1
+        UPLOAD_STATS["uploaded_leaf_blocks"] += lay["leaf_pts"].shape[0]
+        UPLOAD_STATS["uploaded_points"] += int(lay["leaf_counts"].sum())
         return cls(
             leaf_pts=jnp.asarray(lay["leaf_pts"]),
             leaf_ids=jnp.asarray(lay["leaf_ids"]),
@@ -172,14 +229,111 @@ class DeviceTable:
             leaf_lo=jnp.asarray(lay["leaf_lo"]),
             leaf_hi=jnp.asarray(lay["leaf_hi"]),
             levels=levels,
+            cold_lo=jnp.asarray(lay["cold_lo"]),
+            cold_hi=jnp.asarray(lay["cold_hi"]),
             n_points=int(lay["leaf_counts"].sum()),
             leaf_ids_host=lay["leaf_ids"],
+            leaf_rows=lay["leaf_rows"],
+            cold_rows=lay["cold_rows"],
         )
 
     @classmethod
     def from_index(cls, index, dtype=np.float32) -> "DeviceTable":
         """From a built ``core.fmbi.Index`` (table + dataset)."""
         return cls.from_table(index.table, index.points, dtype=dtype)
+
+    def apply_delta(self, table: NodeTable, points: np.ndarray) -> "DeviceTable":
+        """Incremental refresh after host-side grafts: returns a *new*
+        ``DeviceTable`` (double-buffered — the caller keeps serving this
+        one until it swaps) in which only the freshly grafted leaf blocks
+        are uploaded from the host.
+
+        Grafting never mutates an existing refined leaf — it refines an
+        unrefined row in place and appends new rows — so every leaf slot
+        this export already holds stays valid verbatim: the big point/id
+        payload is extended device-side (old blocks are reused, padded to a
+        wider slot count on device if a new leaf is fuller than any before)
+        and only the new leaves' blocks cross the host/device boundary.
+        The O(n_nodes) traversal metadata (level blocks, leaf/cold MBBs,
+        fill counts) is recomputed host-side and re-uploaded — it is tiny
+        next to the point payload and renumbering cold slots keeps the
+        frontier encoding dense.
+        """
+        if self.leaf_rows is None:
+            raise ValueError(
+                "delta refresh needs the host scaffolding (leaf_rows); "
+                "this table came out of a pytree round-trip — re-export "
+                "with DeviceTable.from_table"
+            )
+        dtype = np.dtype(self.leaf_pts.dtype)
+        big = np.finfo(dtype).max
+        d = self.dim
+        old_rows = self.leaf_rows
+        known = np.zeros(table.n_nodes, dtype=bool)
+        known[old_rows] = True
+        rows_now = table.leaf_rows()
+        new_rows = rows_now[~known[rows_now]]
+        leaf_rows = np.concatenate([old_rows, new_rows])
+        counts_new = table.leaf_count[new_rows]
+        s_old = self.leaf_size
+        S = max(s_old, int(counts_new.max()) if len(counts_new) else 1)
+        lp, li = self.leaf_pts, self.leaf_ids
+        if S > s_old:  # widen existing blocks device-side (no host upload)
+            l_old = self.n_leaves
+            lp = jnp.concatenate(
+                [lp, jnp.full((l_old, S - s_old, d), big, dtype=lp.dtype)],
+                axis=1,
+            )
+            li = jnp.concatenate(
+                [li, jnp.full((l_old, S - s_old), -1, dtype=li.dtype)], axis=1
+            )
+        if len(new_rows):
+            nb_pts, nb_ids = table.pack_leaf_blocks(
+                new_rows, np.asarray(points), S, dtype
+            )
+            lp = jnp.concatenate([lp, jnp.asarray(nb_pts)], axis=0)
+            li = jnp.concatenate([li, jnp.asarray(nb_ids)], axis=0)
+        cold = np.flatnonzero(table.unrefined)
+        levels = _levels_to_jax(
+            table.level_blocks(table.slot_map(leaf_rows, cold), dtype)
+        )
+        counts = table.leaf_count[leaf_rows].astype(np.int32)
+        ids_host = self.host_ids
+        if len(new_rows):  # S can only widen when there are new leaves
+            ids_host = np.concatenate(
+                [
+                    np.pad(ids_host, ((0, 0), (0, S - s_old)),
+                           constant_values=-1),
+                    nb_ids,
+                ]
+                if S > s_old
+                else [ids_host, nb_ids]
+            )
+        UPLOAD_STATS["delta_refreshes"] += 1
+        UPLOAD_STATS["uploaded_leaf_blocks"] += len(new_rows)
+        UPLOAD_STATS["uploaded_points"] += int(counts_new.sum())
+        return DeviceTable(
+            leaf_pts=lp,
+            leaf_ids=li,
+            leaf_counts=jnp.asarray(counts),
+            leaf_lo=jnp.asarray(table.mbb_lo[leaf_rows].astype(dtype)),
+            leaf_hi=jnp.asarray(table.mbb_hi[leaf_rows].astype(dtype)),
+            levels=levels,
+            cold_lo=jnp.asarray(table.mbb_lo[cold].astype(dtype)),
+            cold_hi=jnp.asarray(table.mbb_hi[cold].astype(dtype)),
+            n_points=int(counts.sum()),
+            leaf_ids_host=ids_host,
+            leaf_rows=leaf_rows,
+            cold_rows=cold,
+        )
+
+    def remap_rows(self, remap: np.ndarray) -> None:
+        """Rebase the host scaffolding after ``NodeTable.compact`` (row
+        renumbering changes no leaf content, so the device arrays stay)."""
+        if self.leaf_rows is not None:
+            self.leaf_rows = remap[self.leaf_rows]
+        if self.cold_rows is not None:
+            self.cold_rows = remap[self.cold_rows]
 
 
 # --------------------------------------------------------------------------
@@ -189,17 +343,22 @@ class DeviceTable:
 def frontier_leaf_hits(
     dev: DeviceTable, los: jnp.ndarray, his: jnp.ndarray
 ) -> jnp.ndarray:
-    """(Q, L) mask of leaves whose MBB intersects each query window.
+    """(Q, L + U) mask of leaves — and, for a partial export, cold
+    (unrefined) rows — whose MBB intersects each query window.
 
     One masked broadcast box test per level block; survival propagates
-    down through the parent-position gather.  Branch rows scatter into the
-    sentinel row ``L`` of the accumulator, which is dropped.
+    down through the parent-position gather.  Columns ``[0, L)`` are leaf
+    slots, columns ``[L, L + U)`` are the cold slots of a partial AMBI
+    export (the serving layer's "this query needs the host" mask; U = 0
+    for a fully refined table, so the shape reduces to the classic (Q, L)).
+    Branch rows scatter into the sentinel row ``L + U`` of the
+    accumulator, which is dropped.
     """
     TRACE_COUNTS["frontier"] += 1
     q = los.shape[0]
-    n_l = dev.n_leaves
+    n_slots = dev.n_leaves + dev.n_cold
     d = dev.dim
-    leaf_hit = jnp.zeros((n_l + 1, q), dtype=bool)
+    leaf_hit = jnp.zeros((n_slots + 1, q), dtype=bool)
     prev = None
     for lo_l, hi_l, parent, slot in dev.levels:
         # static unroll over dimensions: (n_level, Q) planes, no
@@ -214,7 +373,7 @@ def frontier_leaf_hits(
             hit = hit & prev[parent]
         leaf_hit = leaf_hit.at[slot].max(hit)
         prev = hit
-    return leaf_hit[:n_l].T
+    return leaf_hit[:n_slots].T
 
 
 # --------------------------------------------------------------------------
@@ -278,6 +437,7 @@ def window_query_batch_jax(
     his: np.ndarray,
     *,
     use_kernel: bool | None = None,
+    return_cold: bool = False,
 ) -> list[np.ndarray]:
     """Compiled batched window query: per-query arrays of dataset row ids.
 
@@ -287,6 +447,13 @@ def window_query_batch_jax(
     escalate.  Work scales with the candidate pairs the batch actually
     touches; the pair list streams in power-of-two buckets capped at
     ``PAIR_CHUNK`` so compiled variants stay bounded.
+
+    On a *partial* export the returned ids cover only the refined leaves.
+    ``return_cold=True`` additionally returns the (Q, U) cold-hit mask the
+    frontier surfaced — per query, which unrefined rows it reached.  A
+    query whose cold row is all-False is complete as returned; one that
+    touches unindexed space must be answered (and its subspaces refined)
+    host-side.  U = 0 for a refined table, so the mask is vacuously empty.
     """
     if use_kernel is None:
         use_kernel = _use_kernel_default()
@@ -295,11 +462,13 @@ def window_query_batch_jax(
     # padding boxes are inverted: they can never intersect a leaf
     (los, his), q0 = _pad_batch([los, his], [BIG, -BIG])
     losj, hisj = jnp.asarray(los), jnp.asarray(his)
-    inter = np.asarray(frontier_leaf_hits(dev, losj, hisj))
-    q_idx, leaf_idx = np.nonzero(inter[:q0])  # row-major: query-grouped
+    hits = np.asarray(frontier_leaf_hits(dev, losj, hisj))[:q0]
+    inter, cold = hits[:, : dev.n_leaves], hits[:, dev.n_leaves :]
+    q_idx, leaf_idx = np.nonzero(inter)  # row-major: query-grouped
     p0 = len(q_idx)
     if p0 == 0:
-        return [np.zeros(0, dtype=np.int64) for _ in range(q0)]
+        empty = [np.zeros(0, dtype=np.int64) for _ in range(q0)]
+        return (empty, cold) if return_cold else empty
     parts, pair_counts = [], []
     for a in range(0, p0, PAIR_CHUNK):
         b = min(a + PAIR_CHUNK, p0)
@@ -321,7 +490,8 @@ def window_query_batch_jax(
     all_ids = np.concatenate(parts)
     per_pair = np.concatenate(pair_counts)
     per_query = np.bincount(q_idx, weights=per_pair, minlength=q0)
-    return np.split(all_ids, np.cumsum(per_query.astype(np.int64))[:-1])
+    res = np.split(all_ids, np.cumsum(per_query.astype(np.int64))[:-1])
+    return (res, cold) if return_cold else res
 
 
 # --------------------------------------------------------------------------
@@ -420,11 +590,22 @@ def knn_query_batch_jax(
     back too, as ``(ids_list, d2_list)`` — the distributed two-round
     merge consumes them (the same f32 values every shard computes for the
     same (point, query) pair, so a cross-shard merge reproduces the
-    single-table ranking)."""
+    single-table ranking).
+
+    On a *partial* export the results are exact over the refined subset
+    only (an all-cold export returns empty results): whether the cold
+    subspaces could hold closer neighbors is the serving layer's check
+    (mindist of each cold box against the k-th returned distance)."""
     if use_kernel is None:
         use_kernel = _use_kernel_default()
     qs = np.atleast_2d(np.asarray(qs, dtype=np.float32))
     q0 = qs.shape[0]
+    if dev.n_leaves == 0:  # partial export before the first graft: the
+        # device holds nothing scannable — every query is the host's
+        empty = [np.zeros(0, dtype=np.int64) for _ in range(q0)]
+        if return_dists:
+            return empty, [np.zeros(0, dtype=np.float32) for _ in range(q0)]
+        return empty
     s = dev.leaf_size
     cap = _pow2(dev.n_leaves)
     if n_candidate_leaves is None:
@@ -442,7 +623,8 @@ def knn_query_batch_jax(
         done = exact[:b0] if c < dev.n_leaves else np.ones(b0, dtype=bool)
         # padding fill (BIG/inf distances) sorts last, so the result is
         # always the first min(k, n) entries — no distance threshold needed
-        m = min(k, dev.n_points)
+        # (live_points recovers the count after a pytree round-trip)
+        m = min(k, dev.live_points())
         for j in np.flatnonzero(done):
             results[pending[j]] = ids[j, :m].astype(np.int64)
             dists[pending[j]] = d2k[j, :m]

@@ -30,7 +30,7 @@ from ..models import model as M
 from ..models.sharding import axes_for_mesh
 from ..train import optimizer as opt_mod
 from ..train.trainer import make_train_step, pick_microbatches
-from .mesh import make_production_mesh
+from .mesh import make_production_mesh, use_mesh
 
 RESULTS_DIR = pathlib.Path(__file__).resolve().parents[3] / "experiments"
 
@@ -62,7 +62,7 @@ def lower_cell(cfg, shape, mesh, *, probe_blocks: int | None = None,
     for a in axes.dp:
         n_dp *= mesh.shape[a]
 
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         if shape.kind == "train":
             opt_name = opt_mod.pick_for(cfg)
             optimizer = opt_mod.get_optimizer(opt_name)
@@ -110,12 +110,14 @@ def lower_cell(cfg, shape, mesh, *, probe_blocks: int | None = None,
 def run_cell(cfg, shape, mesh, *, probes: bool = False,
              save: bool = True, extra_cfg: dict | None = None,
              tag: str = "", force_micro: int | None = None) -> dict:
+    from .. import roofline
+
     t0 = time.time()
     lowered, compiled, meta = lower_cell(cfg, shape, mesh,
                                          extra_cfg=extra_cfg,
                                          force_micro=force_micro)
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = roofline.cost_analysis_dict(compiled)
     rec = {
         "arch": cfg.name,
         "shape": shape.name,
@@ -135,8 +137,6 @@ def run_cell(cfg, shape, mesh, *, probes: bool = False,
     }
     # collective schedule from the compiled HLO (while-body multipliers
     # resolved by the parser)
-    from .. import roofline
-
     txt = compiled.as_text()
     rec["collectives"] = roofline.parse_collectives(txt)
     rec["hlo_ops"] = roofline.op_census(txt)
@@ -146,7 +146,7 @@ def run_cell(cfg, shape, mesh, *, probes: bool = False,
         for nb in (1, 2):
             _, c, _ = lower_cell(cfg, shape, mesh, probe_blocks=nb,
                                  extra_cfg=extra_cfg)
-            pca = c.cost_analysis() or {}
+            pca = roofline.cost_analysis_dict(c)
             pc = roofline.parse_collectives(c.as_text())
             probe[f"blocks{nb}"] = {
                 "flops": pca.get("flops", 0.0),

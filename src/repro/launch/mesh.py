@@ -9,17 +9,36 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` across the 0.4 -> 0.7 API drift: newer jax wants
+    explicit ``axis_types`` (Auto keeps the legacy sharding semantics),
+    jax 0.4 has no such kwarg (Auto is the only behaviour)."""
+    try:
+        return jax.make_mesh(
+            shape, axes,
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes),
+        )
+    except (AttributeError, TypeError):  # jax 0.4: no AxisType/axis_types
+        return jax.make_mesh(shape, axes)
+
+
+def use_mesh(mesh):
+    """Context manager activating ``mesh``: ``jax.set_mesh`` where it
+    exists (jax >= 0.6), the ``Mesh`` object's own context manager (which
+    sets the thread-resident mesh ``with_sharding_constraint`` resolves
+    PartitionSpecs against) on jax 0.4."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh for CPU tests/examples (uses however many local devices)."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2,
-    )
+    return make_mesh((data, model), ("data", "model"))

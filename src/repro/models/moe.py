@@ -27,7 +27,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from .layers import Param, swiglu
-from .sharding import constrain
+from .sharding import ambient_mesh, constrain, shard_map_compat
 
 TOKEN_CHUNK = 8192
 
@@ -87,8 +87,8 @@ def moe_ffn(p, cfg, x, axes):
     dp = axes.dp if len(axes.dp) > 1 else axes.dp[0]
     tp = axes.tp
 
+    mesh = ambient_mesh()
     try:
-        mesh = jax.sharding.get_abstract_mesh()
         n_dp = 1
         for a in (axes.dp if isinstance(axes.dp, tuple) else (axes.dp,)):
             n_dp *= mesh.shape[a]
@@ -137,8 +137,9 @@ def moe_ffn(p, cfg, x, axes):
         out = jax.lax.psum(out, tp)  # EP combine across expert shards
         return out.reshape(Bl, Sl, D)
 
-    fn = jax.shard_map(
+    fn = shard_map_compat(
         body,
+        mesh,
         in_specs=(
             P(None, None),        # router: replicated
             P(tp, None, None),    # experts sharded over the model axis

@@ -44,6 +44,15 @@ _DTYPE_BYTES = {
 }
 
 
+
+def cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` across the jax 0.4 -> 0.7 drift: older
+    jax returns a per-device list of dicts, newer jax one dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
 def _shape_bytes(type_str: str) -> int:
     """Bytes of an HLO type string, e.g. 'bf16[2,1024,512]{2,1,0}' or a
     tuple '(f32[8], f32[8])'."""

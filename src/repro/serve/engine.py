@@ -14,6 +14,7 @@ compiled variants.
 from __future__ import annotations
 
 import dataclasses
+from collections import OrderedDict
 
 import jax
 import jax.numpy as jnp
@@ -119,7 +120,10 @@ class RetrievalServer:
                       hot_capacity: int) -> None:
         self.levels = levels
         self.adaptive = adaptive
-        self.hot: dict[int, int] = {}  # leaf -> last-touch tick (AMBI policy)
+        # leaf -> last-touch tick, insertion-ordered: recency order IS the
+        # dict order (same structure as pagestore.LRUBuffer), so eviction is
+        # popitem(last=False) instead of an O(capacity) min() scan per query
+        self.hot: OrderedDict[int, int] = OrderedDict()
         self.hot_capacity = hot_capacity
         self.tick = 0
         self.stats = RetrievalStats()
@@ -136,14 +140,15 @@ class RetrievalServer:
             )
             for leaf in leaves:
                 self.tick += 1
-                if int(leaf) in self.hot:
+                leaf = int(leaf)
+                if leaf in self.hot:
                     self.stats.hot_hits += 1
+                    self.hot.move_to_end(leaf)
                 else:
                     self.stats.cold_misses += 1
-                self.hot[int(leaf)] = self.tick
+                self.hot[leaf] = self.tick
                 if len(self.hot) > self.hot_capacity:
-                    coldest = min(self.hot, key=self.hot.get)
-                    del self.hot[coldest]
+                    self.hot.popitem(last=False)  # least recent first
             self.stats.queries += len(queries)
         return np.asarray(rows), np.asarray(d2), np.asarray(exact)
 
@@ -163,6 +168,12 @@ class DeviceQueryStats:
     queries: int = 0
     microbatches: int = 0
     shards: int = 1
+    hot_queries: int = 0       # answered entirely on the device
+    cold_queries: int = 0      # reached unindexed space -> host + refine
+    grafts: int = 0            # unrefined rows refined by the serving loop
+    delta_refreshes: int = 0   # DeviceTable.apply_delta swaps
+    shard_refreshes: int = 0   # shards re-exported by ShardedDeviceTable
+    compactions: int = 0       # NodeTable.compact vacuums
 
 
 class DeviceQueryServer:
@@ -183,23 +194,60 @@ class DeviceQueryServer:
     DeviceTables behind a subspace-MBB router, windows fan out only to
     qualified shards, and k-NN runs the two-round certified protocol —
     same results, distributed execution.
+
+    ``adaptive=True`` (boot via :meth:`from_ambi`) serves an AMBI table
+    that may be arbitrarily unrefined — down to the single-unrefined-root
+    state, where the device holds nothing but the root's cold box:
+
+      * the table is exported *partially* — unrefined rows ride along as
+        cold boxes the compiled frontier traversal surfaces as a mask;
+      * a query that never reaches cold space is answered entirely from
+        the device (no simulated I/O, the hot path);
+      * a cold query is answered by the host AMBI engine, whose refiner —
+        carrying that query's context explicitly — charges the paper's
+        I/O and grafts the touched subspaces;
+      * after each microbatch the grafts are pushed to the device
+        *incrementally*: ``DeviceTable.apply_delta`` uploads only the new
+        leaf blocks into a double-buffered swap (sharded serving
+        re-exports only the shards owning grafted subspaces), and
+        ``NodeTable.compact`` vacuums dead perm segments once grafting
+        has bloated the host table past ``compact_slack``.
+
+    Under a focused workload the hot set converges and serving detaches
+    from the host entirely — the paper's adaptivity argument carried onto
+    the accelerator.
     """
 
     def __init__(self, table, points: np.ndarray, *,
                  microbatch: int = 64, use_kernel: bool | None = None,
-                 shards: int | None = None):
+                 shards: int | None = None, adaptive: bool = False,
+                 ambi=None, compact_slack: float = 0.5):
         from ..core.distributed_jax import ShardedDeviceTable
         from ..core.queries_jax import DeviceTable
 
+        if adaptive:
+            if ambi is None:
+                raise ValueError(
+                    "adaptive serving needs the host AMBI engine — boot "
+                    "with DeviceQueryServer.from_ambi(ambi)"
+                )
+            table, points = ambi.table, ambi.points
         points = np.asarray(points)
         if shards is not None and shards > 1:
-            self.sdev = ShardedDeviceTable.from_table(table, points, shards)
+            self.sdev = ShardedDeviceTable.from_table(
+                table, points, shards, partial=adaptive
+            )
             self.dev = None
             n_shards = self.sdev.m
         else:
-            self.dev = DeviceTable.from_table(table, points)
+            self.dev = DeviceTable.from_table(table, points, partial=adaptive)
             self.sdev = None
             n_shards = 1
+        self.requested_shards = shards if shards is not None else 1
+        self.adaptive = adaptive
+        self.ambi = ambi
+        self.points = points
+        self.compact_slack = float(compact_slack)
         self.microbatch = int(microbatch)
         self.use_kernel = use_kernel
         self.stats = DeviceQueryStats(shards=n_shards)
@@ -208,6 +256,12 @@ class DeviceQueryServer:
     def from_index(cls, index, **kw) -> "DeviceQueryServer":
         """From a built ``core.fmbi.Index`` (or AMBI's ``.index``)."""
         return cls(index.table, index.points, **kw)
+
+    @classmethod
+    def from_ambi(cls, ambi, **kw) -> "DeviceQueryServer":
+        """Adaptive serving over a host AMBI engine (any refinement state,
+        including the freshly constructed single-unrefined-root table)."""
+        return cls(ambi.table, ambi.points, adaptive=True, ambi=ambi, **kw)
 
     @classmethod
     def from_snapshot(cls, path, **kw) -> "DeviceQueryServer":
@@ -232,7 +286,9 @@ class DeviceQueryServer:
         his = np.atleast_2d(np.asarray(his))
         out: list[np.ndarray] = []
         for a, b in self._chunks(los.shape[0]):
-            if self.sdev is not None:
+            if self.adaptive:
+                out.extend(self._window_adaptive(los[a:b], his[a:b]))
+            elif self.sdev is not None:
                 out.extend(window_query_batch_sharded(
                     self.sdev, los[a:b], his[a:b],
                     use_kernel=self.use_kernel,
@@ -253,7 +309,9 @@ class DeviceQueryServer:
         qs = np.atleast_2d(np.asarray(qs))
         out: list[np.ndarray] = []
         for a, b in self._chunks(qs.shape[0]):
-            if self.sdev is not None:
+            if self.adaptive:
+                out.extend(self._knn_adaptive(qs[a:b], k))
+            elif self.sdev is not None:
                 out.extend(knn_query_batch_sharded(
                     self.sdev, qs[a:b], k, use_kernel=self.use_kernel
                 ))
@@ -264,3 +322,149 @@ class DeviceQueryServer:
             self.stats.microbatches += 1
         self.stats.queries += qs.shape[0]
         return out
+
+    # -- adaptive serving loop ----------------------------------------------
+    def _window_adaptive(self, los, his) -> list[np.ndarray]:
+        """One microbatch: device answers for hot queries, host answers
+        (+ refinement + device refresh) for queries reaching cold space."""
+        from ..core.distributed_jax import window_query_batch_sharded
+        from ..core.geometry import boxes_intersect_windows
+        from ..core.queries_jax import window_query_batch_jax
+
+        t = self.ambi.table
+        unref = np.flatnonzero(t.unrefined)
+        if self.sdev is not None:
+            # reaching an unrefined row == intersecting its MBB (hit sets
+            # are downward-closed), so the host-side router test equals
+            # the frontier's cold mask without a cross-shard gather — and,
+            # being known up front, lets the device serve only the hot part
+            cold_q = (
+                boxes_intersect_windows(
+                    t.mbb_lo[unref], t.mbb_hi[unref],
+                    np.asarray(los, dtype=np.float64),
+                    np.asarray(his, dtype=np.float64),
+                ).any(axis=1)
+                if len(unref)
+                else np.zeros(los.shape[0], dtype=bool)
+            )
+            out: list = [None] * los.shape[0]
+            hot = np.flatnonzero(~cold_q)
+            if hot.size:
+                for qi, ids in zip(hot, window_query_batch_sharded(
+                    self.sdev, los[hot], his[hot],
+                    use_kernel=self.use_kernel,
+                )):
+                    out[qi] = ids
+        else:
+            res, cold = window_query_batch_jax(
+                self.dev, los, his,
+                use_kernel=self.use_kernel, return_cold=True,
+            )
+            out = list(res)
+            cold_q = cold.any(axis=1)
+        if cold_q.any():
+            for i in np.flatnonzero(cold_q):
+                ids, _ = self.ambi.window(los[i], his[i])
+                out[i] = ids
+            self._after_refinement(unref)  # the pre-serving unrefined rows
+        self.stats.hot_queries += int((~cold_q).sum())
+        self.stats.cold_queries += int(cold_q.sum())
+        return out
+
+    def _knn_adaptive(self, qs, k: int) -> list[np.ndarray]:
+        from ..core.distributed_jax import knn_query_batch_sharded
+        from ..core.queries_jax import knn_query_batch_jax
+
+        t = self.ambi.table
+        if self.sdev is not None:
+            res = knn_query_batch_sharded(
+                self.sdev, qs, k, use_kernel=self.use_kernel
+            )
+        else:
+            res = knn_query_batch_jax(
+                self.dev, qs, k, use_kernel=self.use_kernel
+            )
+        out = list(res)
+        cold_q = self._knn_cold_mask(qs, res, k)
+        if cold_q.any():
+            before_unref = np.flatnonzero(t.unrefined)
+            for i in np.flatnonzero(cold_q):
+                ids, _ = self.ambi.knn(qs[i], k)
+                out[i] = ids
+            self._after_refinement(before_unref)
+        self.stats.hot_queries += int((~cold_q).sum())
+        self.stats.cold_queries += int(cold_q.sum())
+        return out
+
+    def _knn_cold_mask(self, qs, res, k: int) -> np.ndarray:
+        """Which queries the device answer cannot certify: a cold box
+        could hold a closer neighbor (mindist within the k-th distance,
+        both exact float64 over the host data — ``<=`` keeps boundary
+        ties host-side, matching what the host's own best-first refinement
+        would expand), or the refined subset is short of k."""
+        from ..core.geometry import boxes_mindist_sq
+
+        t = self.ambi.table
+        qs = np.asarray(qs, dtype=np.float64)
+        cold = np.zeros(qs.shape[0], dtype=bool)
+        unref = np.flatnonzero(t.unrefined)
+        want = min(k, len(self.points))
+        if not len(unref):
+            return cold
+        minds = boxes_mindist_sq(t.mbb_lo[unref], t.mbb_hi[unref], qs)
+        for i, ids in enumerate(res):
+            if len(ids) < want:
+                cold[i] = True
+                continue
+            kth = float(
+                np.max(np.sum((self.points[ids] - qs[i]) ** 2, axis=1))
+            )
+            cold[i] = bool(minds[i].min() <= kth)
+        return cold
+
+    def _after_refinement(self, before_unref: np.ndarray) -> None:
+        """Push the microbatch's grafts to the device: incremental delta
+        (single table) or per-changed-shard re-export (sharded), then
+        vacuum the host table if grafting bloated it."""
+        t = self.ambi.table
+        grafted = before_unref[~t.unrefined[before_unref]]
+        if len(grafted) == 0:
+            return
+        self.stats.grafts += len(grafted)
+        if self.sdev is not None:
+            if self.sdev.m < self.requested_shards:
+                # a boot from a barely refined table (ultimately the
+                # single-unrefined-root state, where the plan is [[0]])
+                # cannot cut m subspaces yet; re-plan once the grafts grow
+                # the tree far enough instead of full-re-exporting the one
+                # degenerate whole-table "shard" on every graft
+                sizes = t.subtree_points()
+                if len(t.shard_plan(self.requested_shards, sizes)) > self.sdev.m:
+                    from ..core.distributed_jax import ShardedDeviceTable
+
+                    self.sdev = ShardedDeviceTable.from_table(
+                        t, self.points, self.requested_shards, partial=True
+                    )
+                    self.stats.shards = self.sdev.m
+                    self.stats.shard_refreshes += self.sdev.m
+                    self._maybe_compact()
+                    return
+            changed = self.sdev.shards_of_rows(grafted)
+            self.sdev.refresh(changed)
+            self.stats.shard_refreshes += len(changed)
+        else:
+            self.dev = self.dev.apply_delta(t, self.points)  # buffer swap
+            self.stats.delta_refreshes += 1
+        self._maybe_compact()
+
+    def _maybe_compact(self) -> None:
+        """Vacuum the host table once grafting bloated it, rebasing the
+        device/shard scaffolding through the returned row remap."""
+        t = self.ambi.table
+        if t.n_perm > (1.0 + self.compact_slack) * len(self.points):
+            remap = t.compact()
+            if self.sdev is not None:
+                self.sdev.remap_source_rows(remap)
+            else:
+                self.dev.remap_rows(remap)
+            self.stats.compactions += 1

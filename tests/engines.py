@@ -115,11 +115,35 @@ class ShardedEngine:
         return knn_query_batch_sharded(self.sdev, qs, k)
 
 
-def engine_suite(index, ms=(1, 2, 4)):
+class AdaptiveServeEngine:
+    """``DeviceQueryServer(adaptive=True)`` booted from the
+    single-unrefined-root AMBI state over the same dataset: queries reach
+    cold space, get answered host-side with on-demand refinement, and the
+    grafts stream to the device as incremental deltas — results must still
+    be id-identical to the fully built NumPy engine."""
+
+    name = "adaptive-serve"
+
+    def __init__(self, index, M=250):
+        from repro.serve.engine import DeviceQueryServer
+
+        self.ambi = AMBI(np.asarray(index.points, dtype=np.float64), M)
+        self.srv = DeviceQueryServer.from_ambi(self.ambi, microbatch=32)
+
+    def window(self, los, his):
+        return self.srv.window(los, his)
+
+    def knn(self, qs, k):
+        return self.srv.knn(qs, k)
+
+
+def engine_suite(index, ms=(1, 2, 4), adaptive=True):
     """Every engine over one built index; first entry is the NumPy oracle."""
-    return [NumpyEngine(index), DeviceEngine(index)] + [
-        ShardedEngine(index, m) for m in ms
-    ]
+    return (
+        [NumpyEngine(index), DeviceEngine(index)]
+        + [ShardedEngine(index, m) for m in ms]
+        + ([AdaptiveServeEngine(index)] if adaptive else [])
+    )
 
 
 # --------------------------------------------------------------------------

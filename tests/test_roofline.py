@@ -10,6 +10,7 @@ import pytest
 from repro import roofline
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.models import model as M
+from repro.launch.mesh import make_mesh, use_mesh
 from repro.models.sharding import MeshAxes
 
 
@@ -32,7 +33,8 @@ import sys; sys.path.insert(0, "src")
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P, NamedSharding
 from repro import roofline
-mesh = jax.make_mesh((4,), ("m",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh, use_mesh
+mesh = make_mesh((4,), ("m",))
 L, D = 7, 64
 def f(ws, x):
     def body(c, w):
@@ -44,7 +46,7 @@ ws = jax.ShapeDtypeStruct((L, D, D), jnp.float32,
                           sharding=NamedSharding(mesh, P(None, "m", None)))
 x = jax.ShapeDtypeStruct((8, D), jnp.float32,
                          sharding=NamedSharding(mesh, P(None, "m")))
-with jax.set_mesh(mesh):
+with use_mesh(mesh):
     c = jax.jit(f).lower(ws, x).compile()
 res = roofline.parse_collectives(c.as_text())
 counts = sum(res["counts"].values())
@@ -77,25 +79,24 @@ def test_analytic_flops_close_to_xla_forward():
     single q-chunk, single loss chunk)."""
     cfg = _tiny_cfg()
     shape = ShapeConfig("t", seq_len=32, global_batch=4, kind="prefill")
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     axes = MeshAxes()
     params = M.abstract_params(cfg, mesh, jnp.float32)
     inputs = M.input_specs(cfg, shape, mesh)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         c = jax.jit(lambda p, b: M.prefill(p, cfg, b, axes)).lower(
             params, inputs
         ).compile()
-    xla = c.cost_analysis()["flops"]
+    xla = roofline.cost_analysis_dict(c)["flops"]
     # scan over 2 layers counted once by XLA -> add one body back
     body = xla  # lower 1-layer variant for the body estimate
     cfg1 = dataclasses.replace(cfg, n_layers=1)
     params1 = M.abstract_params(cfg1, mesh, jnp.float32)
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         c1 = jax.jit(lambda p, b: M.prefill(p, cfg1, b, axes)).lower(
             params1, inputs
         ).compile()
-    xla1 = c1.cost_analysis()["flops"]
+    xla1 = roofline.cost_analysis_dict(c1)["flops"]
     per_layer = xla - xla1 if xla > xla1 else 0.0
     xla_full = xla1 + per_layer * cfg.n_layers  # body-once corrected
     ana = roofline.analytic_flops(cfg, shape)["fwd_flops"]

@@ -6,18 +6,18 @@ import pytest
 from repro.configs.base import ModelConfig
 from repro.core.datasets import osm_like
 from repro.launch.train import reduced_config
+from repro.launch.mesh import make_mesh, use_mesh
 from repro.models import model as M
 from repro.serve.engine import LMServer, RetrievalServer
 
 
 def test_lm_server_greedy_generation():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_mesh((1, 1), ("data", "model"))
     cfg = ModelConfig(
         name="t", family="dense", n_layers=2, d_model=64, n_heads=4,
         n_kv_heads=2, d_ff=128, vocab=100, dtype="float32", chunk_q=16,
     )
-    with jax.set_mesh(mesh):
+    with use_mesh(mesh):
         params = M.init_params(cfg, jax.random.key(0))
         server = LMServer(cfg, params)
         prompts = np.random.default_rng(0).integers(0, 100, (2, 12))
