@@ -75,6 +75,7 @@ SMOKE_CEILINGS_S = {
     "knn_batch_sharded": 2.0,
     "adaptive_serve_first": 8.0,
     "adaptive_serve_steady": 1.5,
+    "adaptive_recovery": 8.0,
 }
 
 # hot paths gated against the committed smoke-scale baselines: >30%
@@ -87,12 +88,16 @@ SMOKE_GATED = {
     "knn_batch_sharded": "knn_batch_sharded_64_k16_s",
     "adaptive_serve_first": "adaptive_serve_first_result_s",
     "adaptive_serve_steady": "adaptive_serve_steady_batch_64_s",
+    "adaptive_recovery": "adaptive_recovery_s",
 }
 SMOKE_REGRESSION_FRAC = 0.30
 SMOKE_NOISE_FLOOR_S = 0.05
 # one-shot cold-start paths carry jit-compile variance well above the
 # default floor; a regression that matters there costs seconds, not 100ms
-SMOKE_NOISE_FLOOR_OVERRIDES_S = {"adaptive_serve_first": 0.5}
+SMOKE_NOISE_FLOOR_OVERRIDES_S = {
+    "adaptive_serve_first": 0.5,
+    "adaptive_recovery": 0.5,
+}
 SMOKE_N = 120_000
 
 
@@ -258,6 +263,44 @@ def run(n: int = 600_000, seed: int = 0, repeats: int = 3) -> dict:
         results["adaptive_serve_first_result_s"] = -1.0
         results["adaptive_serve_steady_batch_64_s"] = -1.0
         results["adaptive_serve_error"] = str(e)
+
+    # ---- adaptive crash recovery (snapshot + journal replay reboot) ------
+    # a durable adaptive server journals the hotspot batch's cold ops;
+    # `recover` then reboots it — snapshot load, journal replay against
+    # the restored rng/page-store state, and the device re-export — and
+    # must land on the bit-identical table (asserted, not just timed)
+    try:
+        import shutil
+        import tempfile
+
+        from repro.core import AMBI
+        from repro.serve.engine import DeviceQueryServer
+
+        tmp = pathlib.Path(tempfile.mkdtemp(prefix="bench_recovery_"))
+        try:
+            srv = DeviceQueryServer.from_ambi(
+                AMBI(pts, M), microbatch=64,
+                journal_path=tmp / "ops.journal",
+                snapshot_path=tmp / "snap.npz",
+            )
+            srv.window(hot_lo, hot_hi)
+            results["adaptive_recovery_journal_records"] = (
+                srv.stats.journal_records
+            )
+            t0 = time.perf_counter()
+            recovered = DeviceQueryServer.recover(
+                tmp / "snap.npz", tmp / "ops.journal", microbatch=64
+            )
+            results["adaptive_recovery_s"] = time.perf_counter() - t0
+            if not recovered.ambi.table.equals(srv.ambi.table):
+                raise RuntimeError(
+                    "recovered table diverged from the live server"
+                )
+        finally:
+            shutil.rmtree(tmp, ignore_errors=True)
+    except Exception as e:  # pragma: no cover - accelerator-env dependent
+        results["adaptive_recovery_s"] = -1.0
+        results["adaptive_recovery_error"] = str(e)
 
     # ---- JAX candidate-leaf window_count --------------------------------
     try:

@@ -78,6 +78,50 @@ class AMBI:
     def root(self) -> NodeView:
         return self.index.root
 
+    # -- durable adaptive state --------------------------------------------
+    # Grafting is deterministic given (points, M, rng state, store state):
+    # ``_adaptive_build`` draws only from ``self.rng`` and page ids only
+    # from ``self.store``.  Capturing both alongside the table snapshot is
+    # what lets crash recovery *replay* the journaled cold queries and land
+    # on the bit-identical table.
+    def state_meta(self) -> str:
+        """JSON blob of everything beyond the table that refinement
+        consumes: the buffer size, the rng bit-generator state, and the
+        page store (allocator + IOStats + LRU residency)."""
+        import json
+
+        return json.dumps(
+            {
+                "M": int(self.M),
+                "rng": self.rng.bit_generator.state,
+                "store": self.store.state_dict(),
+            }
+        )
+
+    @classmethod
+    def from_table_state(
+        cls, points: np.ndarray, table: NodeTable, meta: str
+    ) -> "AMBI":
+        """Rebuild a live AMBI around an existing (snapshot-loaded) table
+        and a :meth:`state_meta` blob — the recovery boot path."""
+        import json
+
+        state = json.loads(meta)
+        self = cls.__new__(cls)
+        self.points = points
+        self.M = int(state["M"])
+        self.store = PageStore(self.M)
+        self.store.load_state(state["store"])
+        self.rng = np.random.default_rng(0)
+        self.rng.bit_generator.state = state["rng"]
+        n, d = points.shape
+        self.d = d
+        self.c_l = leaf_capacity(d)
+        self.c_b = branch_capacity(d)
+        self.table = table
+        self.index = Index(table, d, self.c_l, self.c_b, self.store, points)
+        return self
+
     # -- public query API --------------------------------------------------
     def window(self, lo, hi):
         lo = np.asarray(lo, dtype=np.float64)

@@ -71,6 +71,73 @@ except AttributeError:  # older jax: experimental namespace
 
 
 # --------------------------------------------------------------------------
+# degraded-mode protocol: shard outages + completeness certificates
+# --------------------------------------------------------------------------
+class ShardUnavailable(RuntimeError):
+    """A shard cannot serve (dispatch failed past retry / breaker open).
+
+    Raised *into* the sharded query protocols by the injected ``runner``;
+    with ``return_certs=True`` the protocol degrades (answers from the
+    remaining shards + a per-query certificate), without it the outage
+    propagates to the caller unchanged.
+    """
+
+    def __init__(self, shard: int, reason: str = ""):
+        self.shard = int(shard)
+        super().__init__(
+            f"shard {shard} unavailable" + (f": {reason}" if reason else "")
+        )
+
+
+@dataclasses.dataclass
+class CompletenessCertificate:
+    """Per-query provenance of a (possibly degraded) sharded answer.
+
+    ``complete`` — every shard relevant to this query answered; the result
+    is exactly the healthy protocol's.  ``certified_exact`` — the returned
+    ids are provably the exact answer even if shards were down: trivially
+    true when complete, and true for k-NN when every down shard's router
+    mindist strictly exceeds the k-th returned f32 distance (the same
+    exclusion certificate round 2 escalates on — the dead shard provably
+    holds no closer point).  ``missing_shards`` / ``missing_lo`` /
+    ``missing_hi`` are the unanswered subspaces that *could* affect the
+    answer (empty iff ``certified_exact``): the repair queue, and for a
+    window query the region the caller must treat as unknown.
+    """
+
+    complete: bool
+    certified_exact: bool
+    missing_shards: tuple = ()
+    missing_lo: np.ndarray = None  # (u, d) f32 router MBBs, row per shard
+    missing_hi: np.ndarray = None
+
+    @classmethod
+    def intact(cls) -> "CompletenessCertificate":
+        return cls(complete=True, certified_exact=True)
+
+    @classmethod
+    def degraded(
+        cls, sdev: "ShardedDeviceTable", missing, *, exact: bool = False
+    ) -> "CompletenessCertificate":
+        missing = tuple(int(s) for s in missing)
+        return cls(
+            complete=False,
+            certified_exact=exact and not missing,
+            missing_shards=missing,
+            missing_lo=sdev.shard_lo[list(missing)].copy(),
+            missing_hi=sdev.shard_hi[list(missing)].copy(),
+        )
+
+
+def _run_shard(runner, s: int, thunk):
+    """One shard dispatch through the injected resilience runner (or
+    directly when serving without one)."""
+    if runner is None:
+        return thunk()
+    return runner(int(s), thunk)
+
+
+# --------------------------------------------------------------------------
 # sharded table: m DeviceTables + the subspace-MBB router
 # --------------------------------------------------------------------------
 @dataclasses.dataclass
@@ -91,6 +158,7 @@ class ShardedDeviceTable:
     source_points: np.ndarray = None
     shard_roots: list = None         # per shard: source-table root rows
     partial: bool = False
+    upload_stats: object = None      # UploadStats sink for (re)exports
 
     @property
     def m(self) -> int:
@@ -108,6 +176,7 @@ class ShardedDeviceTable:
         dtype=np.float32,
         *,
         partial: bool = False,
+        stats=None,
     ) -> "ShardedDeviceTable":
         """From per-shard tables whose ``perm`` entries are global row ids
         (``NodeTable.shard`` output, or ``shard_build_tables``)."""
@@ -115,7 +184,8 @@ class ShardedDeviceTable:
             raise ValueError("need at least one shard table")
         points = np.asarray(points)
         shards = [
-            DeviceTable.from_table(t, points, dtype=dtype, partial=partial)
+            DeviceTable.from_table(t, points, dtype=dtype, partial=partial,
+                                   stats=stats)
             for t in tables
         ]
         return cls(
@@ -124,6 +194,7 @@ class ShardedDeviceTable:
             shard_hi=np.stack([t.mbb_hi[0].astype(dtype) for t in tables]),
             n_points=int(sum(s.n_points for s in shards)),
             partial=partial,
+            upload_stats=stats,
         )
 
     @classmethod
@@ -135,11 +206,13 @@ class ShardedDeviceTable:
         dtype=np.float32,
         *,
         partial: bool = False,
+        stats=None,
     ) -> "ShardedDeviceTable":
         sizes = table.subtree_points()
         plan = table.shard_plan(m, sizes)
         tables = [cls._extract(table, roots, sizes) for roots in plan]
-        self = cls.from_tables(tables, points, dtype=dtype, partial=partial)
+        self = cls.from_tables(tables, points, dtype=dtype, partial=partial,
+                               stats=stats)
         self.source_table = table
         self.source_points = np.asarray(points)
         self.shard_roots = plan
@@ -181,7 +254,8 @@ class ShardedDeviceTable:
         for s in sorted(set(int(s) for s in shard_ids)):
             t = self._extract(self.source_table, self.shard_roots[s], sizes)
             self.shards[s] = DeviceTable.from_table(
-                t, self.source_points, dtype=dtype, partial=self.partial
+                t, self.source_points, dtype=dtype, partial=self.partial,
+                stats=self.upload_stats,
             )
             self.shard_lo[s] = t.mbb_lo[0].astype(dtype)
             self.shard_hi[s] = t.mbb_hi[0].astype(dtype)
@@ -254,6 +328,8 @@ def window_query_batch_sharded(
     his: np.ndarray,
     *,
     use_kernel: bool | None = None,
+    runner=None,
+    return_certs: bool = False,
 ) -> list[np.ndarray]:
     """Distributed batched window query: per-query global row-id arrays.
 
@@ -261,6 +337,15 @@ def window_query_batch_sharded(
     query, each shard serves its sub-batch through the compiled engine,
     and per-query results concatenate — the shards partition the dataset,
     so the union is id-identical (as a set) to the single-table engine.
+
+    ``runner(shard_id, thunk)`` is the serving layer's resilience hook
+    (retry + breaker around each shard dispatch); a runner that raises
+    :class:`ShardUnavailable` marks the shard down.  With
+    ``return_certs=True`` an outage *degrades* the batch — the return is
+    ``(results, certs)`` where each :class:`CompletenessCertificate`
+    names the unanswered subspace MBBs (a window over a dead shard can
+    never be certified exact: any point of its subspace may qualify).
+    Without it the outage propagates.
     """
     los = np.atleast_2d(np.asarray(los, dtype=np.float64))
     his = np.atleast_2d(np.asarray(his, dtype=np.float64))
@@ -270,19 +355,40 @@ def window_query_batch_sharded(
         los.astype(np.float32), his.astype(np.float32),
     )  # (Q, m) — f32, the dtype the per-shard engine tests boxes in
     parts: list[list[np.ndarray]] = [[] for _ in range(q0)]
+    down: list[int] = []
     for s, dev in enumerate(sdev.shards):
         qsel = np.flatnonzero(hit[:, s])
         if qsel.size == 0:
             continue
-        res = window_query_batch_jax(
-            dev, los[qsel], his[qsel], use_kernel=use_kernel
-        )
+        try:
+            res = _run_shard(
+                runner, s,
+                lambda dev=dev, qsel=qsel: window_query_batch_jax(
+                    dev, los[qsel], his[qsel], use_kernel=use_kernel
+                ),
+            )
+        except ShardUnavailable:
+            if not return_certs:
+                raise
+            down.append(s)
+            continue
         for qi, ids in zip(qsel, res):
             if len(ids):
                 parts[qi].append(ids)
-    return [
+    results = [
         np.concatenate(p) if p else np.zeros(0, dtype=np.int64) for p in parts
     ]
+    if not return_certs:
+        return results
+    certs = []
+    for qi in range(q0):
+        miss = [s for s in down if hit[qi, s]]
+        certs.append(
+            CompletenessCertificate.intact()
+            if not miss
+            else CompletenessCertificate.degraded(sdev, miss)
+        )
+    return results, certs
 
 
 # --------------------------------------------------------------------------
@@ -294,6 +400,8 @@ def knn_query_batch_sharded(
     k: int,
     *,
     use_kernel: bool | None = None,
+    runner=None,
+    return_certs: bool = False,
 ) -> list[np.ndarray]:
     """Distributed batched k-NN: per-query ascending-distance global ids.
 
@@ -309,6 +417,15 @@ def knn_query_batch_sharded(
     single-table engine computes, so ids match it exactly whenever
     distances are unique (ties at the k-th boundary are unspecified in
     both engines).
+
+    Degraded mode (``runner`` + ``return_certs=True``, as for the window
+    protocol): a query whose home shard is down re-routes round 1 to the
+    next-closest *available* shard, round 2 skips down shards, and the
+    per-query certificate applies the same f32 exclusion test to the dead
+    shards — when every down shard's router mindist strictly exceeds the
+    k-th returned distance the partial answer is ``certified_exact``
+    (the shard provably holds no closer point); otherwise its subspace
+    MBB is reported missing.
     """
     qs = np.atleast_2d(np.asarray(qs, dtype=np.float64))
     q0 = qs.shape[0]
@@ -318,52 +435,99 @@ def knn_query_batch_sharded(
     minds = boxes_mindist_sq(
         sdev.shard_lo, sdev.shard_hi, qs.astype(np.float32)
     )
-    home = np.argmin(minds, axis=1)
     cand_ids: list[list[np.ndarray]] = [[] for _ in range(q0)]
     cand_d2: list[list[np.ndarray]] = [[] for _ in range(q0)]
     probed = np.zeros((q0, m), dtype=bool)
+    avail = np.ones(m, dtype=bool)
 
-    def probe(s: int, qidx: np.ndarray) -> None:
-        ids, d2 = knn_query_batch_jax(
-            sdev.shards[s], qs[qidx], k,
-            use_kernel=use_kernel, return_dists=True,
-        )
+    def probe(s: int, qidx: np.ndarray) -> bool:
+        def thunk():
+            return knn_query_batch_jax(
+                sdev.shards[s], qs[qidx], k,
+                use_kernel=use_kernel, return_dists=True,
+            )
+
+        try:
+            ids, d2 = _run_shard(runner, s, thunk)
+        except ShardUnavailable:
+            if not return_certs:
+                raise
+            avail[s] = False
+            return False
         for qi, i_s, d_s in zip(qidx, ids, d2):
             cand_ids[qi].append(i_s)
             cand_d2[qi].append(d_s)
         probed[qidx, s] = True
+        return True
 
-    for s in np.unique(home):
-        probe(int(s), np.flatnonzero(home == s))
+    # round 1: home = closest *available* shard; a query whose home dies
+    # mid-round re-routes to the next closest until one answers (or every
+    # shard is down, in which case it has no round-1 radius)
+    unhomed = np.arange(q0)
+    while unhomed.size and avail.any():
+        mm = np.where(avail[None, :], minds[unhomed], np.inf)
+        homes = np.argmin(mm, axis=1)
+        rerouted: list[np.ndarray] = []
+        for s in np.unique(homes):
+            qidx = unhomed[homes == s]
+            if not probe(int(s), qidx):
+                rerouted.append(qidx)
+        unhomed = (
+            np.concatenate(rerouted) if rerouted
+            else np.zeros(0, dtype=np.int64)
+        )
 
     # certified pruning radius: the k-th home-shard distance (ascending),
     # +inf when the home shard cannot fill k results on its own
     radius = np.full(q0, np.inf, dtype=np.float64)
     for qi in range(q0):
-        d = cand_d2[qi][0]
-        if len(d) >= k:
-            radius[qi] = float(d[k - 1])
+        if cand_d2[qi] and len(cand_d2[qi][0]) >= k:
+            radius[qi] = float(cand_d2[qi][0][k - 1])
 
     # round 2: escalate exactly the (query, shard) pairs whose exclusion
     # certificate fails (router mindist within the radius; <= keeps ties)
     for s in range(m):
+        if not avail[s]:
+            continue
         need = np.flatnonzero(~probed[:, s] & (minds[:, s] <= radius))
         if need.size:
             probe(s, need)
 
     out: list[np.ndarray] = []
+    out_d2: list[np.ndarray] = []
     keep = min(k, sdev.n_points)
     for qi in range(q0):
+        if len(cand_ids[qi]) == 0:
+            out.append(np.zeros(0, dtype=np.int64))
+            out_d2.append(np.zeros(0, dtype=np.float32))
+            continue
         if len(cand_ids[qi]) == 1:
             # single probed shard: its local top-k IS the global answer,
             # already in engine order (m=1, or a certified-complete home)
             out.append(cand_ids[qi][0][:keep].astype(np.int64))
+            out_d2.append(cand_d2[qi][0][:keep])
             continue
         ids = np.concatenate(cand_ids[qi])
         d2 = np.concatenate(cand_d2[qi])
         order = np.argsort(d2, kind="stable")[:keep]
         out.append(ids[order].astype(np.int64))
-    return out
+        out_d2.append(d2[order])
+    if not return_certs:
+        return out
+    down = np.flatnonzero(~avail)
+    certs = []
+    for qi in range(q0):
+        if down.size == 0:
+            certs.append(CompletenessCertificate.intact())
+            continue
+        # the same exclusion test round 2 uses, against the *final* k-th
+        # distance: a down shard with mindist strictly beyond it provably
+        # holds no point of the true top-k (a short result leaves the
+        # k-th distance +inf, so nothing clears)
+        kth = float(out_d2[qi][k - 1]) if len(out_d2[qi]) >= k else np.inf
+        miss = [int(s) for s in down if not (minds[qi, s] > kth)]
+        certs.append(CompletenessCertificate.degraded(sdev, miss, exact=True))
+    return out, certs
 
 
 # --------------------------------------------------------------------------

@@ -34,6 +34,7 @@ serving path can boot from a snapshot without rebuilding.
 """
 from __future__ import annotations
 
+import os
 from typing import Optional
 
 import numpy as np
@@ -444,7 +445,33 @@ class NodeTable:
             payload["points"] = points
         for k, v in (extra or {}).items():
             payload[f"meta_{k}"] = np.asarray(v)
-        np.savez(path, **payload)
+        # Crash-safe write: a kill mid-save must never leave a torn .npz at
+        # ``path`` — the snapshot is often the only durable copy.  Write the
+        # archive into a temp file in the same directory (np.savez appends
+        # ".npz" to bare string paths, so hand it an open handle), fsync,
+        # then atomically swap it in.
+        path = os.fspath(path)
+        if not path.endswith(".npz"):
+            path = path + ".npz"
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            np.savez(f, **payload)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+
+    def equals(self, other: "NodeTable") -> bool:
+        """Bit-identical structural equality (the crash-recovery invariant:
+        snapshot + journal replay must land exactly here)."""
+        if self.dim != other.dim or self._n != other._n or self._np != other._np:
+            return False
+        return all(
+            np.array_equal(getattr(self, name), getattr(other, name))
+            for name in (
+                "mbb_lo", "mbb_hi", "page_id", "first_child", "child_count",
+                "leaf_start", "leaf_count", "raw_pages", "unrefined", "perm",
+            )
+        )
 
     @classmethod
     def load(cls, path) -> tuple["NodeTable", dict, Optional[np.ndarray]]:

@@ -110,6 +110,36 @@ class PageStore:
         self.stats = IOStats()
         self.buffer = LRUBuffer(buffer_pages)
         self._next_id = 0
+        # Optional fault-injection hook, called as ``hook(op, n_pages)`` at
+        # the *entry* of each accounted I/O op — before any counter or
+        # buffer mutation, so an injected failure leaves the store's state
+        # untouched and the op is safely retryable.
+        self.fault_hook = None
+
+    def _fault(self, op: str, n: int) -> None:
+        if self.fault_hook is not None:
+            self.fault_hook(op, n)
+
+    # -- snapshot state ----------------------------------------------------
+    def state_dict(self) -> dict:
+        """JSON-serializable state for snapshot barriers: the allocator,
+        the I/O counters, and the exact LRU residency/order (recovery must
+        reproduce buffered-vs-charged reads bit for bit)."""
+        return {
+            "page_size": self.page_size,
+            "next_id": self._next_id,
+            "reads": self.stats.reads,
+            "writes": self.stats.writes,
+            "buffer_capacity": self.buffer.capacity,
+            "buffer_pages": [int(p) for p in self.buffer._pages],
+        }
+
+    def load_state(self, state: dict) -> None:
+        self.page_size = int(state["page_size"])
+        self._next_id = int(state["next_id"])
+        self.stats = IOStats(int(state["reads"]), int(state["writes"]))
+        self.buffer = LRUBuffer(int(state["buffer_capacity"]))
+        self.buffer.load_run(state["buffer_pages"])
 
     # -- allocation -------------------------------------------------------
     def alloc(self, n: int = 1) -> int:
@@ -130,6 +160,10 @@ class PageStore:
 
     # -- accounted I/O ----------------------------------------------------
     def read(self, page_id: int, *, bypass_buffer: bool = False) -> None:
+        self._fault("read", 1)
+        self._read_accounted(page_id, bypass_buffer)
+
+    def _read_accounted(self, page_id: int, bypass_buffer: bool = False) -> None:
         if bypass_buffer or not self.buffer.touch(page_id):
             self.stats.reads += 1
 
@@ -145,6 +179,7 @@ class PageStore:
         per-page loop — without the O(run) interpreter iteration.
         """
         ids = np.asarray(list(page_ids), dtype=np.int64)
+        self._fault("read_many", len(ids))
         if bypass_buffer:
             self.stats.reads += len(ids)
             return
@@ -152,15 +187,16 @@ class PageStore:
         n = len(ids)
         if n > cap and len(np.unique(ids)) == n:
             for pid in ids[:cap]:
-                self.read(int(pid))
+                self._read_accounted(int(pid))
             self.stats.reads += n - cap
             self.buffer.load_run(ids[-cap:])
             return
         for pid in ids:
-            self.read(int(pid))
+            self._read_accounted(int(pid))
 
     def read_run(self, n_pages: int) -> None:
         """A bulk sequential read of ``n_pages`` fresh (unbuffered) pages."""
+        self._fault("read_run", int(n_pages))
         self.stats.reads += int(n_pages)
 
     def write(self, page_id: int) -> None:

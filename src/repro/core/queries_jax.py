@@ -81,20 +81,55 @@ TRACE_COUNTS = {"frontier": 0, "window_collect": 0, "knn_core": 0}
 # host -> device upload accounting: the adaptive-serving tests prove a graft
 # refreshes the device table by uploading only its delta (full_exports stays
 # at the boot count; each refresh uploads exactly the new leaf blocks)
-UPLOAD_STATS = {
-    "full_exports": 0,       # DeviceTable.from_table calls
-    "delta_refreshes": 0,    # DeviceTable.apply_delta calls
-    "uploaded_leaf_blocks": 0,  # leaf blocks shipped host -> device
-    "uploaded_points": 0,       # live points inside those blocks
-}
+@dataclasses.dataclass
+class UploadStats:
+    """Host -> device upload counters.
+
+    Instance-scoped: each ``DeviceQueryServer`` (and each explicitly
+    threaded export) owns its own sink, so two servers in one process
+    keep independent delta-only-upload proofs.  ``UPLOAD_STATS`` below is
+    the module-level default sink for code that exports tables without a
+    server (and for the upload totals of otherwise-unowned exports).
+    Supports dict-style reads for the counter names.
+    """
+
+    full_exports: int = 0        # DeviceTable.from_table calls
+    delta_refreshes: int = 0     # DeviceTable.apply_delta calls
+    uploaded_leaf_blocks: int = 0  # leaf blocks shipped host -> device
+    uploaded_points: int = 0       # live points inside those blocks
+
+    def __getitem__(self, key: str) -> int:
+        if key not in self.__dataclass_fields__:
+            raise KeyError(key)
+        return getattr(self, key)
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    def reset(self) -> dict:
+        """Zero the counters; returns the pre-reset values."""
+        old = self.as_dict()
+        for k in self.__dataclass_fields__:
+            setattr(self, k, 0)
+        return old
+
+    def record_export(self, n_blocks: int, n_points: int) -> None:
+        self.full_exports += 1
+        self.uploaded_leaf_blocks += int(n_blocks)
+        self.uploaded_points += int(n_points)
+
+    def record_delta(self, n_blocks: int, n_points: int) -> None:
+        self.delta_refreshes += 1
+        self.uploaded_leaf_blocks += int(n_blocks)
+        self.uploaded_points += int(n_points)
+
+
+UPLOAD_STATS = UploadStats()
 
 
 def reset_upload_stats() -> dict:
-    """Zero the upload counters; returns the pre-reset values."""
-    old = dict(UPLOAD_STATS)
-    for k in UPLOAD_STATS:
-        UPLOAD_STATS[k] = 0
-    return old
+    """Zero the module-default upload counters; returns pre-reset values."""
+    return UPLOAD_STATS.reset()
 
 
 def _use_kernel_default() -> bool:
@@ -149,6 +184,7 @@ class DeviceTable:
     leaf_ids_host: np.ndarray = None
     leaf_rows: np.ndarray = None  # (L,) table row behind each leaf slot
     cold_rows: np.ndarray = None  # (U,) table row behind each cold slot
+    upload_stats: "UploadStats" = None  # sink for this table's uploads
 
     def tree_flatten(self):
         # n_points and the host maps are host-only scaffolding: excluded
@@ -205,6 +241,7 @@ class DeviceTable:
         dtype=np.float32,
         *,
         partial: bool = False,
+        stats: "UploadStats" = None,
     ) -> "DeviceTable":
         """Export ``table`` over ``points`` (a full upload).
 
@@ -219,9 +256,10 @@ class DeviceTable:
             np.asarray(points), dtype=dtype, partial=partial
         )
         levels = _levels_to_jax(lay["levels"])
-        UPLOAD_STATS["full_exports"] += 1
-        UPLOAD_STATS["uploaded_leaf_blocks"] += lay["leaf_pts"].shape[0]
-        UPLOAD_STATS["uploaded_points"] += int(lay["leaf_counts"].sum())
+        sink = stats if stats is not None else UPLOAD_STATS
+        sink.record_export(
+            lay["leaf_pts"].shape[0], int(lay["leaf_counts"].sum())
+        )
         return cls(
             leaf_pts=jnp.asarray(lay["leaf_pts"]),
             leaf_ids=jnp.asarray(lay["leaf_ids"]),
@@ -235,12 +273,15 @@ class DeviceTable:
             leaf_ids_host=lay["leaf_ids"],
             leaf_rows=lay["leaf_rows"],
             cold_rows=lay["cold_rows"],
+            upload_stats=sink,
         )
 
     @classmethod
-    def from_index(cls, index, dtype=np.float32) -> "DeviceTable":
+    def from_index(cls, index, dtype=np.float32, *,
+                   stats: "UploadStats" = None) -> "DeviceTable":
         """From a built ``core.fmbi.Index`` (table + dataset)."""
-        return cls.from_table(index.table, index.points, dtype=dtype)
+        return cls.from_table(index.table, index.points, dtype=dtype,
+                              stats=stats)
 
     def apply_delta(self, table: NodeTable, points: np.ndarray) -> "DeviceTable":
         """Incremental refresh after host-side grafts: returns a *new*
@@ -309,9 +350,8 @@ class DeviceTable:
                 if S > s_old
                 else [ids_host, nb_ids]
             )
-        UPLOAD_STATS["delta_refreshes"] += 1
-        UPLOAD_STATS["uploaded_leaf_blocks"] += len(new_rows)
-        UPLOAD_STATS["uploaded_points"] += int(counts_new.sum())
+        sink = self.upload_stats if self.upload_stats is not None else UPLOAD_STATS
+        sink.record_delta(len(new_rows), int(counts_new.sum()))
         return DeviceTable(
             leaf_pts=lp,
             leaf_ids=li,
@@ -325,6 +365,7 @@ class DeviceTable:
             leaf_ids_host=ids_host,
             leaf_rows=leaf_rows,
             cold_rows=cold,
+            upload_stats=sink,
         )
 
     def remap_rows(self, remap: np.ndarray) -> None:

@@ -174,6 +174,12 @@ class DeviceQueryStats:
     delta_refreshes: int = 0   # DeviceTable.apply_delta swaps
     shard_refreshes: int = 0   # shards re-exported by ShardedDeviceTable
     compactions: int = 0       # NodeTable.compact vacuums
+    retries: int = 0           # dispatch/refine attempts beyond the first
+    host_fallbacks: int = 0    # device outage answered by the host engine
+    degraded_queries: int = 0  # answers returned with an incomplete cert
+    journal_records: int = 0   # ops durably journaled before execution
+    checkpoints: int = 0       # snapshot barriers written
+    replayed_records: int = 0  # journal records replayed at recovery
 
 
 class DeviceQueryServer:
@@ -221,9 +227,17 @@ class DeviceQueryServer:
     def __init__(self, table, points: np.ndarray, *,
                  microbatch: int = 64, use_kernel: bool | None = None,
                  shards: int | None = None, adaptive: bool = False,
-                 ambi=None, compact_slack: float = 0.5):
+                 ambi=None, compact_slack: float = 0.5,
+                 fault_plan=None, retry=None, deadline_s: float | None = None,
+                 breaker_threshold: int = 3, breaker_cooldown_s: float = 30.0,
+                 clock=None,
+                 journal_path=None, snapshot_path=None):
+        import os
+
         from ..core.distributed_jax import ShardedDeviceTable
-        from ..core.queries_jax import DeviceTable
+        from ..core.queries_jax import DeviceTable, UploadStats
+        from .journal import GraftJournal
+        from .resilience import RetryPolicy
 
         if adaptive:
             if ambi is None:
@@ -233,24 +247,64 @@ class DeviceQueryServer:
                 )
             table, points = ambi.table, ambi.points
         points = np.asarray(points)
+        # resilience plane: per-server policies, injectable for tests
+        self.fault_plan = fault_plan
+        self.retry = retry if retry is not None else RetryPolicy()
+        self.deadline_s = deadline_s
+        self.breaker_threshold = int(breaker_threshold)
+        self.breaker_cooldown_s = float(breaker_cooldown_s)
+        self.clock = clock  # None -> time.monotonic inside the primitives
+        self.breakers: dict = {}
+        # per-server upload accounting (satellite: no cross-server leakage)
+        self.upload_stats = UploadStats()
+        if adaptive and fault_plan is not None and ambi is not None:
+            ambi.store.fault_hook = fault_plan.pagestore_hook()
         if shards is not None and shards > 1:
             self.sdev = ShardedDeviceTable.from_table(
-                table, points, shards, partial=adaptive
+                table, points, shards, partial=adaptive,
+                stats=self.upload_stats,
             )
             self.dev = None
             n_shards = self.sdev.m
         else:
-            self.dev = DeviceTable.from_table(table, points, partial=adaptive)
+            self.dev = DeviceTable.from_table(
+                table, points, partial=adaptive, stats=self.upload_stats
+            )
             self.sdev = None
             n_shards = 1
+        self.table = table
         self.requested_shards = shards if shards is not None else 1
         self.adaptive = adaptive
         self.ambi = ambi
         self.points = points
+        self.dim = int(points.shape[1])
         self.compact_slack = float(compact_slack)
         self.microbatch = int(microbatch)
         self.use_kernel = use_kernel
         self.stats = DeviceQueryStats(shards=n_shards)
+        # durability plane (adaptive only): write-ahead graft journal +
+        # snapshot barriers; recovery = snapshot + replay (see recover())
+        self.journal = None
+        self.snapshot_path = None
+        if journal_path is not None or snapshot_path is not None:
+            if not adaptive:
+                raise ValueError(
+                    "journaling/snapshots apply to adaptive serving — a "
+                    "static table needs no recovery log"
+                )
+            if journal_path is None or snapshot_path is None:
+                raise ValueError(
+                    "durability needs BOTH journal_path and snapshot_path "
+                    "(recovery replays the journal against the snapshot)"
+                )
+            self.snapshot_path = os.fspath(snapshot_path)
+            if not self.snapshot_path.endswith(".npz"):
+                self.snapshot_path += ".npz"
+            self.journal = GraftJournal(journal_path, fault_plan=fault_plan)
+            if not os.path.exists(self.snapshot_path):
+                # boot barrier: capture the pre-serving adaptive state so a
+                # crash before the first compaction is still recoverable
+                self.checkpoint()
 
     @classmethod
     def from_index(cls, index, **kw) -> "DeviceQueryServer":
@@ -277,60 +331,317 @@ class DeviceQueryServer:
         for start in range(0, n, self.microbatch):
             yield start, min(start + self.microbatch, n)
 
-    def window(self, los: np.ndarray, his: np.ndarray) -> list[np.ndarray]:
-        """Per-query dataset row ids inside each [lo, hi] box."""
-        from ..core.distributed_jax import window_query_batch_sharded
+    # -- resilience plane ----------------------------------------------------
+    def _breaker(self, s: int):
+        from .resilience import CircuitBreaker
+
+        br = self.breakers.get(s)
+        if br is None:
+            kw = {} if self.clock is None else {"clock": self.clock}
+            br = self.breakers[s] = CircuitBreaker(
+                self.breaker_threshold, self.breaker_cooldown_s, **kw
+            )
+        return br
+
+    def _deadline(self):
+        from .resilience import Deadline
+
+        kw = {} if self.clock is None else {"clock": self.clock}
+        return Deadline(self.deadline_s, **kw)
+
+    def _count_retry(self, attempt, exc) -> None:
+        self.stats.retries += 1
+
+    def _shard_runner(self, deadline):
+        """The resilience hook the sharded protocols dispatch through:
+        breaker fail-fast, then bounded retries (each attempt passing the
+        shard's fault point), then breaker accounting.  A shard that
+        exhausts its retries surfaces as :class:`ShardUnavailable` — the
+        protocol's degraded-mode signal."""
+        from ..core.distributed_jax import ShardUnavailable
+        from .resilience import DeadlineExceeded, RetryExhausted
+
+        def run(s: int, thunk):
+            br = self._breaker(s)
+            if not br.allow():
+                raise ShardUnavailable(s, "circuit open")
+
+            def attempt():
+                if self.fault_plan is not None:
+                    self.fault_plan.fire("shard_dispatch", shard=int(s))
+                return thunk()
+
+            try:
+                res = self.retry.call(
+                    attempt, deadline=deadline,
+                    no_retry=(DeadlineExceeded, ShardUnavailable),
+                    on_retry=self._count_retry,
+                )
+            except (DeadlineExceeded, ShardUnavailable):
+                raise
+            except RetryExhausted as e:
+                br.record_failure()
+                raise ShardUnavailable(s, str(e)) from e
+            br.record_success()
+            return res
+
+        return run
+
+    def repair(self, shard_ids=None) -> list[int]:
+        """Rebuild failed shards from the host ``NodeTable`` and close
+        their breakers; with no argument, repairs every shard whose
+        breaker is not closed.  Returns the repaired shard ids."""
+        if shard_ids is None:
+            shard_ids = [
+                s for s, br in self.breakers.items() if br.state != "closed"
+            ]
+        shard_ids = sorted(int(s) for s in shard_ids)
+        if not shard_ids:
+            return []
+        if self.sdev is not None:
+            self.sdev.refresh(shard_ids)
+            self.stats.shard_refreshes += len(shard_ids)
+        else:
+            from ..core.queries_jax import DeviceTable
+
+            t = self.ambi.table if self.adaptive else self.table
+            self.dev = DeviceTable.from_table(
+                t, self.points, partial=self.adaptive,
+                stats=self.upload_stats,
+            )
+        for s in shard_ids:
+            self._breaker(s).reset()
+        return shard_ids
+
+    def _root_cert(self):
+        """Degraded certificate for a whole-table outage (single-device
+        serving): the entire root MBB is unanswered."""
+        from ..core.distributed_jax import CompletenessCertificate
+
+        t = self.ambi.table if self.adaptive else self.table
+        return CompletenessCertificate(
+            complete=False, certified_exact=False, missing_shards=(0,),
+            missing_lo=np.asarray(t.mbb_lo[0], dtype=np.float32)[None],
+            missing_hi=np.asarray(t.mbb_hi[0], dtype=np.float32)[None],
+        )
+
+    # -- input validation ----------------------------------------------------
+    def _validate_batch(self, arr, name: str) -> np.ndarray:
+        """API-boundary validation: precise errors here instead of cryptic
+        jit/traversal failures deep in the engine."""
+        a = np.asarray(arr)
+        if a.dtype == object or not np.issubdtype(a.dtype, np.number):
+            raise ValueError(
+                f"{name}: expected a numeric array, got dtype {a.dtype}"
+            )
+        if np.issubdtype(a.dtype, np.complexfloating):
+            raise ValueError(f"{name}: complex coordinates are not supported")
+        a = np.atleast_2d(a.astype(np.float64, copy=False))
+        if a.ndim != 2 or a.shape[1] != self.dim:
+            raise ValueError(
+                f"{name}: expected shape (Q, {self.dim}) to match the "
+                f"{self.dim}-dimensional dataset, got {np.asarray(arr).shape}"
+            )
+        if np.isnan(a).any():
+            bad = int(np.flatnonzero(np.isnan(a).any(axis=1))[0])
+            raise ValueError(f"{name}: query {bad} contains NaN coordinates")
+        return a
+
+    def window(self, los: np.ndarray, his: np.ndarray, *,
+               return_certs: bool = False) -> list[np.ndarray]:
+        """Per-query dataset row ids inside each [lo, hi] box.
+
+        ``return_certs=True`` opts into degraded serving: the return is
+        ``(results, certs)`` and a shard outage (breaker open / retries
+        exhausted) yields partial results whose
+        ``CompletenessCertificate`` names the unanswered subspaces
+        instead of raising.  Adaptive serving answers outages host-side,
+        so its certificates are always intact.
+        """
+        from ..core.distributed_jax import (
+            CompletenessCertificate,
+            ShardUnavailable,
+            window_query_batch_sharded,
+        )
         from ..core.queries_jax import window_query_batch_jax
 
-        los = np.atleast_2d(np.asarray(los))
-        his = np.atleast_2d(np.asarray(his))
+        los = self._validate_batch(los, "los")
+        his = self._validate_batch(his, "his")
+        if los.shape != his.shape:
+            raise ValueError(
+                f"los/his shape mismatch: {los.shape} vs {his.shape}"
+            )
+        deadline = self._deadline()
         out: list[np.ndarray] = []
+        certs: list = []
         for a, b in self._chunks(los.shape[0]):
+            runner = self._shard_runner(deadline)
             if self.adaptive:
-                out.extend(self._window_adaptive(los[a:b], his[a:b]))
+                out.extend(
+                    self._window_adaptive(los[a:b], his[a:b], deadline)
+                )
+                certs.extend(
+                    CompletenessCertificate.intact() for _ in range(b - a)
+                )
             elif self.sdev is not None:
-                out.extend(window_query_batch_sharded(
+                res = window_query_batch_sharded(
                     self.sdev, los[a:b], his[a:b],
-                    use_kernel=self.use_kernel,
-                ))
+                    use_kernel=self.use_kernel, runner=runner,
+                    return_certs=return_certs,
+                )
+                if return_certs:
+                    res, cs = res
+                    certs.extend(cs)
+                out.extend(res)
             else:
-                out.extend(window_query_batch_jax(
-                    self.dev, los[a:b], his[a:b], use_kernel=self.use_kernel
-                ))
+                try:
+                    out.extend(runner(0, lambda a=a, b=b: (
+                        window_query_batch_jax(
+                            self.dev, los[a:b], his[a:b],
+                            use_kernel=self.use_kernel,
+                        )
+                    )))
+                    certs.extend(
+                        CompletenessCertificate.intact()
+                        for _ in range(b - a)
+                    )
+                except ShardUnavailable:
+                    if not return_certs:
+                        raise
+                    out.extend(
+                        np.zeros(0, dtype=np.int64) for _ in range(b - a)
+                    )
+                    certs.extend(self._root_cert() for _ in range(b - a))
             self.stats.microbatches += 1
         self.stats.queries += los.shape[0]
+        if return_certs:
+            self.stats.degraded_queries += sum(
+                1 for c in certs if not c.complete
+            )
+            return out, certs
         return out
 
-    def knn(self, qs: np.ndarray, k: int) -> list[np.ndarray]:
-        """Per-query ascending-distance row ids (length min(k, n))."""
-        from ..core.distributed_jax import knn_query_batch_sharded
+    def knn(self, qs: np.ndarray, k: int, *,
+            return_certs: bool = False) -> list[np.ndarray]:
+        """Per-query ascending-distance row ids (length min(k, n)).
+
+        Degraded mode mirrors :meth:`window`; a k-NN certificate can be
+        ``certified_exact`` even when shards were down (the pruning
+        radius clears their subspaces — see the distributed protocol).
+        """
+        from ..core.distributed_jax import (
+            CompletenessCertificate,
+            ShardUnavailable,
+            knn_query_batch_sharded,
+        )
         from ..core.queries_jax import knn_query_batch_jax
 
-        qs = np.atleast_2d(np.asarray(qs))
+        qs = self._validate_batch(qs, "qs")
+        if not isinstance(k, (int, np.integer)) or int(k) < 1:
+            raise ValueError(f"k must be a positive integer, got {k!r}")
+        k = int(k)
+        deadline = self._deadline()
         out: list[np.ndarray] = []
+        certs: list = []
         for a, b in self._chunks(qs.shape[0]):
+            runner = self._shard_runner(deadline)
             if self.adaptive:
-                out.extend(self._knn_adaptive(qs[a:b], k))
+                out.extend(self._knn_adaptive(qs[a:b], k, deadline))
+                certs.extend(
+                    CompletenessCertificate.intact() for _ in range(b - a)
+                )
             elif self.sdev is not None:
-                out.extend(knn_query_batch_sharded(
-                    self.sdev, qs[a:b], k, use_kernel=self.use_kernel
-                ))
+                res = knn_query_batch_sharded(
+                    self.sdev, qs[a:b], k, use_kernel=self.use_kernel,
+                    runner=runner, return_certs=return_certs,
+                )
+                if return_certs:
+                    res, cs = res
+                    certs.extend(cs)
+                out.extend(res)
             else:
-                out.extend(knn_query_batch_jax(
-                    self.dev, qs[a:b], k, use_kernel=self.use_kernel
-                ))
+                try:
+                    out.extend(runner(0, lambda a=a, b=b: (
+                        knn_query_batch_jax(
+                            self.dev, qs[a:b], k, use_kernel=self.use_kernel
+                        )
+                    )))
+                    certs.extend(
+                        CompletenessCertificate.intact()
+                        for _ in range(b - a)
+                    )
+                except ShardUnavailable:
+                    if not return_certs:
+                        raise
+                    out.extend(
+                        np.zeros(0, dtype=np.int64) for _ in range(b - a)
+                    )
+                    certs.extend(self._root_cert() for _ in range(b - a))
             self.stats.microbatches += 1
         self.stats.queries += qs.shape[0]
+        if return_certs:
+            self.stats.degraded_queries += sum(
+                1 for c in certs if not c.complete
+            )
+            return out, certs
         return out
 
     # -- adaptive serving loop ----------------------------------------------
-    def _window_adaptive(self, los, his) -> list[np.ndarray]:
+    # The host AMBI engine is authoritative over the full dataset, so the
+    # adaptive server degrades *gracefully* under device outages: a failed
+    # dispatch reroutes the affected queries down the (exact) host cold
+    # path instead of returning partial answers — certificates stay intact.
+    def _journal_op(self, op: str, **args) -> None:
+        """Write-ahead: durably journal a cold host op before executing it
+        (recovery replays exactly the journaled sequence).  An append that
+        cannot be made durable fails the op — never execute unlogged."""
+        if self.journal is None:
+            return
+
+        def attempt():
+            return self.journal.append(op, **args)
+
+        self.retry.call(attempt, on_retry=self._count_retry)
+        self.stats.journal_records += 1
+
+    def _host_window(self, lo, hi) -> np.ndarray:
+        """Cold-path window: journal, then host-answer (+ refine) under
+        retry.  Faults fire at entry, before any host mutation, so a
+        retried attempt re-runs the op from scratch."""
+        self._journal_op(
+            "window", lo=[float(v) for v in lo], hi=[float(v) for v in hi]
+        )
+
+        def attempt():
+            if self.fault_plan is not None:
+                self.fault_plan.fire("host_refine", op="window")
+            return self.ambi.window(lo, hi)
+
+        ids, _ = self.retry.call(attempt, on_retry=self._count_retry)
+        return ids
+
+    def _host_knn(self, q, k: int) -> np.ndarray:
+        self._journal_op("knn", q=[float(v) for v in q], k=int(k))
+
+        def attempt():
+            if self.fault_plan is not None:
+                self.fault_plan.fire("host_refine", op="knn")
+            return self.ambi.knn(q, k)
+
+        ids, _ = self.retry.call(attempt, on_retry=self._count_retry)
+        return ids
+
+    def _window_adaptive(self, los, his, deadline=None) -> list[np.ndarray]:
         """One microbatch: device answers for hot queries, host answers
         (+ refinement + device refresh) for queries reaching cold space."""
-        from ..core.distributed_jax import window_query_batch_sharded
+        from ..core.distributed_jax import (
+            ShardUnavailable,
+            window_query_batch_sharded,
+        )
         from ..core.geometry import boxes_intersect_windows
         from ..core.queries_jax import window_query_batch_jax
 
+        runner = self._shard_runner(deadline)
         t = self.ambi.table
         unref = np.flatnonzero(t.unrefined)
         if self.sdev is not None:
@@ -350,47 +661,73 @@ class DeviceQueryServer:
             out: list = [None] * los.shape[0]
             hot = np.flatnonzero(~cold_q)
             if hot.size:
-                for qi, ids in zip(hot, window_query_batch_sharded(
+                res, cs = window_query_batch_sharded(
                     self.sdev, los[hot], his[hot],
-                    use_kernel=self.use_kernel,
-                )):
-                    out[qi] = ids
+                    use_kernel=self.use_kernel, runner=runner,
+                    return_certs=True,
+                )
+                for qi, ids, cert in zip(hot, res, cs):
+                    if cert.complete:
+                        out[qi] = ids
+                    else:  # dead shard: exact host answer instead
+                        cold_q[qi] = True
+                        self.stats.host_fallbacks += 1
         else:
-            res, cold = window_query_batch_jax(
-                self.dev, los, his,
-                use_kernel=self.use_kernel, return_cold=True,
-            )
-            out = list(res)
-            cold_q = cold.any(axis=1)
+            try:
+                res, cold = runner(0, lambda: window_query_batch_jax(
+                    self.dev, los, his,
+                    use_kernel=self.use_kernel, return_cold=True,
+                ))
+                out = list(res)
+                cold_q = cold.any(axis=1)
+            except ShardUnavailable:
+                # whole-device outage: the host serves the full microbatch
+                out = [None] * los.shape[0]
+                cold_q = np.ones(los.shape[0], dtype=bool)
+                self.stats.host_fallbacks += los.shape[0]
         if cold_q.any():
             for i in np.flatnonzero(cold_q):
-                ids, _ = self.ambi.window(los[i], his[i])
-                out[i] = ids
+                out[i] = self._host_window(los[i], his[i])
             self._after_refinement(unref)  # the pre-serving unrefined rows
         self.stats.hot_queries += int((~cold_q).sum())
         self.stats.cold_queries += int(cold_q.sum())
         return out
 
-    def _knn_adaptive(self, qs, k: int) -> list[np.ndarray]:
-        from ..core.distributed_jax import knn_query_batch_sharded
+    def _knn_adaptive(self, qs, k: int, deadline=None) -> list[np.ndarray]:
+        from ..core.distributed_jax import (
+            ShardUnavailable,
+            knn_query_batch_sharded,
+        )
         from ..core.queries_jax import knn_query_batch_jax
 
+        runner = self._shard_runner(deadline)
         t = self.ambi.table
+        degraded = np.zeros(qs.shape[0], dtype=bool)
         if self.sdev is not None:
-            res = knn_query_batch_sharded(
-                self.sdev, qs, k, use_kernel=self.use_kernel
+            res, cs = knn_query_batch_sharded(
+                self.sdev, qs, k, use_kernel=self.use_kernel,
+                runner=runner, return_certs=True,
             )
+            res = list(res)
+            for i, cert in enumerate(cs):
+                if not cert.certified_exact:
+                    degraded[i] = True
+                    self.stats.host_fallbacks += 1
         else:
-            res = knn_query_batch_jax(
-                self.dev, qs, k, use_kernel=self.use_kernel
-            )
+            try:
+                res = list(runner(0, lambda: knn_query_batch_jax(
+                    self.dev, qs, k, use_kernel=self.use_kernel
+                )))
+            except ShardUnavailable:
+                res = [np.zeros(0, dtype=np.int64)] * qs.shape[0]
+                degraded[:] = True
+                self.stats.host_fallbacks += qs.shape[0]
         out = list(res)
-        cold_q = self._knn_cold_mask(qs, res, k)
+        cold_q = self._knn_cold_mask(qs, res, k) | degraded
         if cold_q.any():
             before_unref = np.flatnonzero(t.unrefined)
             for i in np.flatnonzero(cold_q):
-                ids, _ = self.ambi.knn(qs[i], k)
-                out[i] = ids
+                out[i] = self._host_knn(qs[i], k)
             self._after_refinement(before_unref)
         self.stats.hot_queries += int((~cold_q).sum())
         self.stats.cold_queries += int(cold_q.sum())
@@ -425,46 +762,181 @@ class DeviceQueryServer:
     def _after_refinement(self, before_unref: np.ndarray) -> None:
         """Push the microbatch's grafts to the device: incremental delta
         (single table) or per-changed-shard re-export (sharded), then
-        vacuum the host table if grafting bloated it."""
+        vacuum the host table if grafting bloated it.
+
+        The upload is retried under the ``apply_delta`` fault point (fired
+        at entry — an injected upload fault never half-applies: the swap
+        is double-buffered, the old export serves until the new one
+        lands).  An upload that exhausts its retries leaves the device
+        stale but the *host* current; the next cold answer/fallback is
+        still exact, and the refresh is re-attempted after the next graft.
+        """
+        from .resilience import RetryExhausted
+
         t = self.ambi.table
         grafted = before_unref[~t.unrefined[before_unref]]
         if len(grafted) == 0:
             return
         self.stats.grafts += len(grafted)
-        if self.sdev is not None:
-            if self.sdev.m < self.requested_shards:
-                # a boot from a barely refined table (ultimately the
-                # single-unrefined-root state, where the plan is [[0]])
-                # cannot cut m subspaces yet; re-plan once the grafts grow
-                # the tree far enough instead of full-re-exporting the one
-                # degenerate whole-table "shard" on every graft
-                sizes = t.subtree_points()
-                if len(t.shard_plan(self.requested_shards, sizes)) > self.sdev.m:
-                    from ..core.distributed_jax import ShardedDeviceTable
 
-                    self.sdev = ShardedDeviceTable.from_table(
-                        t, self.points, self.requested_shards, partial=True
-                    )
-                    self.stats.shards = self.sdev.m
-                    self.stats.shard_refreshes += self.sdev.m
-                    self._maybe_compact()
-                    return
-            changed = self.sdev.shards_of_rows(grafted)
-            self.sdev.refresh(changed)
-            self.stats.shard_refreshes += len(changed)
-        else:
-            self.dev = self.dev.apply_delta(t, self.points)  # buffer swap
-            self.stats.delta_refreshes += 1
+        def upload():
+            if self.fault_plan is not None:
+                self.fault_plan.fire("apply_delta")
+            if self.sdev is not None:
+                if self.sdev.m < self.requested_shards:
+                    # a boot from a barely refined table (ultimately the
+                    # single-unrefined-root state, where the plan is [[0]])
+                    # cannot cut m subspaces yet; re-plan once the grafts
+                    # grow the tree far enough instead of full-re-exporting
+                    # the one degenerate whole-table "shard" on every graft
+                    sizes = t.subtree_points()
+                    if len(t.shard_plan(
+                        self.requested_shards, sizes
+                    )) > self.sdev.m:
+                        from ..core.distributed_jax import ShardedDeviceTable
+
+                        self.sdev = ShardedDeviceTable.from_table(
+                            t, self.points, self.requested_shards,
+                            partial=True, stats=self.upload_stats,
+                        )
+                        self.stats.shards = self.sdev.m
+                        self.stats.shard_refreshes += self.sdev.m
+                        return
+                changed = self.sdev.shards_of_rows(grafted)
+                self.sdev.refresh(changed)
+                self.stats.shard_refreshes += len(changed)
+            else:
+                self.dev = self.dev.apply_delta(t, self.points)  # swap
+                self.stats.delta_refreshes += 1
+
+        try:
+            self.retry.call(upload, on_retry=self._count_retry)
+        except RetryExhausted:
+            pass  # device stale, host authoritative; retried next graft
         self._maybe_compact()
 
     def _maybe_compact(self) -> None:
         """Vacuum the host table once grafting bloated it, rebasing the
-        device/shard scaffolding through the returned row remap."""
+        device/shard scaffolding through the returned row remap.  With a
+        journal, the vacuum is itself a journaled op (replay must compact
+        at the same point to stay bit-identical) and doubles as the
+        snapshot barrier: checkpoint, then truncate the folded journal."""
+        from .resilience import RetryExhausted
+
         t = self.ambi.table
         if t.n_perm > (1.0 + self.compact_slack) * len(self.points):
+            if self.journal is not None:
+                try:
+                    self._journal_op("compact")
+                except RetryExhausted:
+                    return  # not durably logged -> defer the vacuum
             remap = t.compact()
             if self.sdev is not None:
                 self.sdev.remap_source_rows(remap)
-            else:
+            elif self.dev is not None:
                 self.dev.remap_rows(remap)
             self.stats.compactions += 1
+            if self.snapshot_path is not None:
+                try:
+                    self.checkpoint()
+                except RetryExhausted:
+                    pass  # barrier deferred; journal still holds the ops
+
+    # -- durability: snapshot barriers + crash recovery ----------------------
+    def checkpoint(self) -> None:
+        """Durable snapshot barrier: atomically persist the table, the
+        dataset, and the adaptive state (rng + page store), recording the
+        journal's high-water ``seq``; then truncate the journal (its
+        records are folded into the snapshot).  Crash-ordering: the
+        snapshot lands via atomic rename *before* the truncate, and
+        recovery skips records at or below the recorded seq — a kill
+        between the two replays nothing twice."""
+        if self.snapshot_path is None:
+            raise ValueError("no snapshot_path configured")
+
+        def attempt():
+            if self.fault_plan is not None:
+                self.fault_plan.fire("snapshot_save", path=self.snapshot_path)
+            self.ambi.table.save(
+                self.snapshot_path, points=self.points,
+                extra={
+                    "ambi_state": self.ambi.state_meta(),
+                    "journal_seq": self.journal.seq if self.journal else 0,
+                },
+            )
+
+        self.retry.call(attempt, on_retry=self._count_retry)
+        if self.journal is not None:
+            self.journal.truncate()
+        self.stats.checkpoints += 1
+
+    @staticmethod
+    def _replay_op(ambi, rec: dict) -> None:
+        from .journal import JournalError
+
+        op = rec.get("op")
+        if op == "window":
+            ambi.window(
+                np.asarray(rec["lo"], dtype=np.float64),
+                np.asarray(rec["hi"], dtype=np.float64),
+            )
+        elif op == "knn":
+            ambi.knn(np.asarray(rec["q"], dtype=np.float64), int(rec["k"]))
+        elif op == "compact":
+            ambi.table.compact()
+        else:
+            raise JournalError(f"unknown journal op {op!r} (seq {rec.get('seq')})")
+
+    @classmethod
+    def recover(cls, snapshot_path, journal_path, *,
+                fault_plan=None, **kw) -> "DeviceQueryServer":
+        """Reboot a killed adaptive server: load the snapshot, replay the
+        journal's post-barrier records against the restored AMBI state
+        (grafting is deterministic given the snapshot's rng + page-store
+        state, so the table lands bit-identical to the uninterrupted
+        server's), then resume serving with the same durability config.
+
+        The fault plane is disarmed for the replay — recovery re-executes
+        already-acknowledged ops and must not be re-faulted — and rearmed
+        before the recovered server takes traffic."""
+        import os
+
+        from ..core.ambi import AMBI
+        from ..core.nodetable import NodeTable
+        from .journal import GraftJournal
+
+        snapshot_path = os.fspath(snapshot_path)
+        if not snapshot_path.endswith(".npz"):
+            snapshot_path += ".npz"
+        if fault_plan is not None:
+            fault_plan.fire("snapshot_load", path=snapshot_path)
+        table, meta, points = NodeTable.load(snapshot_path)
+        if points is None or "ambi_state" not in meta:
+            raise ValueError(
+                "recovery snapshot must carry points and adaptive state "
+                "(written by DeviceQueryServer.checkpoint)"
+            )
+        ambi = AMBI.from_table_state(
+            np.asarray(points), table, str(meta["ambi_state"])
+        )
+        snap_seq = int(meta["journal_seq"])
+        was_armed = fault_plan is not None and fault_plan.armed
+        if was_armed:
+            fault_plan.disarm()
+        replayed = 0
+        try:
+            for rec in GraftJournal.read_records(
+                journal_path, after_seq=snap_seq
+            ):
+                cls._replay_op(ambi, rec)
+                replayed += 1
+        finally:
+            if was_armed:
+                fault_plan.rearm()
+        srv = cls.from_ambi(
+            ambi, snapshot_path=snapshot_path, journal_path=journal_path,
+            fault_plan=fault_plan, **kw,
+        )
+        srv.journal.seq = max(srv.journal.seq, snap_seq)
+        srv.stats.replayed_records = replayed
+        return srv

@@ -1,0 +1,186 @@
+"""Resilience primitives for the serving stack: retry, deadline, breaker.
+
+The policies are deliberately small and injectable — every source of
+nondeterminism (sleep, clock, jitter randomness) is a constructor
+argument, so tests drive them with virtual clocks and zero-length sleeps
+while production uses the real ones.
+
+  * :class:`RetryPolicy` — bounded attempts with exponential backoff and
+    seeded jitter.  Retries any exception in ``retry_on`` except the
+    explicit ``no_retry`` types (a :class:`DeadlineExceeded` or an
+    upstream ``ShardUnavailable`` must propagate, not burn attempts).
+  * :class:`Deadline` — a per-batch time budget.  Backoff sleeps never
+    overshoot it, and ``check()`` raises :class:`DeadlineExceeded` once
+    it is spent, turning a slow failing dependency into a prompt
+    degraded answer instead of an unbounded stall.
+  * :class:`CircuitBreaker` — per-shard closed/open/half-open state.
+    ``failure_threshold`` consecutive dispatch failures open the
+    breaker; while open, calls fail fast (no device dispatch, no retry
+    burn) until ``cooldown_s`` has elapsed, then a single half-open
+    trial either closes it or re-opens it.  The serving layer keeps one
+    breaker per shard so a dead shard degrades only its own subspace.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+
+class DeadlineExceeded(RuntimeError):
+    """The per-batch time budget is spent."""
+
+
+class RetryExhausted(RuntimeError):
+    """Every attempt failed; ``__cause__`` is the last failure."""
+
+    def __init__(self, attempts: int, last: BaseException):
+        self.attempts = attempts
+        super().__init__(
+            f"all {attempts} attempts failed "
+            f"(last: {type(last).__name__}: {last})"
+        )
+
+
+class Deadline:
+    """Monotonic time budget; ``Deadline(None)`` never expires."""
+
+    def __init__(self, seconds: Optional[float],
+                 clock: Callable[[], float] = time.monotonic):
+        self.clock = clock
+        self.seconds = seconds
+        self._t0 = clock()
+
+    def remaining(self) -> float:
+        if self.seconds is None:
+            return float("inf")
+        return self.seconds - (self.clock() - self._t0)
+
+    @property
+    def expired(self) -> bool:
+        return self.remaining() <= 0.0
+
+    def check(self) -> None:
+        if self.expired:
+            raise DeadlineExceeded(
+                f"batch deadline of {self.seconds}s exceeded"
+            )
+
+
+@dataclasses.dataclass
+class RetryPolicy:
+    """Bounded retries with exponential backoff + seeded jitter.
+
+    Attempt ``i`` (0-based) sleeps ``base_delay_s * backoff**i`` scaled
+    by a jitter factor drawn uniformly from ``[1 - jitter, 1 + jitter]``
+    out of a seeded stream, capped at ``max_delay_s`` and at the
+    deadline's remaining budget.  ``max_attempts=1`` means no retries.
+    """
+
+    max_attempts: int = 3
+    base_delay_s: float = 0.0      # serving tests want zero-cost retries
+    backoff: float = 2.0
+    max_delay_s: float = 1.0
+    jitter: float = 0.5
+    seed: int = 0
+    sleep: Callable[[float], None] = time.sleep
+
+    def __post_init__(self):
+        if self.max_attempts < 1:
+            raise ValueError("max_attempts must be >= 1")
+        self._rng = np.random.default_rng(self.seed)
+
+    def delay(self, attempt: int) -> float:
+        """Backoff before retry number ``attempt`` (1-based)."""
+        raw = self.base_delay_s * (self.backoff ** (attempt - 1))
+        if raw <= 0.0:
+            return 0.0
+        factor = 1.0 + self.jitter * (2.0 * self._rng.random() - 1.0)
+        return float(min(raw * max(factor, 0.0), self.max_delay_s))
+
+    def call(
+        self,
+        fn: Callable,
+        *,
+        retry_on: tuple = (Exception,),
+        no_retry: tuple = (DeadlineExceeded,),
+        deadline: Optional[Deadline] = None,
+        on_retry: Optional[Callable[[int, BaseException], None]] = None,
+    ):
+        """Run ``fn`` under the policy; raises :class:`RetryExhausted`
+        (with the last failure as ``__cause__``) when attempts run out,
+        or :class:`DeadlineExceeded` when the budget is spent first."""
+        last: Optional[BaseException] = None
+        for attempt in range(1, self.max_attempts + 1):
+            if deadline is not None:
+                deadline.check()
+            try:
+                return fn()
+            except no_retry:
+                raise
+            except retry_on as e:
+                last = e
+                if attempt == self.max_attempts:
+                    break
+                if on_retry is not None:
+                    on_retry(attempt, e)
+                pause = self.delay(attempt)
+                if deadline is not None:
+                    deadline.check()
+                    pause = min(pause, max(deadline.remaining(), 0.0))
+                if pause > 0.0:
+                    self.sleep(pause)
+        raise RetryExhausted(self.max_attempts, last) from last
+
+
+class CircuitBreaker:
+    """Per-dependency closed / open / half-open gate.
+
+    ``record_failure`` counts *consecutive* failures (each already
+    retry-exhausted by the caller); at ``failure_threshold`` the breaker
+    opens and :meth:`allow` fails fast until ``cooldown_s`` of the
+    injected clock has passed, after which exactly one half-open trial
+    is admitted — success closes the breaker, failure re-opens it for
+    another cooldown.
+    """
+
+    def __init__(self, failure_threshold: int = 3, cooldown_s: float = 30.0,
+                 clock: Callable[[], float] = time.monotonic):
+        if failure_threshold < 1:
+            raise ValueError("failure_threshold must be >= 1")
+        self.failure_threshold = failure_threshold
+        self.cooldown_s = cooldown_s
+        self.clock = clock
+        self.state = "closed"
+        self.failures = 0            # consecutive
+        self.opened_at: Optional[float] = None
+        self.open_count = 0          # times the breaker tripped open
+
+    def allow(self) -> bool:
+        if self.state == "closed":
+            return True
+        if self.state == "open":
+            if self.clock() - self.opened_at >= self.cooldown_s:
+                self.state = "half_open"
+                return True
+            return False
+        return False  # half_open: the single trial is already in flight
+
+    def record_success(self) -> None:
+        self.state = "closed"
+        self.failures = 0
+        self.opened_at = None
+
+    def record_failure(self) -> None:
+        self.failures += 1
+        if self.state == "half_open" or self.failures >= self.failure_threshold:
+            if self.state != "open":
+                self.open_count += 1
+            self.state = "open"
+            self.opened_at = self.clock()
+
+    def reset(self) -> None:
+        """Force-close (the repair path: the shard was just rebuilt)."""
+        self.record_success()

@@ -137,6 +137,25 @@ class AdaptiveServeEngine:
         return self.srv.knn(qs, k)
 
 
+class ServerEngine:
+    """``DeviceQueryServer`` over a built static index — the resilience
+    plane's front door.  The chaos harness points a seeded ``FaultPlan``
+    at it and still demands NumPy-engine parity: bounded faults must be
+    absorbed by retries, never surface in results."""
+
+    def __init__(self, index, shards=None, **kw):
+        from repro.serve.engine import DeviceQueryServer
+
+        self.srv = DeviceQueryServer.from_index(index, shards=shards, **kw)
+        self.name = f"server[m={shards or 1}]"
+
+    def window(self, los, his):
+        return self.srv.window(los, his)
+
+    def knn(self, qs, k):
+        return self.srv.knn(qs, k)
+
+
 def engine_suite(index, ms=(1, 2, 4), adaptive=True):
     """Every engine over one built index; first entry is the NumPy oracle."""
     return (
@@ -144,6 +163,49 @@ def engine_suite(index, ms=(1, 2, 4), adaptive=True):
         + [ShardedEngine(index, m) for m in ms]
         + ([AdaptiveServeEngine(index)] if adaptive else [])
     )
+
+
+# --------------------------------------------------------------------------
+# degraded-mode oracles (completeness-certificate verification)
+# --------------------------------------------------------------------------
+def shard_owned_ids(sdev, s):
+    """Dataset ids owned by shard ``s`` (from its device leaf blocks)."""
+    ids = np.asarray(sdev.shards[s].host_ids)
+    return set(int(i) for i in ids[ids >= 0])
+
+
+def assert_degraded_window(pts, lo, hi, got, cert, oracle_ids, dead_owned):
+    """A degraded window answer must be exactly the alive-shard subset of
+    the oracle answer, and every dropped id must fall inside one of the
+    certificate's unanswered-subspace boxes."""
+    oracle = set(int(i) for i in oracle_ids)
+    got = set(int(i) for i in got)
+    if cert.complete:
+        assert got == oracle
+        return
+    assert got == oracle - dead_owned
+    dropped = oracle & dead_owned
+    p32 = pts.astype(np.float32)
+    for i in dropped:
+        inside = (
+            (cert.missing_lo <= p32[i]) & (p32[i] <= cert.missing_hi)
+        ).all(axis=1)
+        assert inside.any(), f"dropped id {i} outside every missing box"
+
+
+def assert_degraded_knn(pts, q, k, got, cert, oracle_ids, dead_owned):
+    """A degraded k-NN answer must be the exact k-NN over the alive
+    points; ``certified_exact`` additionally means it IS the full oracle
+    answer (the dead subspaces were provably excluded)."""
+    alive = np.array(
+        [i for i in range(len(pts)) if i not in dead_owned], dtype=np.int64
+    )
+    d2 = np.sum((pts[alive] - q) ** 2, axis=1)
+    want = min(k, len(alive))
+    expect = alive[np.argsort(d2, kind="stable")[:want]]
+    assert np.array_equal(np.asarray(got), expect), "not exact over alive"
+    if cert.certified_exact:
+        assert np.array_equal(np.asarray(got), np.asarray(oracle_ids))
 
 
 # --------------------------------------------------------------------------

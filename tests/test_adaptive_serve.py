@@ -62,9 +62,10 @@ def test_adaptive_server_hotspot_stream_parity_and_delta_uploads():
     M = 120  # 294 data pages >> M: the root is dense, refinement is real
     host = AMBI(pts, M)           # the reference engine, driven identically
     ambi = AMBI(pts, M)
-    QJ.reset_upload_stats()
+    QJ.reset_upload_stats()  # the module-level default sink, for the
+    # no-leak assertion at the end — the server's own counters are fresh
     srv = DeviceQueryServer.from_ambi(ambi, microbatch=8)
-    assert QJ.UPLOAD_STATS["full_exports"] == 1  # the boot
+    assert srv.upload_stats["full_exports"] == 1  # the boot
     assert srv.dev.n_leaves == 0 and srv.dev.n_cold == 1
 
     for step, batch in enumerate(_hotspot_stream(2, 10, 8, 1)):
@@ -84,10 +85,13 @@ def test_adaptive_server_hotspot_stream_parity_and_delta_uploads():
     assert srv.stats.grafts > 0 and srv.stats.delta_refreshes > 0
     # upload accounting: one boot export, every graft shipped only its
     # delta — each leaf block crossed the host/device boundary exactly once
-    assert QJ.UPLOAD_STATS["full_exports"] == 1
-    assert QJ.UPLOAD_STATS["delta_refreshes"] == srv.stats.delta_refreshes
-    assert QJ.UPLOAD_STATS["uploaded_leaf_blocks"] == srv.dev.n_leaves
-    assert QJ.UPLOAD_STATS["uploaded_points"] == srv.dev.n_points
+    assert srv.upload_stats["full_exports"] == 1
+    assert srv.upload_stats["delta_refreshes"] == srv.stats.delta_refreshes
+    assert srv.upload_stats["uploaded_leaf_blocks"] == srv.dev.n_leaves
+    assert srv.upload_stats["uploaded_points"] == srv.dev.n_points
+    # instance-scoped counters: this server's uploads never leaked into
+    # the module-level default sink
+    assert QJ.UPLOAD_STATS["full_exports"] == 0
     ambi.table.check_invariants(len(pts))
 
     # steady state: replaying the pinned hotspots is all-device, no I/O
@@ -234,10 +238,9 @@ def test_sharded_adaptive_refreshes_only_changed_shards():
     ambi = AMBI(pts, 120)
     for a in (host, ambi):  # give the root children so the plan can split
         a.window(np.full(2, 0.4), np.full(2, 0.45))
-    QJ.reset_upload_stats()
     srv = DeviceQueryServer.from_ambi(ambi, microbatch=8, shards=4)
     m = srv.sdev.m
-    boot = QJ.UPLOAD_STATS["full_exports"]
+    boot = srv.upload_stats["full_exports"]
     assert boot == m
     rng = np.random.default_rng(11)
     for step in range(4):
@@ -253,7 +256,7 @@ def test_sharded_adaptive_refreshes_only_changed_shards():
             assert np.array_equal(gk[i], wk), (step, i)
     # every post-boot export was a targeted shard refresh, and the focused
     # stream touched a strict subset of the shards per refresh round
-    extra = QJ.UPLOAD_STATS["full_exports"] - boot
+    extra = srv.upload_stats["full_exports"] - boot
     assert extra == srv.stats.shard_refreshes > 0
     assert extra < m * srv.stats.microbatches
     ambi.table.check_invariants(len(pts))
@@ -267,7 +270,6 @@ def test_sharded_adaptive_unrefined_root_boot_replans_to_m_shards():
     pts = _f32_points(80_000, 2, 20)
     host = AMBI(pts, 120)
     ambi = AMBI(pts, 120)
-    QJ.reset_upload_stats()
     srv = DeviceQueryServer.from_ambi(ambi, microbatch=8, shards=3)
     assert srv.sdev.m == 1  # nothing to cut yet
     rng = np.random.default_rng(21)
@@ -281,7 +283,7 @@ def test_sharded_adaptive_unrefined_root_boot_replans_to_m_shards():
     assert srv.sdev.m == 3 and srv.stats.shards == 3
     # post-re-plan refreshes are targeted: total exports = degenerate boot
     # + one m-shard re-plan + the per-changed-shard refreshes after it
-    assert QJ.UPLOAD_STATS["full_exports"] == (
+    assert srv.upload_stats["full_exports"] == (
         1 + srv.sdev.m + (srv.stats.shard_refreshes - srv.sdev.m)
     )
 

@@ -1,0 +1,241 @@
+"""Chaos parity (PR-6): the engine harness under a seeded FaultPlan.
+
+Every run is replayable (the plan schedule is a pure function of its
+seed), and the contract is two-sided:
+
+  * **bounded** faults — capped so the retry policy provably outlasts
+    them — must be invisible: results stay id-identical to the NumPy
+    oracle (``engines.py`` parity);
+  * **unbounded** faults (a dead shard) must surface as *honest*
+    degradation: partial results carrying a completeness certificate
+    that verifies against the oracle restricted to the alive shards,
+    with ``certified_exact`` k-NN answers exactly matching the full
+    oracle.  Repair then restores full parity.
+"""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.distributed_jax import (
+    ShardedDeviceTable,
+    knn_query_batch_sharded,
+    window_query_batch_sharded,
+)
+from repro.serve.engine import DeviceQueryServer
+from repro.serve.faults import FaultPlan, FaultRule
+from repro.serve.resilience import RetryPolicy
+
+from engines import (
+    AdaptiveServeEngine,
+    NumpyEngine,
+    ServerEngine,
+    assert_degraded_knn,
+    assert_degraded_window,
+    assert_knn_parity,
+    assert_window_parity,
+    build_fmbi,
+    f32_points,
+    shard_owned_ids,
+)
+
+# pinned in CI (REPRO_FAULT_SEED): the whole chaos run replays the exact
+# same fault schedule; override locally to explore other schedules
+CHAOS_SEED = int(os.environ.get("REPRO_FAULT_SEED", "1337"))
+
+
+@pytest.fixture(scope="module")
+def setup():
+    pts = f32_points(900, 2, seed=21)
+    index = build_fmbi(pts, M=64)
+    rng = np.random.default_rng(4)
+    c = rng.random((16, 2))
+    los = np.clip(c - 0.15, 0, 1)
+    his = np.clip(c + 0.15, 0, 1)
+    qs = rng.random((16, 2))
+    return pts, index, los, his, qs
+
+
+def _no_sleep_retry(attempts):
+    return RetryPolicy(max_attempts=attempts, sleep=lambda s: None)
+
+
+def test_chaos_parity_under_bounded_storm(setup):
+    """tests/engines.py parity with a seeded storm across the serving
+    fault points.  max_fires(3) < max_attempts(5) guarantees retries
+    outlast the storm even if every fire lands in one op's attempts."""
+    pts, index, los, his, qs = setup
+    storms = []
+
+    def server(shards):
+        plan = FaultPlan.storm(
+            ("shard_dispatch",), 0.4, seed=CHAOS_SEED,
+            max_fires_per_point=3,
+        )
+        storms.append(plan)
+        return ServerEngine(
+            index, shards=shards, microbatch=8, fault_plan=plan,
+            retry=_no_sleep_retry(5),
+        )
+
+    engines = [NumpyEngine(index), server(None), server(2), server(4)]
+    assert_window_parity(engines, los, his)
+    assert_knn_parity(engines, pts, qs, 5)
+    assert sum(p.total_fires for p in storms) > 0  # chaos actually hit
+    assert sum(e.srv.stats.retries for e in engines[1:]) > 0
+    assert all(e.srv.stats.degraded_queries == 0 for e in engines[1:])
+
+
+def test_chaos_parity_adaptive_under_storm(setup):
+    """The adaptive serving loop under a storm spanning device dispatch,
+    the host cold path, its page store, and the delta upload.  host_refine
+    and pagestore_read burn the same retry loop, so the attempt budget
+    covers their combined cap; apply_delta exhaustion is absorbed by
+    design (device stale, host authoritative)."""
+    pts, index, los, his, qs = setup
+    oracle = NumpyEngine(index)
+    plan = FaultPlan.storm(
+        ("shard_dispatch", "host_refine", "pagestore_read", "apply_delta"),
+        0.3, seed=CHAOS_SEED, max_fires_per_point=2,
+    )
+    eng = AdaptiveServeEngine(index)
+    eng.srv.fault_plan = plan
+    eng.srv.retry = _no_sleep_retry(6)
+    eng.srv.ambi.store.fault_hook = plan.pagestore_hook()
+    assert_window_parity([oracle, eng], los, his)
+    assert_knn_parity([oracle, eng], pts, qs, 5)
+    assert plan.total_fires > 0
+    assert eng.srv.stats.retries > 0
+
+
+def test_chaos_adaptive_serves_through_device_outage(setup):
+    """Graceful degradation: with the device permanently dead, the
+    adaptive server reroutes every query down the exact host path —
+    full parity, no degraded certificates, fallbacks accounted."""
+    pts, index, los, his, qs = setup
+    oracle = NumpyEngine(index)
+    plan = FaultPlan([FaultRule("shard_dispatch", rate=1.0)],
+                     seed=CHAOS_SEED)
+    eng = AdaptiveServeEngine(index)
+    eng.srv.fault_plan = plan
+    eng.srv.retry = _no_sleep_retry(2)
+    eng.srv.breaker_threshold = 1
+    assert_window_parity([oracle, eng], los, his)
+    assert_knn_parity([oracle, eng], pts, qs, 5)
+    assert eng.srv.stats.host_fallbacks > 0
+    assert eng.srv.stats.degraded_queries == 0  # host answers are exact
+    res, certs = eng.srv.window(los, his, return_certs=True)
+    assert all(c.complete for c in certs)
+
+
+@pytest.fixture(scope="module")
+def dead_shard_setup(setup):
+    pts, index, los, his, qs = setup
+    dead = 2
+    plan = FaultPlan(
+        [FaultRule("shard_dispatch", rate=1.0, match={"shard": dead})],
+        seed=CHAOS_SEED,
+    )
+    srv = DeviceQueryServer.from_index(
+        index, shards=4, microbatch=8, fault_plan=plan,
+        retry=_no_sleep_retry(2), breaker_threshold=1,
+        breaker_cooldown_s=1e9,
+    )
+    owned = shard_owned_ids(srv.sdev, dead)
+    assert owned  # the dead shard really owns part of the dataset
+    return pts, index, srv, plan, dead, owned
+
+
+def test_chaos_dead_shard_window_certificates(setup, dead_shard_setup):
+    pts, index, srv, plan, dead, owned = dead_shard_setup
+    _, _, los, his, qs = setup
+    oracle = NumpyEngine(index)
+    ref = oracle.window(los, his)
+    got, certs = srv.window(los, his, return_certs=True)
+    n_degraded = 0
+    for i in range(len(los)):
+        cert = certs[i]
+        if not cert.complete:
+            n_degraded += 1
+            assert cert.missing_shards == (dead,)
+            assert not cert.certified_exact  # windows never certify holes
+        assert_degraded_window(
+            pts, los[i], his[i], got[i], cert, ref[i], owned
+        )
+    # the workload must actually exercise both modes
+    assert 0 < n_degraded < len(los)
+    assert srv.stats.degraded_queries == n_degraded
+
+
+def test_chaos_dead_shard_knn_certificates(setup, dead_shard_setup):
+    pts, index, srv, plan, dead, owned = dead_shard_setup
+    _, _, los, his, qs = setup
+    k = 5
+    oracle = NumpyEngine(index)
+    ref = oracle.knn(qs, k)
+    got, certs = srv.knn(qs, k, return_certs=True)
+    n_exact = n_partial = 0
+    for i in range(len(qs)):
+        cert = certs[i]
+        if cert.certified_exact:
+            n_exact += 1
+        elif not cert.complete:
+            n_partial += 1
+            assert cert.missing_shards == (dead,)
+        assert_degraded_knn(pts, qs[i], k, got[i], cert, ref[i], owned)
+    # far queries certify exact (pruning radius clears the dead shard),
+    # near ones honestly report the unanswerable subspace
+    assert n_exact > 0 and n_partial > 0
+
+
+def test_chaos_repair_restores_full_parity(setup, dead_shard_setup):
+    pts, index, srv, plan, dead, owned = dead_shard_setup
+    _, _, los, his, qs = setup
+    oracle = NumpyEngine(index)
+    assert srv.breakers[dead].state == "open"
+    refreshes_before = srv.stats.shard_refreshes
+    plan.disarm()  # the operator fixed the fault; now repair the shard
+    assert srv.repair() == [dead]
+    assert srv.stats.shard_refreshes == refreshes_before + 1
+    assert srv.breakers[dead].state == "closed"
+    got, certs = srv.window(los, his, return_certs=True)
+    assert all(c.complete for c in certs)
+    ref = oracle.window(los, his)
+    for a, b in zip(got, ref):
+        assert np.array_equal(np.sort(a), np.sort(b))
+    for a, b in zip(srv.knn(qs, 5), oracle.knn(qs, 5)):
+        assert np.array_equal(a, b)
+
+
+def test_chaos_protocol_level_degraded_queries(setup):
+    """The sharded protocols themselves (no server) honour the runner /
+    return_certs contract — the unit under the integration above."""
+    from repro.core.distributed_jax import ShardUnavailable
+
+    pts, index, los, his, qs = setup
+    sdev = ShardedDeviceTable.from_index(index, 4)
+    dead = 1
+    owned = shard_owned_ids(sdev, dead)
+
+    def runner(s, thunk):
+        if s == dead:
+            raise ShardUnavailable(s, "injected")
+        return thunk()
+
+    # without certs, the outage must raise — silent partials are a bug
+    with pytest.raises(ShardUnavailable):
+        window_query_batch_sharded(sdev, los, his, runner=runner)
+    ref_w = window_query_batch_sharded(sdev, los, his)  # healthy oracle
+    got, certs = window_query_batch_sharded(
+        sdev, los, his, runner=runner, return_certs=True
+    )
+    for i in range(len(los)):
+        assert_degraded_window(
+            pts, los[i], his[i], got[i], certs[i], ref_w[i], owned
+        )
+    ref_k = knn_query_batch_sharded(sdev, qs, 5)
+    got, certs = knn_query_batch_sharded(
+        sdev, qs, 5, runner=runner, return_certs=True
+    )
+    for i in range(len(qs)):
+        assert_degraded_knn(pts, qs[i], 5, got[i], certs[i], ref_k[i], owned)

@@ -1,0 +1,362 @@
+"""Fault-injection plane + resilience primitives (PR-6).
+
+Unit-level: the seeded :class:`FaultPlan` schedule is a pure function of
+``(seed, rule, matching-call index)`` — replayable, filterable, boundable
+— and the retry/deadline/breaker primitives behave per spec under
+virtual clocks.  Integration-level: ``DeviceQueryServer`` absorbs
+bounded faults transparently (NumPy-engine parity), fails fast through
+open breakers, degrades with honest certificates, and repairs.
+"""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import PageStore
+from repro.core.distributed_jax import ShardUnavailable
+from repro.serve.faults import (
+    FAILURE_POINTS,
+    FaultError,
+    FaultPlan,
+    FaultRule,
+)
+from repro.serve.resilience import (
+    CircuitBreaker,
+    Deadline,
+    DeadlineExceeded,
+    RetryExhausted,
+    RetryPolicy,
+)
+
+from engines import NumpyEngine, ServerEngine, build_fmbi, f32_points
+
+
+# --------------------------------------------------------------------------
+# FaultPlan schedules
+# --------------------------------------------------------------------------
+def _fire_seq(plan, point, n, **ctx):
+    """Call ``plan.fire`` n times; return the 1-based indices that raised."""
+    fired = []
+    for i in range(1, n + 1):
+        try:
+            plan.fire(point, **ctx)
+        except FaultError:
+            fired.append(i)
+    return fired
+
+
+def test_rule_rejects_unknown_point():
+    with pytest.raises(ValueError, match="unknown failure point"):
+        FaultRule("not_a_point")
+    assert "shard_dispatch" in FAILURE_POINTS
+
+
+def test_at_calls_schedule_is_exact():
+    plan = FaultPlan([FaultRule("host_refine", at_calls={2, 4})])
+    assert _fire_seq(plan, "host_refine", 6) == [2, 4]
+    assert plan.total_fires == 2
+    assert plan.fires_at("host_refine") == 2
+    assert [c for _, c, _ in plan.log] == [2, 4]
+
+
+def test_rate_schedule_is_seed_deterministic():
+    mk = lambda seed: FaultPlan(
+        [FaultRule("shard_dispatch", rate=0.5)], seed=seed
+    )
+    a, b = mk(7), mk(7)
+    sa = _fire_seq(a, "shard_dispatch", 40)
+    sb = _fire_seq(b, "shard_dispatch", 40)
+    assert sa == sb and 0 < len(sa) < 40  # same seed -> bit-identical plan
+    assert _fire_seq(mk(8), "shard_dispatch", 40) != sa
+
+
+def test_rules_draw_independent_streams():
+    # two identical-rate rules at different points must not mirror each
+    # other: each draws from default_rng([seed, rule_index])
+    plan = FaultPlan(
+        [
+            FaultRule("shard_dispatch", rate=0.5),
+            FaultRule("apply_delta", rate=0.5),
+        ],
+        seed=3,
+    )
+    a = _fire_seq(plan, "shard_dispatch", 40)
+    b = _fire_seq(plan, "apply_delta", 40)
+    assert a != b
+
+
+def test_match_filter_gates_counters():
+    plan = FaultPlan(
+        [FaultRule("shard_dispatch", at_calls={1}, match={"shard": 1})]
+    )
+    plan.fire("shard_dispatch", shard=0)  # no match: no fire, no advance
+    plan.fire("shard_dispatch", shard=2)
+    with pytest.raises(FaultError) as ei:
+        plan.fire("shard_dispatch", shard=1)  # first MATCHING call fires
+    assert ei.value.ctx == {"shard": 1}
+    assert plan.total_fires == 1
+
+
+def test_max_fires_bounds_a_storm():
+    plan = FaultPlan([FaultRule("host_refine", rate=1.0, max_fires=2)])
+    assert _fire_seq(plan, "host_refine", 6) == [1, 2]
+    assert plan.total_fires == 2
+
+
+def test_disarm_is_inert_rearm_resumes():
+    plan = FaultPlan.single("snapshot_save", at_call=1)
+    plan.disarm()
+    assert _fire_seq(plan, "snapshot_save", 3) == []  # no fire, no advance
+    plan.rearm()
+    with pytest.raises(FaultError):  # still call #1 of the schedule
+        plan.fire("snapshot_save")
+
+
+def test_storm_constructor_reproducible():
+    points = ("shard_dispatch", "apply_delta", "host_refine")
+    logs = []
+    for _ in range(2):
+        plan = FaultPlan.storm(points, 0.4, seed=11, max_fires_per_point=3)
+        for i in range(30):
+            try:
+                plan.fire(points[i % 3], step=i)
+            except FaultError:
+                pass
+        logs.append(plan.log)
+    assert logs[0] == logs[1] and len(logs[0]) > 0
+    per_point = {p: plan.fires_at(p) for p in points}
+    assert all(v <= 3 for v in per_point.values())
+
+
+def test_pagestore_hook_fires_reads_only():
+    store = PageStore(4)
+    plan = FaultPlan.single("pagestore_read", at_call=1)
+    store.fault_hook = plan.pagestore_hook()
+    pid = store.alloc()
+    store.write(pid)  # writes never fire
+    assert plan.total_fires == 0
+    with pytest.raises(FaultError):
+        store.read(pid)
+    store.read(pid)  # schedule spent: reads flow again
+    assert plan.total_fires == 1
+
+
+# --------------------------------------------------------------------------
+# resilience primitives under virtual clocks
+# --------------------------------------------------------------------------
+class VirtualClock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def test_retry_absorbs_transient_failures():
+    calls = itertools.count()
+    retried = []
+
+    def flaky():
+        if next(calls) < 2:
+            raise RuntimeError("transient")
+        return "ok"
+
+    pol = RetryPolicy(max_attempts=3, sleep=lambda s: None)
+    assert pol.call(flaky, on_retry=lambda a, e: retried.append(a)) == "ok"
+    assert retried == [1, 2]
+
+
+def test_retry_exhausted_carries_last_cause():
+    pol = RetryPolicy(max_attempts=2, sleep=lambda s: None)
+    boom = ValueError("always")
+    with pytest.raises(RetryExhausted) as ei:
+        pol.call(lambda: (_ for _ in ()).throw(boom))
+    assert ei.value.attempts == 2
+    assert ei.value.__cause__ is boom
+
+
+def test_retry_no_retry_types_propagate_immediately():
+    calls = itertools.count()
+
+    def fail():
+        next(calls)
+        raise DeadlineExceeded("budget spent")
+
+    pol = RetryPolicy(max_attempts=5, sleep=lambda s: None)
+    with pytest.raises(DeadlineExceeded):
+        pol.call(fail)
+    assert next(calls) == 1  # exactly one attempt was made
+
+
+def test_backoff_delays_exponential_and_seeded():
+    slept = []
+    pol = RetryPolicy(
+        max_attempts=4, base_delay_s=0.1, backoff=2.0, max_delay_s=10.0,
+        jitter=0.0, sleep=slept.append,
+    )
+    with pytest.raises(RetryExhausted):
+        pol.call(lambda: (_ for _ in ()).throw(RuntimeError()))
+    np.testing.assert_allclose(slept, [0.1, 0.2, 0.4])
+    # jittered delays are a pure function of the policy seed
+    mk = lambda: RetryPolicy(
+        max_attempts=1, base_delay_s=0.1, jitter=0.5, seed=9
+    )
+    assert [mk().delay(i) for i in (1, 2)] == [mk().delay(i) for i in (1, 2)]
+
+
+def test_deadline_caps_backoff_and_raises():
+    clk = VirtualClock()
+    dl = Deadline(1.0, clock=clk)
+    assert dl.remaining() == 1.0 and not dl.expired
+    slept = []
+
+    def sleep(s):
+        slept.append(s)
+        clk.t += s
+
+    pol = RetryPolicy(
+        max_attempts=10, base_delay_s=0.8, backoff=1.0, jitter=0.0,
+        sleep=sleep,
+    )
+    with pytest.raises(DeadlineExceeded):
+        pol.call(
+            lambda: (_ for _ in ()).throw(RuntimeError()), deadline=dl
+        )
+    # first pause is the full 0.8s backoff; the next is clipped to the
+    # 0.2s remaining; then the budget is spent before another attempt
+    np.testing.assert_allclose(slept, [0.8, 0.2])
+    assert Deadline(None, clock=clk).remaining() == float("inf")
+
+
+def test_breaker_state_machine():
+    clk = VirtualClock()
+    br = CircuitBreaker(failure_threshold=2, cooldown_s=30.0, clock=clk)
+    assert br.allow() and br.state == "closed"
+    br.record_failure()
+    assert br.state == "closed" and br.allow()  # 1 < threshold
+    br.record_failure()
+    assert br.state == "open" and br.open_count == 1
+    assert not br.allow()  # fail fast during cooldown
+    clk.t += 30.0
+    assert br.allow() and br.state == "half_open"
+    assert not br.allow()  # single trial in flight
+    br.record_failure()  # trial failed: re-open for another cooldown
+    assert br.state == "open" and br.open_count == 2
+    clk.t += 30.0
+    assert br.allow()
+    br.record_success()
+    assert br.state == "closed" and br.failures == 0
+    # success resets the consecutive-failure count
+    br.record_failure()
+    br.record_success()
+    br.record_failure()
+    assert br.state == "closed"
+
+
+# --------------------------------------------------------------------------
+# DeviceQueryServer integration
+# --------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def static_setup():
+    pts = f32_points(700, 2, seed=5)
+    index = build_fmbi(pts, M=64)
+    rng = np.random.default_rng(2)
+    c = rng.random((12, 2))
+    los = np.clip(c - 0.12, 0, 1)
+    his = np.clip(c + 0.12, 0, 1)
+    qs = rng.random((12, 2))
+    return pts, index, los, his, qs
+
+
+def test_server_absorbs_bounded_faults(static_setup):
+    pts, index, los, his, qs = static_setup
+    oracle = NumpyEngine(index)
+    plan = FaultPlan(
+        [FaultRule("shard_dispatch", at_calls={1, 3})], seed=0
+    )
+    eng = ServerEngine(index, shards=2, fault_plan=plan, microbatch=8)
+    ref_w = oracle.window(los, his)
+    got_w = eng.window(los, his)
+    for a, b in zip(got_w, ref_w):
+        assert np.array_equal(np.sort(a), np.sort(b))
+    got_k = eng.knn(qs, 5)
+    for a, b in zip(got_k, oracle.knn(qs, 5)):
+        assert np.array_equal(a, b)
+    assert plan.total_fires == 2  # both scheduled faults actually hit
+    assert eng.srv.stats.retries >= 2  # ...and were retried away
+
+
+def test_validation_precise_errors(static_setup):
+    pts, index, los, his, qs = static_setup
+    srv = ServerEngine(index, microbatch=8).srv
+    bad = los.copy()
+    bad[3, 1] = np.nan
+    with pytest.raises(ValueError, match="query 3 contains NaN"):
+        srv.window(bad, his)
+    with pytest.raises(ValueError, match=r"expected shape \(Q, 2\)"):
+        srv.knn(np.zeros((4, 3)), 2)
+    with pytest.raises(ValueError, match="numeric array"):
+        srv.window(np.array([["a", "b"]], dtype=object), his[:1])
+    with pytest.raises(ValueError, match="complex"):
+        srv.knn(np.zeros((1, 2), dtype=np.complex128), 2)
+    with pytest.raises(ValueError, match="los/his shape mismatch"):
+        srv.window(los[:3], his[:4])
+    with pytest.raises(ValueError, match="k must be a positive integer"):
+        srv.knn(qs, 0)
+    with pytest.raises(ValueError, match="k must be a positive integer"):
+        srv.knn(qs, 2.5)
+
+
+def test_deadline_exceeded_surfaces(static_setup):
+    pts, index, los, his, qs = static_setup
+    clk = VirtualClock()
+    srv = ServerEngine(
+        index, shards=2, deadline_s=5.0, clock=clk, microbatch=8
+    ).srv
+    clk.t = 0.0
+    assert len(srv.window(los[:2], his[:2])) == 2  # within budget
+    orig_deadline = srv._deadline
+
+    def slow_deadline():
+        dl = orig_deadline()
+        clk.t += 10.0  # the batch budget is spent before dispatch
+        return dl
+
+    srv._deadline = slow_deadline
+    with pytest.raises(DeadlineExceeded):
+        srv.window(los[:2], his[:2])
+
+
+def test_breaker_opens_degrades_and_repairs(static_setup):
+    pts, index, los, his, qs = static_setup
+    oracle = NumpyEngine(index)
+    clk = VirtualClock()
+    plan = FaultPlan(
+        [FaultRule("shard_dispatch", rate=1.0, match={"shard": 1})], seed=0
+    )
+    srv = ServerEngine(
+        index, shards=2, fault_plan=plan, microbatch=32,
+        retry=RetryPolicy(max_attempts=2, sleep=lambda s: None),
+        breaker_threshold=1, breaker_cooldown_s=1e9, clock=clk,
+    ).srv
+    full_lo = np.zeros((1, 2))
+    full_hi = np.ones((1, 2))
+    # without certs the outage is an error, not a silent partial answer
+    with pytest.raises(ShardUnavailable):
+        srv.window(full_lo, full_hi)
+    res, certs = srv.window(full_lo, full_hi, return_certs=True)
+    assert not certs[0].complete and certs[0].missing_shards == (1,)
+    assert srv.breakers[1].state == "open"
+    assert srv.stats.degraded_queries >= 1
+    fires_before = plan.total_fires
+    srv.window(full_lo, full_hi, return_certs=True)  # breaker: fail fast
+    assert plan.total_fires == fires_before  # no dispatch, no new faults
+    # repair rebuilds the shard from the host table and closes the breaker
+    plan.disarm()
+    assert srv.repair() == [1]
+    assert srv.breakers[1].state == "closed"
+    res, certs = srv.window(full_lo, full_hi, return_certs=True)
+    assert certs[0].complete
+    assert np.array_equal(
+        np.sort(res[0]), np.sort(oracle.window(full_lo, full_hi)[0])
+    )

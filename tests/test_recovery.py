@@ -1,0 +1,451 @@
+"""Graft-journal crash recovery (PR-6).
+
+The adaptive server's table is a pure function of the boot AMBI state
+and the sequence of cold ops it served (grafting consumes the index's
+own seeded rng + the page-store allocator, both snapshotted).  So a
+killed server must reboot from snapshot + journal replay to the
+*bit-identical* table — verified here by killing at every journal
+record boundary and comparing against an uninterrupted twin that
+executed the same op prefix from scratch.
+"""
+import os
+import shutil
+import struct
+
+import numpy as np
+import pytest
+
+from repro.core.ambi import AMBI
+from repro.core.nodetable import NodeTable
+from repro.serve.engine import DeviceQueryServer
+from repro.serve.faults import FaultError, FaultPlan, FaultRule
+from repro.serve.journal import GraftJournal, JournalError
+from repro.serve.resilience import RetryExhausted, RetryPolicy
+
+from engines import f32_points
+
+_HEADER = struct.Struct("<II")
+
+
+def _workload(d=2, seed=3, n=10, r=0.03):
+    rng = np.random.default_rng(seed)
+    c = rng.random((n, d))
+    los = np.clip(c - r, 0, 1)
+    his = np.clip(c + r, 0, 1)
+    qs = rng.random((n, d))
+    return los, his, qs
+
+
+# 36 data pages >> M=24: the root is dense, so refinement is *incremental*
+# (each cold query grafts only its own subspaces and journals one record;
+# a shallow table would fully refine on the first touch and leave nothing
+# for the boundary sweep to kill between)
+_N, _M = 12_000, 24
+
+
+def _drive(srv, los, his, qs, k=4):
+    out = []
+    for i in range(len(los)):
+        out.extend(srv.window(los[i:i + 1], his[i:i + 1]))
+        out.extend(srv.knn(qs[i:i + 1], k))
+    return out
+
+
+def _record_boundaries(journal_bytes):
+    """Byte offsets after each complete record (0 included)."""
+    offs = [0]
+    off = 0
+    while off + _HEADER.size <= len(journal_bytes):
+        length, _ = _HEADER.unpack_from(journal_bytes, off)
+        off += _HEADER.size + length
+        offs.append(off)
+    assert offs[-1] == len(journal_bytes)
+    return offs
+
+
+# --------------------------------------------------------------------------
+# journal unit behaviour
+# --------------------------------------------------------------------------
+def test_journal_roundtrip_and_seq_continuity(tmp_path):
+    path = tmp_path / "ops.journal"
+    j = GraftJournal(path)
+    assert j.append("window", lo=[0.0], hi=[1.0]) == 1
+    assert j.append("knn", q=[0.5], k=3) == 2
+    j.close()
+    recs = list(GraftJournal.read_records(path))
+    assert [r["seq"] for r in recs] == [1, 2]
+    assert recs[0]["op"] == "window" and recs[1]["k"] == 3
+    assert GraftJournal.last_seq(path) == 2
+    # reopening scans and continues the sequence
+    j2 = GraftJournal(path)
+    assert j2.append("compact") == 3
+    # truncation empties the file but the counter stays monotonic
+    j2.truncate()
+    assert list(GraftJournal.read_records(path)) == []
+    assert j2.append("window", lo=[0.0], hi=[0.5]) == 4
+    j2.close()
+    assert GraftJournal.last_seq(path) == 4
+
+
+def test_journal_coordinates_roundtrip_exactly(tmp_path):
+    path = tmp_path / "ops.journal"
+    # adversarial float64s: JSON shortest-roundtrip must be bit-exact
+    vals = [0.1, 1 / 3, np.nextafter(0.7, 1.0), 1e-308, 12345.6789012345]
+    j = GraftJournal(path)
+    j.append("window", lo=vals, hi=vals)
+    j.close()
+    rec = next(GraftJournal.read_records(path))
+    got = np.asarray(rec["lo"], dtype=np.float64)
+    assert np.array_equal(got, np.asarray(vals, dtype=np.float64))
+
+
+def test_journal_torn_tail_tolerated_corruption_fatal(tmp_path):
+    path = tmp_path / "ops.journal"
+    j = GraftJournal(path)
+    for i in range(3):
+        j.append("knn", q=[float(i)], k=1)
+    j.close()
+    blob = path.read_bytes()
+    offs = _record_boundaries(blob)
+    # torn payload (crash mid-append of record 3): dropped, not fatal
+    path.write_bytes(blob[:offs[3] - 1])
+    assert [r["seq"] for r in GraftJournal.read_records(path)] == [1, 2]
+    # torn header at the tail: same
+    path.write_bytes(blob[:offs[2] + 3])
+    assert [r["seq"] for r in GraftJournal.read_records(path)] == [1, 2]
+    # a COMPLETE record with a flipped payload byte is corruption
+    bad = bytearray(blob)
+    bad[offs[1] + _HEADER.size + 2] ^= 0xFF
+    path.write_bytes(bytes(bad))
+    with pytest.raises(JournalError, match="checksum mismatch"):
+        list(GraftJournal.read_records(path))
+    # opening a corrupt journal for append refuses too (scan validates)
+    with pytest.raises(JournalError):
+        GraftJournal(path)
+
+
+def test_snapshot_save_is_atomic(tmp_path):
+    pts = f32_points(300, 2, seed=1)
+    ambi = AMBI(pts, 64)
+    ambi.window(np.zeros(2), np.ones(2))
+    path = str(tmp_path / "snap.npz")
+    # a stale temp file from a previous crashed save must be harmless
+    with open(path + ".tmp", "wb") as f:
+        f.write(b"garbage from a torn write")
+    ambi.table.save(path, points=pts, extra={"v": 1})
+    assert not os.path.exists(path + ".tmp")  # replaced, not left behind
+    table, meta, loaded = NodeTable.load(path)
+    assert table.equals(ambi.table)
+    assert np.array_equal(loaded, pts)
+    # an interrupted overwrite (fault before the write) leaves the old
+    # snapshot fully intact: the tmp-then-rename never touched it
+    blob = open(path, "rb").read()
+    plan = FaultPlan.single("snapshot_save", at_call=1)
+    try:
+        plan.fire("snapshot_save")
+    except FaultError:
+        pass
+    assert open(path, "rb").read() == blob
+
+
+# --------------------------------------------------------------------------
+# write-ahead discipline
+# --------------------------------------------------------------------------
+def test_journal_append_failure_fails_the_op(tmp_path):
+    pts = f32_points(400, 2, seed=2)
+    ambi = AMBI(pts, 64)
+    plan = FaultPlan([FaultRule("journal_append", rate=1.0)])
+    srv = DeviceQueryServer.from_ambi(
+        ambi, microbatch=8,
+        journal_path=tmp_path / "ops.journal",
+        snapshot_path=tmp_path / "snap.npz",
+        fault_plan=plan,
+        retry=RetryPolicy(max_attempts=2, sleep=lambda s: None),
+    )
+    unref_before = ambi.table.unrefined.copy()
+    with pytest.raises(RetryExhausted):
+        srv.window(np.zeros((1, 2)), np.ones((1, 2)))
+    # never execute unlogged: the journal is empty and the host table
+    # saw no refinement from the failed op
+    assert GraftJournal.last_seq(tmp_path / "ops.journal") == 0
+    assert np.array_equal(ambi.table.unrefined, unref_before)
+    # once the plane is quiet the same op succeeds and is journaled
+    # (the file itself may already be re-truncated by a compaction
+    # barrier — the monotonic seq and the counter prove the append)
+    plan.disarm()
+    srv.window(np.zeros((1, 2)), np.ones((1, 2)))
+    assert srv.journal.seq >= 1
+    assert srv.stats.journal_records >= 1
+
+
+# --------------------------------------------------------------------------
+# kill-restart: every journal record boundary
+# --------------------------------------------------------------------------
+def _twin_after(pts, M, ops):
+    """The uninterrupted twin: a fresh AMBI that executed exactly ``ops``."""
+    twin = AMBI(pts, M)
+    for rec in ops:
+        DeviceQueryServer._replay_op(twin, rec)
+    return twin
+
+
+def test_kill_at_every_record_boundary(tmp_path):
+    pts = f32_points(_N, 2, seed=7)
+    M = _M
+    los, his, qs = _workload(n=8)
+    live = tmp_path / "live"
+    live.mkdir()
+    srv = DeviceQueryServer.from_ambi(
+        AMBI(pts, M), microbatch=8, compact_slack=1e9,  # no mid-run barrier
+        journal_path=live / "ops.journal", snapshot_path=live / "snap.npz",
+    )
+    _drive(srv, los, his, qs)
+    blob = (live / "ops.journal").read_bytes()
+    offs = _record_boundaries(blob)
+    ops = list(GraftJournal.read_records(live / "ops.journal"))
+    assert len(ops) == len(offs) - 1 and len(ops) >= 6
+    assert srv.stats.journal_records == len(ops)
+
+    kill = tmp_path / "kill"
+    for b in range(len(offs)):
+        if kill.exists():
+            shutil.rmtree(kill)
+        kill.mkdir()
+        shutil.copy(live / "snap.npz", kill / "snap.npz")
+        (kill / "ops.journal").write_bytes(blob[:offs[b]])
+        rec = DeviceQueryServer.recover(
+            kill / "snap.npz", kill / "ops.journal",
+            microbatch=8, compact_slack=1e9,
+        )
+        twin = _twin_after(pts, M, ops[:b])
+        assert rec.stats.replayed_records == b
+        assert rec.ambi.table.equals(twin.table), f"boundary {b}"
+        # the FULL adaptive state matches: rng stream + page store
+        assert rec.ambi.state_meta() == twin.state_meta(), f"boundary {b}"
+        # a torn tail past the boundary recovers to the same state
+        if b < len(offs) - 1:
+            (kill / "ops.journal").write_bytes(blob[:offs[b] + 3])
+            rec2 = DeviceQueryServer.recover(
+                kill / "snap.npz", kill / "ops.journal",
+                microbatch=8, compact_slack=1e9,
+            )
+            assert rec2.stats.replayed_records == b
+            assert rec2.ambi.table.equals(twin.table)
+
+
+def test_recovered_server_serves_identically(tmp_path):
+    """Post-recovery, the rebooted server and the never-killed twin serve
+    the same traffic with identical results AND identical upload-counter
+    deltas (the device sync behaviour, not just the answers)."""
+    pts = f32_points(_N, 2, seed=7)
+    M = _M
+    los, his, qs = _workload(n=8)
+
+    def boot(d):
+        d.mkdir()
+        return DeviceQueryServer.from_ambi(
+            AMBI(pts, M), microbatch=8, compact_slack=1e9,
+            journal_path=d / "ops.journal", snapshot_path=d / "snap.npz",
+        )
+
+    twin = boot(tmp_path / "twin")
+    dead = boot(tmp_path / "dead")
+    warm = list(zip(_drive(twin, los, his, qs), _drive(dead, los, his, qs)))
+    for a, b in warm:
+        assert np.array_equal(a, b)
+    # kill `dead` (drop it mid-flight) and reboot from its files
+    rec = DeviceQueryServer.recover(
+        tmp_path / "dead" / "snap.npz", tmp_path / "dead" / "ops.journal",
+        microbatch=8, compact_slack=1e9,
+    )
+    assert rec.ambi.table.equals(twin.ambi.table)
+    # journaling resumes after the dead server's last acknowledged seq
+    assert rec.journal.seq == twin.journal.seq
+    # fresh traffic: some cold (new region), some hot (warm region)
+    los2, his2, qs2 = _workload(seed=12, n=6)
+    base_rec = rec.upload_stats.as_dict()
+    base_twin = twin.upload_stats.as_dict()
+    for a, b in zip(_drive(rec, los2, his2, qs2),
+                    _drive(twin, los2, his2, qs2)):
+        assert np.array_equal(a, b)
+    delta_rec = {
+        k: v - base_rec[k] for k, v in rec.upload_stats.as_dict().items()
+    }
+    delta_twin = {
+        k: v - base_twin[k] for k, v in twin.upload_stats.as_dict().items()
+    }
+    assert delta_rec == delta_twin
+    assert rec.ambi.table.equals(twin.ambi.table)
+
+
+# --------------------------------------------------------------------------
+# compaction barriers and the snapshot/truncate crash window
+# --------------------------------------------------------------------------
+def test_compaction_checkpoint_folds_journal(tmp_path):
+    pts = f32_points(_N, 2, seed=9)
+    srv = DeviceQueryServer.from_ambi(
+        AMBI(pts, _M), microbatch=8, compact_slack=0.05,
+        journal_path=tmp_path / "ops.journal",
+        snapshot_path=tmp_path / "snap.npz",
+    )
+    los, his, qs = _workload(seed=5, n=10)
+    _drive(srv, los, his, qs)
+    if srv.stats.compactions == 0:
+        _drive(srv, *_workload(seed=6, n=10))
+    assert srv.stats.compactions >= 1
+    assert srv.stats.checkpoints >= 2  # boot barrier + compaction barrier
+    # the barrier folded the journal: far fewer live records than ops
+    live = GraftJournal.last_seq(tmp_path / "ops.journal")
+    assert srv.journal.seq > 0
+    # recovery from barrier + tail lands on the live server's exact table
+    rec = DeviceQueryServer.recover(
+        tmp_path / "snap.npz", tmp_path / "ops.journal",
+        microbatch=8, compact_slack=0.05,
+    )
+    assert rec.ambi.table.equals(srv.ambi.table)
+    assert rec.ambi.state_meta() == srv.ambi.state_meta()
+    assert rec.journal.seq == srv.journal.seq
+    assert live >= rec.stats.replayed_records
+
+
+def test_crash_between_snapshot_and_truncate_replays_nothing_twice(tmp_path):
+    pts = f32_points(_N, 2, seed=11)
+    srv = DeviceQueryServer.from_ambi(
+        AMBI(pts, _M), microbatch=8, compact_slack=1e9,
+        journal_path=tmp_path / "ops.journal",
+        snapshot_path=tmp_path / "snap.npz",
+    )
+    los, his, qs = _workload(seed=8, n=6)
+    _drive(srv, los, his, qs)
+    pre_truncate = (tmp_path / "ops.journal").read_bytes()
+    assert len(pre_truncate) > 0
+    srv.checkpoint()  # snapshot written, then journal truncated
+    # simulate the kill BETWEEN the two: restore the stale journal
+    (tmp_path / "ops.journal").write_bytes(pre_truncate)
+    rec = DeviceQueryServer.recover(
+        tmp_path / "snap.npz", tmp_path / "ops.journal",
+        microbatch=8, compact_slack=1e9,
+    )
+    # every stale record's seq is at or below the snapshot barrier
+    assert rec.stats.replayed_records == 0
+    assert rec.ambi.table.equals(srv.ambi.table)
+    assert rec.journal.seq == srv.journal.seq
+
+
+def test_deferred_checkpoint_keeps_compact_in_journal(tmp_path):
+    """When the snapshot barrier itself fails, the vacuum stays journaled
+    and replay compacts at the same point — tables still bit-identical."""
+    pts = f32_points(_N, 2, seed=13)
+    plan = FaultPlan([FaultRule("snapshot_save", rate=1.0)])
+    plan.disarm()  # let the boot barrier through
+    srv = DeviceQueryServer.from_ambi(
+        AMBI(pts, _M), microbatch=8, compact_slack=0.05,
+        journal_path=tmp_path / "ops.journal",
+        snapshot_path=tmp_path / "snap.npz",
+        fault_plan=plan,
+        retry=RetryPolicy(max_attempts=2, sleep=lambda s: None),
+    )
+    plan.rearm()  # every post-boot snapshot save now fails -> deferred
+    los, his, qs = _workload(seed=5, n=10)
+    _drive(srv, los, his, qs)
+    if srv.stats.compactions == 0:
+        _drive(srv, *_workload(seed=6, n=10))
+    assert srv.stats.compactions >= 1
+    assert srv.stats.checkpoints == 1  # only the boot barrier landed
+    ops = list(GraftJournal.read_records(tmp_path / "ops.journal"))
+    assert any(r["op"] == "compact" for r in ops)
+    plan.disarm()
+    rec = DeviceQueryServer.recover(
+        tmp_path / "snap.npz", tmp_path / "ops.journal",
+        microbatch=8, compact_slack=0.05,
+    )
+    assert rec.ambi.table.equals(srv.ambi.table)
+    assert rec.ambi.state_meta() == srv.ambi.state_meta()
+
+
+def test_recovery_replay_runs_disarmed(tmp_path):
+    pts = f32_points(400, 2, seed=4)
+    srv = DeviceQueryServer.from_ambi(
+        AMBI(pts, 64), microbatch=8, compact_slack=1e9,
+        journal_path=tmp_path / "ops.journal",
+        snapshot_path=tmp_path / "snap.npz",
+    )
+    srv.window(np.zeros((1, 2)), np.ones((1, 2)))
+    assert srv.journal.seq >= 1
+    # a plane that would fault every host op must NOT fault the replay
+    plan = FaultPlan([
+        FaultRule("host_refine", rate=1.0),
+        FaultRule("pagestore_read", rate=1.0),
+    ])
+    rec = DeviceQueryServer.recover(
+        tmp_path / "snap.npz", tmp_path / "ops.journal",
+        microbatch=8, compact_slack=1e9, fault_plan=plan,
+    )
+    assert rec.stats.replayed_records >= 1
+    assert plan.total_fires == 0  # replay was never faulted
+    assert plan.armed  # ...and the plane is rearmed for live traffic
+    assert rec.ambi.table.equals(srv.ambi.table)
+
+
+def test_recovery_snapshot_load_fault_is_injectable(tmp_path):
+    pts = f32_points(300, 2, seed=6)
+    srv = DeviceQueryServer.from_ambi(
+        AMBI(pts, 64), microbatch=8,
+        journal_path=tmp_path / "ops.journal",
+        snapshot_path=tmp_path / "snap.npz",
+    )
+    srv.window(np.zeros((1, 2)), np.ones((1, 2)))
+    plan = FaultPlan.single("snapshot_load", at_call=1)
+    with pytest.raises(FaultError):
+        DeviceQueryServer.recover(
+            tmp_path / "snap.npz", tmp_path / "ops.journal",
+            fault_plan=plan,
+        )
+    # the supervisor's retry of the whole reboot then succeeds
+    rec = DeviceQueryServer.recover(
+        tmp_path / "snap.npz", tmp_path / "ops.journal", fault_plan=plan,
+    )
+    assert rec.ambi.table.equals(srv.ambi.table)
+
+
+# --------------------------------------------------------------------------
+# property-based kill-restart (optional dev dependency)
+# --------------------------------------------------------------------------
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # optional dev dependency (see requirements-dev.txt)
+    given = None
+
+if given is not None:
+
+    @settings(max_examples=8, deadline=None)
+    @given(seed=st.integers(0, 2**16), frac=st.floats(0.0, 1.0))
+    def test_kill_restart_property(tmp_path_factory, seed, frac):
+        tmp = tmp_path_factory.mktemp("prop")
+        pts = f32_points(_N, 2, seed=17)
+        M = _M
+        los, his, qs = _workload(seed=seed, n=5)
+        srv = DeviceQueryServer.from_ambi(
+            AMBI(pts, M), microbatch=8, compact_slack=1e9,
+            journal_path=tmp / "ops.journal",
+            snapshot_path=tmp / "snap.npz",
+        )
+        _drive(srv, los, his, qs)
+        blob = (tmp / "ops.journal").read_bytes()
+        offs = _record_boundaries(blob)
+        ops = list(GraftJournal.read_records(tmp / "ops.journal"))
+        b = int(round(frac * (len(offs) - 1)))
+        (tmp / "ops.journal").write_bytes(blob[:offs[b]])
+        rec = DeviceQueryServer.recover(
+            tmp / "snap.npz", tmp / "ops.journal",
+            microbatch=8, compact_slack=1e9,
+        )
+        twin = _twin_after(pts, M, ops[:b])
+        assert rec.ambi.table.equals(twin.table)
+        assert rec.ambi.state_meta() == twin.state_meta()
+
+else:
+
+    @pytest.mark.skip(reason="hypothesis not installed (optional dev dep)")
+    def test_kill_restart_property():
+        pass
