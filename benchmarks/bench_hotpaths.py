@@ -71,6 +71,8 @@ SMOKE_CEILINGS_S = {
     "window_batch": 1.5,
     "knn_single": 2.0,
     "knn_batch": 1.5,
+    "window_batch_fused": 1.5,
+    "knn_batch_fused": 1.5,
     "window_batch_sharded": 2.0,
     "knn_batch_sharded": 2.0,
     "adaptive_serve_first": 8.0,
@@ -84,6 +86,8 @@ SMOKE_GATED = {
     "bulk_load": "bulk_load_s",
     "window_batch": "window_batch_64_s",
     "knn_batch": "knn_batch_64_k16_s",
+    "window_batch_fused": "window_batch_fused_64_s",
+    "knn_batch_fused": "knn_batch_fused_64_k16_s",
     "window_batch_sharded": "window_batch_sharded_64_s",
     "knn_batch_sharded": "knn_batch_sharded_64_k16_s",
     "adaptive_serve_first": "adaptive_serve_first_result_s",
@@ -202,9 +206,86 @@ def run(n: int = 600_000, seed: int = 0, repeats: int = 3) -> dict:
         results["knn_batch_64_k16_jax_s"] = _timed(
             lambda: knn_query_batch_jax(dev, qs, 16), repeats
         )
+
+        # fused traversal+scan (PR-7 second-gen path) — explicit pin so the
+        # gate survives a REPRO_FUSED default flip, plus the first-gen
+        # baseline for the before/after diff
+        results["window_batch_fused_64_s"] = _timed(
+            lambda: window_query_batch_jax(dev, los, his, fused=True),
+            repeats,
+        )
+        results["knn_batch_fused_64_k16_s"] = _timed(
+            lambda: knn_query_batch_jax(dev, qs, 16, fused=True), repeats
+        )
+        window_query_batch_jax(dev, los, his, fused=False)  # compile
+        results["window_batch_unfused_64_s"] = _timed(
+            lambda: window_query_batch_jax(dev, los, his, fused=False),
+            repeats,
+        )
+        knn_query_batch_jax(dev, qs, 16, fused=False)  # compile
+        results["knn_batch_unfused_64_k16_s"] = _timed(
+            lambda: knn_query_batch_jax(dev, qs, 16, fused=False), repeats
+        )
+
+        # bf16 compressed-MBB layout (half-width traversal bounds,
+        # certified f32 re-check)
+        dev_c = DeviceTable.from_index(idx, compressed=True)
+        window_query_batch_jax(dev_c, los, his, fused=True)  # compile
+        results["window_batch_fused_bf16_64_s"] = _timed(
+            lambda: window_query_batch_jax(dev_c, los, his, fused=True),
+            repeats,
+        )
+        knn_query_batch_jax(dev_c, qs, 16, fused=True)  # compile
+        results["knn_batch_fused_bf16_64_k16_s"] = _timed(
+            lambda: knn_query_batch_jax(dev_c, qs, 16, fused=True), repeats
+        )
+
+        # roofline estimate: bytes the fused kernels move on this workload
+        # vs the measured wall clock (CPU numbers are a sanity floor; the
+        # TPU projection in DESIGN_PERF.md uses the same byte counts)
+        try:
+            from repro import roofline as rf
+
+            lo_np = np.asarray(dev.leaf_lo)
+            hi_np = np.asarray(dev.leaf_hi)
+            lf = los.astype(np.float32)
+            hf = his.astype(np.float32)
+            hit = np.all(
+                (lo_np[None] <= hf[:, None]) & (hi_np[None] >= lf[:, None]),
+                axis=2,
+            )
+            p0 = int(hit.sum())
+            n_boxes = dev.n_leaves + sum(
+                lv[0].shape[0] for lv in dev.levels
+            )
+            s = dev.leaf_pts.shape[1]
+            w_bytes = rf.bytes_box_hits_tiled(
+                n_boxes, 64, d
+            ) + rf.bytes_pair_window_ids(p0, s, d)
+            results["window_fused_pairs"] = p0
+            results["window_fused_bytes_moved"] = w_bytes
+            results["window_fused_cpu_gbps"] = round(
+                rf.kernel_roofline(
+                    w_bytes, results["window_batch_fused_64_s"]
+                )["achieved_gbps"], 3,
+            )
+            c0 = 8  # first-round candidate leaves per query (k=16, s>=32)
+            k_bytes = rf.bytes_leaf_mindist_tiled(
+                64, dev.n_leaves, d
+            ) + rf.bytes_pair_dist2(64 * c0, s, d)
+            results["knn_fused_bytes_moved"] = k_bytes
+            results["knn_fused_cpu_gbps"] = round(
+                rf.kernel_roofline(
+                    k_bytes, results["knn_batch_fused_64_k16_s"]
+                )["achieved_gbps"], 3,
+            )
+        except Exception as e:  # pragma: no cover - estimate only
+            results["roofline_error"] = str(e)
     except Exception as e:  # pragma: no cover - accelerator-env dependent
         results["window_batch_64_jax_s"] = -1.0
         results["knn_batch_64_k16_jax_s"] = -1.0
+        results["window_batch_fused_64_s"] = -1.0
+        results["knn_batch_fused_64_k16_s"] = -1.0
         results["device_engine_error"] = str(e)
 
     # ---- sharded device engine (4-way partition + MBB router) ------------
@@ -326,6 +407,65 @@ def run(n: int = 600_000, seed: int = 0, repeats: int = 3) -> dict:
     return results
 
 
+def run_scale(n: int = 10_000_000, seed: int = 7) -> dict:
+    """10M-point scaling gate: end-to-end bulk load, fused device queries,
+    and sampled parity against the NumPy engine.
+
+    Recorded under ``*_10m_s`` keys in BENCH_CORE.json.  Parity is asserted,
+    not just timed: a divergence raises and the keys come back as error
+    sentinels, which the full run reports.
+    """
+    results: dict[str, float] = {}
+    try:
+        pts = osm_like(n, seed=seed)
+        d = pts.shape[1]
+        M = buffer_pages(pts)
+        t0 = time.perf_counter()
+        idx = bulk_load(pts, M, PageStore(M))
+        results["bulk_load_10m_s"] = time.perf_counter() - t0
+
+        from repro.core.queries_jax import (
+            DeviceTable,
+            knn_query_batch_jax,
+            window_query_batch_jax,
+        )
+
+        dev = DeviceTable.from_index(idx, compressed=True)
+        qrng = np.random.default_rng(11)
+        centers = qrng.random((64, d)) * 0.9
+        los, his = centers - 0.01, centers + 0.01
+        qs = qrng.random((64, d))
+        window_query_batch_jax(dev, los, his, fused=True)  # compile
+        results["window_batch_64_jax_10m_s"] = _timed(
+            lambda: window_query_batch_jax(dev, los, his, fused=True), 2
+        )
+        knn_query_batch_jax(dev, qs, 16, fused=True)  # compile
+        results["knn_batch_64_k16_jax_10m_s"] = _timed(
+            lambda: knn_query_batch_jax(dev, qs, 16, fused=True), 2
+        )
+
+        # sampled parity vs the NumPy engine (8 windows + 8 knn queries)
+        got_w = window_query_batch_jax(dev, los[:8], his[:8], fused=True)
+        ref_w, _ = window_query_batch(idx, los[:8], his[:8])
+        for a, b in zip(ref_w, got_w):
+            if set(np.asarray(a).tolist()) != set(np.asarray(b).tolist()):
+                raise RuntimeError("10M window parity diverged")
+        got_k = knn_query_batch_jax(dev, qs[:8], 16, fused=True)
+        ref_k, _ = knn_query_batch(idx, qs[:8], 16)
+        for a, b in zip(ref_k, got_k):
+            if not np.array_equal(np.asarray(a), np.asarray(b)):
+                raise RuntimeError("10M knn parity diverged")
+        results["scale_10m_parity"] = 1.0
+        results["scale_10m_n_leaves"] = dev.n_leaves
+    except Exception as e:  # pragma: no cover - memory/env dependent
+        results.setdefault("bulk_load_10m_s", -1.0)
+        results["window_batch_64_jax_10m_s"] = -1.0
+        results["knn_batch_64_k16_jax_10m_s"] = -1.0
+        results["scale_10m_parity"] = 0.0
+        results["scale_10m_error"] = str(e)
+    return results
+
+
 def smoke_gate(res: dict, use_baselines: bool = True) -> list[str]:
     """Diff fresh smoke timings against the committed baselines.
 
@@ -370,6 +510,10 @@ def main(argv=None) -> int:
     ap.add_argument("--smoke", action="store_true",
                     help="reduced size, gate against ceilings, no JSON write")
     ap.add_argument("--n", type=int, default=None)
+    ap.add_argument("--scale-n", type=int, default=10_000_000,
+                    help="10M scaling-gate size for the full run")
+    ap.add_argument("--no-scale", action="store_true",
+                    help="skip the 10M scaling gate in the full run")
     args = ap.parse_args(argv)
 
     n = args.n or (SMOKE_N if args.smoke else 600_000)
@@ -399,6 +543,16 @@ def main(argv=None) -> int:
             return 1
         print("SMOKE OK")
         return 0
+
+    # 10M scaling gate: bulk load + fused device queries + sampled parity
+    if not args.no_scale:
+        scale = run_scale(n=args.scale_n)
+        res.update(scale)
+        for k, v in sorted(scale.items()):
+            print(f"  {k:32s} {v}")
+        if not scale.get("scale_10m_parity"):
+            print("SCALE GATE FAIL: " + scale.get("scale_10m_error", "?"))
+            return 1
 
     # record smoke-scale baselines for the CI regression gate alongside the
     # full-scale numbers (same container, best-of-repeats)

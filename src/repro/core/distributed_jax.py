@@ -159,6 +159,7 @@ class ShardedDeviceTable:
     shard_roots: list = None         # per shard: source-table root rows
     partial: bool = False
     upload_stats: object = None      # UploadStats sink for (re)exports
+    compressed: bool = False         # bf16 compressed-MBB shard exports
 
     @property
     def m(self) -> int:
@@ -177,6 +178,7 @@ class ShardedDeviceTable:
         *,
         partial: bool = False,
         stats=None,
+        compressed: bool = False,
     ) -> "ShardedDeviceTable":
         """From per-shard tables whose ``perm`` entries are global row ids
         (``NodeTable.shard`` output, or ``shard_build_tables``)."""
@@ -185,7 +187,7 @@ class ShardedDeviceTable:
         points = np.asarray(points)
         shards = [
             DeviceTable.from_table(t, points, dtype=dtype, partial=partial,
-                                   stats=stats)
+                                   stats=stats, compressed=compressed)
             for t in tables
         ]
         return cls(
@@ -195,6 +197,7 @@ class ShardedDeviceTable:
             n_points=int(sum(s.n_points for s in shards)),
             partial=partial,
             upload_stats=stats,
+            compressed=compressed,
         )
 
     @classmethod
@@ -207,12 +210,13 @@ class ShardedDeviceTable:
         *,
         partial: bool = False,
         stats=None,
+        compressed: bool = False,
     ) -> "ShardedDeviceTable":
         sizes = table.subtree_points()
         plan = table.shard_plan(m, sizes)
         tables = [cls._extract(table, roots, sizes) for roots in plan]
         self = cls.from_tables(tables, points, dtype=dtype, partial=partial,
-                               stats=stats)
+                               stats=stats, compressed=compressed)
         self.source_table = table
         self.source_points = np.asarray(points)
         self.shard_roots = plan
@@ -255,7 +259,7 @@ class ShardedDeviceTable:
             t = self._extract(self.source_table, self.shard_roots[s], sizes)
             self.shards[s] = DeviceTable.from_table(
                 t, self.source_points, dtype=dtype, partial=self.partial,
-                stats=self.upload_stats,
+                stats=self.upload_stats, compressed=self.compressed,
             )
             self.shard_lo[s] = t.mbb_lo[0].astype(dtype)
             self.shard_hi[s] = t.mbb_hi[0].astype(dtype)
@@ -269,9 +273,12 @@ class ShardedDeviceTable:
             ]
 
     @classmethod
-    def from_index(cls, index, m: int, dtype=np.float32) -> "ShardedDeviceTable":
+    def from_index(
+        cls, index, m: int, dtype=np.float32, *, compressed: bool = False
+    ) -> "ShardedDeviceTable":
         """From a built ``core.fmbi.Index`` (or a refined AMBI's ``.index``)."""
-        return cls.from_table(index.table, index.points, m, dtype=dtype)
+        return cls.from_table(index.table, index.points, m, dtype=dtype,
+                              compressed=compressed)
 
     @classmethod
     def from_parallel_build(
@@ -328,6 +335,7 @@ def window_query_batch_sharded(
     his: np.ndarray,
     *,
     use_kernel: bool | None = None,
+    fused: bool | None = None,
     runner=None,
     return_certs: bool = False,
 ) -> list[np.ndarray]:
@@ -364,7 +372,8 @@ def window_query_batch_sharded(
             res = _run_shard(
                 runner, s,
                 lambda dev=dev, qsel=qsel: window_query_batch_jax(
-                    dev, los[qsel], his[qsel], use_kernel=use_kernel
+                    dev, los[qsel], his[qsel], use_kernel=use_kernel,
+                    fused=fused,
                 ),
             )
         except ShardUnavailable:
@@ -400,6 +409,7 @@ def knn_query_batch_sharded(
     k: int,
     *,
     use_kernel: bool | None = None,
+    fused: bool | None = None,
     runner=None,
     return_certs: bool = False,
 ) -> list[np.ndarray]:
@@ -444,7 +454,7 @@ def knn_query_batch_sharded(
         def thunk():
             return knn_query_batch_jax(
                 sdev.shards[s], qs[qidx], k,
-                use_kernel=use_kernel, return_dists=True,
+                use_kernel=use_kernel, fused=fused, return_dists=True,
             )
 
         try:

@@ -41,6 +41,45 @@ import numpy as np
 
 
 # --------------------------------------------------------------------------
+# bf16 compressed-MBB export (outward rounding; shared with queries_jax.py)
+# --------------------------------------------------------------------------
+def _bf16_outward(x: np.ndarray, up: bool) -> np.ndarray:
+    """Round float32 values to bfloat16 toward +inf (``up``) or -inf.
+
+    bfloat16 is float32 with the low 16 mantissa bits dropped, so rounding
+    is pure bit arithmetic: truncation moves every value toward zero; when
+    that is the wrong direction for the requested rounding, step one bf16
+    ulp outward by incrementing the truncated magnitude (saturating into
+    +/-inf is fine — an infinite bound is still conservative)."""
+    import ml_dtypes
+
+    f = np.ascontiguousarray(np.asarray(x, dtype=np.float32))
+    u = f.view(np.uint32)
+    frac = u & np.uint32(0xFFFF)
+    trunc = u & ~np.uint32(0xFFFF)
+    neg = (u >> 31) != 0
+    step = (frac != 0) & (neg != up)
+    out = np.where(step, trunc + (np.uint32(1) << 16), trunc)
+    return out.view(np.float32).astype(ml_dtypes.bfloat16)
+
+
+def compress_boxes_bf16(
+    lo: np.ndarray, hi: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """Outward-rounded bfloat16 copies of f32 box columns.
+
+    ``lo`` rounds toward -inf and ``hi`` toward +inf, so every compressed
+    box *contains* its f32 box: any query intersecting the f32 box also
+    intersects the compressed one (no false negatives, ever), and the
+    squared mindist to the compressed box never exceeds the f32 mindist
+    (a superset-safe lower bound for k-NN pruning).  The device engine
+    re-checks borderline boxes against the exact f32 columns, so results
+    stay id-identical — compression only adds candidates, never drops one.
+    """
+    return _bf16_outward(lo, up=False), _bf16_outward(hi, up=True)
+
+
+# --------------------------------------------------------------------------
 # ragged-range helper (shared with queries.py)
 # --------------------------------------------------------------------------
 def ragged_ranges(starts: np.ndarray, counts: np.ndarray) -> np.ndarray:
@@ -775,7 +814,8 @@ class NodeTable:
         return levels
 
     def device_layout(
-        self, points: np.ndarray, dtype=np.float32, *, partial: bool = False
+        self, points: np.ndarray, dtype=np.float32, *,
+        partial: bool = False, compressed: bool = False,
     ) -> dict:
         """Fixed-shape arrays for the compiled query engine (numpy side).
 
@@ -807,6 +847,15 @@ class NodeTable:
         as a mask the serving layer answers host-side (refining on
         demand).  ``leaf_rows``/``cold_rows`` map slots back to table rows
         (the scaffolding the incremental delta refresh rebases).
+
+        With ``compressed=True`` the layout also carries outward-rounded
+        bfloat16 copies of every bound column (:func:`compress_boxes_bf16`):
+        ``leaf_lo_c``/``leaf_hi_c`` beside the leaf MBBs and ``lo_c``/
+        ``hi_c`` inside each level block.  The compressed boxes contain
+        their f32 originals, so traversal against them can only *add*
+        candidates; the f32 columns stay alongside for the engine's
+        certified re-check, keeping results id-identical at half the
+        bound-column bandwidth.
         """
         if not partial and bool(self.unrefined.any()):
             raise ValueError(
@@ -820,7 +869,8 @@ class NodeTable:
         S = max(int(counts.max()) if L and counts.size else 1, 1)
         leaf_pts, leaf_ids = self.pack_leaf_blocks(rows, points, S, dtype)
         slot_of = self.slot_map(rows, cold)
-        return {
+        levels = self.level_blocks(slot_of, dtype)
+        layout = {
             "leaf_pts": leaf_pts,
             "leaf_ids": leaf_ids,
             "leaf_counts": counts.astype(np.int32),
@@ -828,16 +878,28 @@ class NodeTable:
             "leaf_hi": self.mbb_hi[rows].astype(dtype),
             "cold_lo": self.mbb_lo[cold].astype(dtype),
             "cold_hi": self.mbb_hi[cold].astype(dtype),
-            "levels": self.level_blocks(slot_of, dtype),
+            "levels": levels,
             "leaf_rows": rows,
             "cold_rows": cold,
         }
+        if compressed:
+            layout["leaf_lo_c"], layout["leaf_hi_c"] = compress_boxes_bf16(
+                layout["leaf_lo"], layout["leaf_hi"]
+            )
+            for lv in levels:
+                lv["lo_c"], lv["hi_c"] = compress_boxes_bf16(
+                    lv["lo"], lv["hi"]
+                )
+        return layout
 
-    def to_device(self, points: np.ndarray, dtype=np.float32):
+    def to_device(self, points: np.ndarray, dtype=np.float32, *,
+                  compressed: bool = False):
         """Wrap :meth:`device_layout` into the jit-able ``DeviceTable``."""
         from .queries_jax import DeviceTable
 
-        return DeviceTable.from_table(self, points, dtype=dtype)
+        return DeviceTable.from_table(
+            self, points, dtype=dtype, compressed=compressed
+        )
 
     # -- invariants ----------------------------------------------------------
     def check_invariants(self, n_points: Optional[int] = None) -> None:

@@ -60,6 +60,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -76,7 +77,19 @@ BIG = float(np.finfo(np.float32).max)
 PAIR_CHUNK = 16384
 
 # retrace counters (trace-time side effects): tests pin compile growth
-TRACE_COUNTS = {"frontier": 0, "window_collect": 0, "knn_core": 0}
+TRACE_COUNTS = {
+    "frontier": 0,
+    "window_collect": 0,
+    "knn_core": 0,
+    "pair_pack": 0,   # on-device (query, leaf) pair compaction chunks
+    "id_pack": 0,     # on-device qualifying-id compaction buckets
+    "knn_sel": 0,     # on-device pending-query gathers (budget escalation)
+}
+
+
+def trace_counts() -> dict:
+    """Snapshot of the retrace counters (a copy, safe to diff against)."""
+    return dict(TRACE_COUNTS)
 
 # host -> device upload accounting: the adaptive-serving tests prove a graft
 # refreshes the device table by uploading only its delta (full_exports stays
@@ -138,6 +151,16 @@ def _use_kernel_default() -> bool:
     return kops._on_tpu()
 
 
+def _fused_default() -> bool:
+    """Resolve the ``fused`` flag: the ``REPRO_FUSED`` env var (1/0) wins —
+    0 pins the first-generation host-packing path for A/B runs — else the
+    fused on-device packing engine is the default."""
+    env = os.environ.get("REPRO_FUSED")
+    if env is not None and env != "":
+        return env not in ("0", "false", "False")
+    return True
+
+
 def _levels_to_jax(levels) -> tuple:
     """Host level blocks -> the per-depth device tuples ``DeviceTable``
     carries (shared by the full export and the delta refresh)."""
@@ -150,6 +173,24 @@ def _levels_to_jax(levels) -> tuple:
         )
         for lv in levels
     )
+
+
+def _levels_c_to_jax(levels) -> tuple:
+    """Compressed (bf16 outward-rounded) bound columns per level block.
+
+    Kept as a parallel tuple rather than widening the level tuples so the
+    uncompressed pytree structure — and therefore every existing jit cache
+    entry — is unchanged."""
+    from .nodetable import compress_boxes_bf16
+
+    out = []
+    for lv in levels:
+        if "lo_c" in lv:
+            lo_c, hi_c = lv["lo_c"], lv["hi_c"]
+        else:
+            lo_c, hi_c = compress_boxes_bf16(lv["lo"], lv["hi"])
+        out.append((jnp.asarray(lo_c), jnp.asarray(hi_c)))
+    return tuple(out)
 
 
 @jax.tree_util.register_pytree_node_class
@@ -180,6 +221,13 @@ class DeviceTable:
     levels: tuple            # per depth: (lo (n,d), hi (n,d), parent, slot)
     cold_lo: jnp.ndarray = None  # (U, d) unrefined-row MBBs (partial export)
     cold_hi: jnp.ndarray = None  # (U, d)
+    # compressed-MBB layout (from_table(compressed=True)): outward-rounded
+    # bf16 copies of every bound column.  Traversal against them yields a
+    # superset of the f32 hit set at half the bound bandwidth; the f32
+    # columns above stay authoritative for the certified re-check.
+    leaf_lo_c: jnp.ndarray = None  # (L, d) bf16
+    leaf_hi_c: jnp.ndarray = None  # (L, d) bf16
+    levels_c: tuple = None         # per depth: (lo_c, hi_c) bf16
     n_points: int = None
     leaf_ids_host: np.ndarray = None
     leaf_rows: np.ndarray = None  # (L,) table row behind each leaf slot
@@ -194,13 +242,18 @@ class DeviceTable:
         # reconstructions carry None, which lazy accessors rebuild
         return (
             (self.leaf_pts, self.leaf_ids, self.leaf_counts, self.leaf_lo,
-             self.leaf_hi, self.levels, self.cold_lo, self.cold_hi),
+             self.leaf_hi, self.levels, self.cold_lo, self.cold_hi,
+             self.leaf_lo_c, self.leaf_hi_c, self.levels_c),
             (),
         )
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         return cls(*children)
+
+    @property
+    def compressed(self) -> bool:
+        return self.leaf_lo_c is not None
 
     @property
     def n_leaves(self) -> int:
@@ -241,6 +294,7 @@ class DeviceTable:
         dtype=np.float32,
         *,
         partial: bool = False,
+        compressed: bool = False,
         stats: "UploadStats" = None,
     ) -> "DeviceTable":
         """Export ``table`` over ``points`` (a full upload).
@@ -251,9 +305,16 @@ class DeviceTable:
         what the table can actually return.  For a whole-dataset fully
         refined table the two are equal; a partial export counts only the
         refined points.
+
+        ``compressed=True`` additionally ships the outward-rounded bf16
+        bound columns (see ``NodeTable.device_layout``) the fused engine
+        traverses against, halving bound-column bandwidth; results stay
+        id-identical because every compressed box contains its f32 box and
+        the collection stage re-checks against the exact f32 columns.
         """
         lay = table.device_layout(
-            np.asarray(points), dtype=dtype, partial=partial
+            np.asarray(points), dtype=dtype, partial=partial,
+            compressed=compressed,
         )
         levels = _levels_to_jax(lay["levels"])
         sink = stats if stats is not None else UPLOAD_STATS
@@ -269,6 +330,9 @@ class DeviceTable:
             levels=levels,
             cold_lo=jnp.asarray(lay["cold_lo"]),
             cold_hi=jnp.asarray(lay["cold_hi"]),
+            leaf_lo_c=(jnp.asarray(lay["leaf_lo_c"]) if compressed else None),
+            leaf_hi_c=(jnp.asarray(lay["leaf_hi_c"]) if compressed else None),
+            levels_c=(_levels_c_to_jax(lay["levels"]) if compressed else None),
             n_points=int(lay["leaf_counts"].sum()),
             leaf_ids_host=lay["leaf_ids"],
             leaf_rows=lay["leaf_rows"],
@@ -277,11 +341,11 @@ class DeviceTable:
         )
 
     @classmethod
-    def from_index(cls, index, dtype=np.float32, *,
+    def from_index(cls, index, dtype=np.float32, *, compressed: bool = False,
                    stats: "UploadStats" = None) -> "DeviceTable":
         """From a built ``core.fmbi.Index`` (table + dataset)."""
         return cls.from_table(index.table, index.points, dtype=dtype,
-                              stats=stats)
+                              compressed=compressed, stats=stats)
 
     def apply_delta(self, table: NodeTable, points: np.ndarray) -> "DeviceTable":
         """Incremental refresh after host-side grafts: returns a *new*
@@ -335,10 +399,25 @@ class DeviceTable:
             lp = jnp.concatenate([lp, jnp.asarray(nb_pts)], axis=0)
             li = jnp.concatenate([li, jnp.asarray(nb_ids)], axis=0)
         cold = np.flatnonzero(table.unrefined)
-        levels = _levels_to_jax(
-            table.level_blocks(table.slot_map(leaf_rows, cold), dtype)
+        level_blocks = table.level_blocks(
+            table.slot_map(leaf_rows, cold), dtype
         )
+        levels = _levels_to_jax(level_blocks)
         counts = table.leaf_count[leaf_rows].astype(np.int32)
+        # compressed exports stay compressed across the delta: the bound
+        # columns are O(n_nodes) metadata recomputed host-side anyway, so
+        # re-rounding them costs nothing next to the point payload
+        new_lo = table.mbb_lo[leaf_rows].astype(dtype)
+        new_hi = table.mbb_hi[leaf_rows].astype(dtype)
+        if self.compressed:
+            from .nodetable import compress_boxes_bf16
+
+            lo_c, hi_c = compress_boxes_bf16(new_lo, new_hi)
+            leaf_lo_c = jnp.asarray(lo_c)
+            leaf_hi_c = jnp.asarray(hi_c)
+            levels_c = _levels_c_to_jax(level_blocks)
+        else:
+            leaf_lo_c = leaf_hi_c = levels_c = None
         ids_host = self.host_ids
         if len(new_rows):  # S can only widen when there are new leaves
             ids_host = np.concatenate(
@@ -356,11 +435,14 @@ class DeviceTable:
             leaf_pts=lp,
             leaf_ids=li,
             leaf_counts=jnp.asarray(counts),
-            leaf_lo=jnp.asarray(table.mbb_lo[leaf_rows].astype(dtype)),
-            leaf_hi=jnp.asarray(table.mbb_hi[leaf_rows].astype(dtype)),
+            leaf_lo=jnp.asarray(new_lo),
+            leaf_hi=jnp.asarray(new_hi),
             levels=levels,
             cold_lo=jnp.asarray(table.mbb_lo[cold].astype(dtype)),
             cold_hi=jnp.asarray(table.mbb_hi[cold].astype(dtype)),
+            leaf_lo_c=leaf_lo_c,
+            leaf_hi_c=leaf_hi_c,
+            levels_c=levels_c,
             n_points=int(counts.sum()),
             leaf_ids_host=ids_host,
             leaf_rows=leaf_rows,
@@ -415,6 +497,200 @@ def frontier_leaf_hits(
         leaf_hit = leaf_hit.at[slot].max(hit)
         prev = hit
     return leaf_hit[:n_slots].T
+
+
+# --------------------------------------------------------------------------
+# fused engine: tiled frontier + on-device pair packing (second generation)
+# --------------------------------------------------------------------------
+def _level_bounds(dev: DeviceTable, i: int):
+    """Bound columns the fused frontier tests level ``i`` against: the
+    outward-rounded bf16 copies when the export is compressed (half the
+    bandwidth, hit set a superset of f32 — never a false negative), else
+    the exact f32 columns."""
+    if dev.levels_c is not None:
+        return dev.levels_c[i]
+    lo, hi, _, _ = dev.levels[i]
+    return lo, hi
+
+
+@functools.partial(jax.jit, static_argnames=("use_kernel",))
+def _frontier_count(
+    dev: DeviceTable, los: jnp.ndarray, his: jnp.ndarray, use_kernel: bool
+):
+    """Fused frontier pass: the (Q, L + U) hit mask *plus* the number of
+    (query, leaf) candidate pairs, in one dispatch.
+
+    The mask stays on device (the pair-packing stage consumes it there);
+    only the scalar pair count crosses to the host, where it picks the
+    power-of-two pair bucket.  With ``use_kernel`` each level block's box
+    test runs as the VMEM-tiled Pallas kernel (``box_hits_tiled``); the
+    jnp path unrolls per-dimension (n_level, Q) planes exactly like
+    :func:`frontier_leaf_hits`.  A compressed export is traversed against
+    its bf16 bounds — the resulting superset costs only extra candidate
+    pairs, which the exact-f32 collection stage rejects."""
+    TRACE_COUNTS["frontier"] += 1
+    q = los.shape[0]
+    n_slots = dev.n_leaves + dev.n_cold
+    d = dev.dim
+    leaf_hit = jnp.zeros((n_slots + 1, q), dtype=bool)
+    prev = None
+    for i, (_, _, parent, slot) in enumerate(dev.levels):
+        lo_l, hi_l = _level_bounds(dev, i)
+        if use_kernel:
+            from ..kernels import ops as kops
+
+            hit = kops.box_hits_tiled(lo_l, hi_l, los, his) > 0
+        else:
+            hit = None
+            for j in range(d):
+                h = (
+                    lo_l[:, j].astype(jnp.float32)[:, None] <= his[:, j][None, :]
+                ) & (
+                    hi_l[:, j].astype(jnp.float32)[:, None] >= los[:, j][None, :]
+                )
+                hit = h if hit is None else hit & h
+        if prev is not None:
+            hit = hit & prev[parent]
+        leaf_hit = leaf_hit.at[slot].max(hit)
+        prev = hit
+    hits = leaf_hit[:n_slots].T
+    n_pairs = jnp.sum(hits[:, : dev.n_leaves].astype(jnp.int32))
+    return hits, n_pairs
+
+
+def _compact_idx(mask_flat, first: int, count: int, offset):
+    """Stream compaction via cumsum + binary search: the positions of set
+    bits ``offset + first .. offset + first + count`` of a flat 0/1 mask
+    (1-based ranks), plus the mask's total.
+
+    XLA lowers ``jnp.nonzero``/scatter compaction poorly on CPU (a 131k
+    mask costs ~6 ms); a monotone cumsum probed by ``searchsorted`` is
+    ~10x cheaper there and vectorizes fine on TPU.  ``offset`` is a traced
+    scalar so chunked callers share one compiled variant per chunk width.
+    Ranks past the total return clamped positions — mask with the returned
+    total."""
+    s = jnp.cumsum(mask_flat.astype(jnp.int32))
+    ranks = jnp.arange(first, first + count, dtype=jnp.int32) + offset
+    pos = jnp.searchsorted(s, ranks)
+    pos = jnp.minimum(pos, mask_flat.shape[0] - 1).astype(jnp.int32)
+    return pos, ranks, s[-1]
+
+
+@functools.partial(jax.jit, static_argnames=("pc", "use_kernel"))
+def _fused_pack_scan(
+    dev: DeviceTable,
+    los: jnp.ndarray,
+    his: jnp.ndarray,
+    hits: jnp.ndarray,
+    offset,
+    pc: int,
+    use_kernel: bool,
+):
+    """One dispatch from hit mask to qualifying ids: pack the chunk's
+    (query, leaf) pairs on device, scan them, and count per query.
+
+    Replaces the first-generation host round-trip (mask transfer,
+    ``np.nonzero``, bucket fill, re-upload) with on-device compaction —
+    the mask never leaves the device.  Row-major flattening keeps pairs
+    query-grouped, so chunk outputs concatenate into query-grouped ids.
+    The box test *and* containment run against the exact f32 columns —
+    this is the certified re-check that keeps a compressed traversal
+    id-identical.  Returns the (pc, S) ids-or-minus-one matrix, per-query
+    qualifying counts, and the chunk's id total."""
+    TRACE_COUNTS["pair_pack"] += 1
+    TRACE_COUNTS["window_collect"] += 1
+    flat = hits[:, : dev.n_leaves].reshape(-1)
+    pos, ranks, n_pairs = _compact_idx(flat, 1, pc, offset)
+    pair_valid = (ranks <= n_pairs).astype(jnp.int32)
+    q_idx = pos // dev.n_leaves
+    leaf_idx = pos % dev.n_leaves
+    if use_kernel:
+        from ..kernels import ops as kops
+
+        ids_or, pair_counts = kops.pair_window_ids(
+            los, his, dev.leaf_lo, dev.leaf_hi, dev.leaf_pts, dev.leaf_ids,
+            dev.leaf_counts, q_idx, leaf_idx, pair_valid,
+        )
+    else:
+        from ..kernels import ref as kref
+
+        ids_or, pair_counts = kref.pair_window_ids_ref(
+            los, his, dev.leaf_lo, dev.leaf_hi, dev.leaf_pts, dev.leaf_ids,
+            dev.leaf_counts, q_idx, leaf_idx, pair_valid,
+        )
+    per_query = jax.ops.segment_sum(
+        pair_counts, q_idx, num_segments=los.shape[0]
+    )
+    return ids_or, per_query, jnp.sum(pair_counts)
+
+
+@functools.partial(jax.jit, static_argnames=("r",))
+def _fused_id_pack(ids_or: jnp.ndarray, r: int):
+    """On-device qualifying-id compaction: the non-negative entries of the
+    (P, S) id matrix packed into an ``r``-slot bucket, in pair order.
+
+    Used when compiled kernels are available (TPU), where shipping the
+    packed ids beats shipping the (P, S) matrix; the CPU path extracts on
+    the host instead (transfer is cheap there, device compaction is not)."""
+    TRACE_COUNTS["id_pack"] += 1
+    flat = ids_or.reshape(-1)
+    pos, ranks, total = _compact_idx(flat >= 0, 1, r, jnp.int32(0))
+    return jnp.where(ranks <= total, flat[pos], -1)
+
+
+def _window_batch_fused(
+    dev: DeviceTable,
+    los: np.ndarray,
+    his: np.ndarray,
+    use_kernel: bool,
+    return_cold: bool,
+    device_id_pack: bool | None = None,
+):
+    """Fused window batch: device-resident from frontier to scanned ids.
+
+    Two dispatches in the common (single-chunk) case — frontier + pair
+    count, then pack + scan + count — with one scalar sync between them to
+    pick the pair bucket.  ``device_id_pack`` (default: only where
+    compiled kernels run) additionally compacts the qualifying ids on
+    device so the transfer is work-proportional; on CPU the (P, S) matrix
+    transfer + NumPy extraction is faster than any XLA compaction."""
+    if device_id_pack is None:
+        from ..kernels import ops as kops
+
+        device_id_pack = kops.compiled_supported()
+    los = np.atleast_2d(np.asarray(los, dtype=np.float32))
+    his = np.atleast_2d(np.asarray(his, dtype=np.float32))
+    (los, his), q0 = _pad_batch([los, his], [BIG, -BIG])
+    losj, hisj = jnp.asarray(los), jnp.asarray(his)
+    hits, n_pairs = _frontier_count(dev, losj, hisj, use_kernel)
+    p0 = int(n_pairs)
+    cold = None
+    if return_cold:
+        cold = np.asarray(hits[:q0, dev.n_leaves :])
+    if p0 == 0:
+        empty = [np.zeros(0, dtype=np.int64) for _ in range(q0)]
+        return (empty, cold) if return_cold else empty
+    parts = []
+    per_query = np.zeros(los.shape[0], dtype=np.int64)
+    for a in range(0, p0, PAIR_CHUNK):
+        pc = _pow2(min(p0 - a, PAIR_CHUNK))
+        ids_or, pq, total = _fused_pack_scan(
+            dev, losj, hisj, hits, np.int32(a), pc, use_kernel
+        )
+        per_query += np.asarray(pq, dtype=np.int64)
+        if device_id_pack:
+            t = int(total)
+            if t:
+                packed = np.asarray(_fused_id_pack(ids_or, _pow2(t)))[:t]
+                parts.append(packed.astype(np.int64))
+        else:
+            arr = np.asarray(ids_or)
+            parts.append(arr[arr >= 0].astype(np.int64))
+    all_ids = (
+        np.concatenate(parts) if parts else np.zeros(0, dtype=np.int64)
+    )
+    res = np.split(all_ids, np.cumsum(per_query[:q0])[:-1])
+    return (res, cold) if return_cold else res
 
 
 # --------------------------------------------------------------------------
@@ -478,6 +754,7 @@ def window_query_batch_jax(
     his: np.ndarray,
     *,
     use_kernel: bool | None = None,
+    fused: bool | None = None,
     return_cold: bool = False,
 ) -> list[np.ndarray]:
     """Compiled batched window query: per-query arrays of dataset row ids.
@@ -489,6 +766,12 @@ def window_query_batch_jax(
     touches; the pair list streams in power-of-two buckets capped at
     ``PAIR_CHUNK`` so compiled variants stay bounded.
 
+    ``fused`` (default on; ``REPRO_FUSED=0`` pins the first-generation
+    path) keeps pair packing and id compaction on device — the frontier
+    mask and candidate matrices never cross the host boundary, only bucket
+    sizes (scalars) and the packed result ids do — and is the only path
+    that exploits a compressed (bf16-MBB) export.
+
     On a *partial* export the returned ids cover only the refined leaves.
     ``return_cold=True`` additionally returns the (Q, U) cold-hit mask the
     frontier surfaced — per query, which unrefined rows it reached.  A
@@ -498,6 +781,10 @@ def window_query_batch_jax(
     """
     if use_kernel is None:
         use_kernel = _use_kernel_default()
+    if fused is None:
+        fused = _fused_default()
+    if fused:
+        return _window_batch_fused(dev, los, his, use_kernel, return_cold)
     los = np.atleast_2d(np.asarray(los, dtype=np.float32))
     his = np.atleast_2d(np.asarray(his, dtype=np.float32))
     # padding boxes are inverted: they can never intersect a leaf
@@ -608,12 +895,189 @@ def _knn_core(
     return ids, d2k, exact
 
 
+# --------------------------------------------------------------------------
+# fused k-NN: compressed-bound candidate selection + on-device escalation
+# --------------------------------------------------------------------------
+@functools.partial(
+    jax.jit, static_argnames=("k", "n_candidate_leaves", "use_kernel")
+)
+def _knn_core_fused(
+    dev: DeviceTable,
+    qs: jnp.ndarray,
+    b0,
+    k: int,
+    n_candidate_leaves: int,
+    use_kernel: bool,
+):
+    """Fused-generation k-NN round.
+
+    Differences to :func:`_knn_core`: candidate leaves are ranked by the
+    *compressed* (bf16) box mindists when the export carries them — an
+    outward-rounded box only shrinks the mindist, so the bound is a
+    superset-safe underestimate and the exactness certificate derived
+    from it stays conservative (kth <= compressed mindist <= f32 mindist
+    — certifying against the underestimate is strictly harder, never
+    wrong); the candidate scan streams through the fused pair kernel
+    (``pair_dist2``) instead of an XLA-materialized (Q, C*S, d) gather;
+    and outputs are padded to the c-independent width ``min(k, L*S)`` so
+    escalation rounds scatter into one fixed result buffer."""
+    TRACE_COUNTS["knn_core"] += 1
+    q = qs.shape[0]
+    n_l, s, d = dev.leaf_pts.shape
+    c = min(n_candidate_leaves, n_l)
+    if dev.leaf_lo_c is not None:
+        blo, bhi = dev.leaf_lo_c, dev.leaf_hi_c
+    else:
+        blo, bhi = dev.leaf_lo, dev.leaf_hi
+    mind = jnp.zeros((q, n_l), dtype=jnp.float32)
+    for j in range(d):
+        bl = blo[:, j].astype(jnp.float32)
+        bh = bhi[:, j].astype(jnp.float32)
+        g = jnp.maximum(bl[None, :] - qs[:, j][:, None], 0.0) + jnp.maximum(
+            qs[:, j][:, None] - bh[None, :], 0.0
+        )
+        mind = mind + g * g
+    _, cand = jax.lax.top_k(-mind, c)
+    if use_kernel:
+        from ..kernels import ops as kops
+
+        q_rep = jnp.repeat(
+            jnp.arange(q, dtype=jnp.int32)[:, None], c, axis=1
+        ).reshape(-1)
+        d2 = kops.pair_dist2(
+            qs, dev.leaf_pts, dev.leaf_counts, q_rep, cand.reshape(-1)
+        ).reshape(q, c, s)
+    else:
+        flat_pts = dev.leaf_pts[cand].reshape(q, c * s, d)
+        d2 = jnp.sum((flat_pts - qs[:, None, :]) ** 2, axis=2).reshape(
+            q, c, s
+        )
+    kk = min(k, c * s)
+    kl = min(kk, s)
+    negl, til = jax.lax.top_k(-d2, kl)                    # (Q, C, kl)
+    negd, tim = jax.lax.top_k(negl.reshape(q, c * kl), kk)
+    ti = (
+        jnp.take_along_axis(til.reshape(q, c * kl), tim, axis=1)
+        + (tim // kl) * s
+    )
+    leaf_sel = jnp.take_along_axis(cand, ti // s, axis=1)
+    ids = dev.leaf_ids[leaf_sel, ti % s]
+    d2k = -negd
+    if c >= n_l:
+        exact = jnp.ones(q, dtype=bool)
+    elif kk < k:
+        exact = jnp.zeros(q, dtype=bool)
+    else:
+        masked = mind.at[jnp.arange(q)[:, None], cand].set(jnp.inf)
+        unscanned = jnp.min(masked, axis=1)
+        exact = d2k[:, -1] <= unscanned
+    kf = min(k, n_l * s)
+    if kf > kk:  # c-independent output width for the escalation buffers
+        ids = jnp.concatenate(
+            [ids, jnp.full((q, kf - kk), -1, dtype=ids.dtype)], axis=1
+        )
+        d2k = jnp.concatenate(
+            [d2k, jnp.full((q, kf - kk), BIG, dtype=d2k.dtype)], axis=1
+        )
+    # failed-certificate count over the real (non-padding) rows, computed
+    # in the same dispatch: the only value the host syncs per round
+    nfail = jnp.sum(
+        (~exact) & (jnp.arange(q, dtype=jnp.int32) < b0)
+    )
+    return ids, d2k, exact, nfail
+
+
+@functools.partial(jax.jit, static_argnames=("p",))
+def _knn_pending(qs: jnp.ndarray, exact: jnp.ndarray, b0, p: int):
+    """On-device escalation selection: pack the failed queries' indices
+    into a ``p``-slot bucket and gather their coordinates — the host only
+    learns *how many* certificates failed, never re-ships query rows.
+
+    ``b0`` masks the batch's pow2 padding rows (their certificates are
+    meaningless and must not consume bucket slots)."""
+    TRACE_COUNTS["knn_sel"] += 1
+    fail = (~exact) & (jnp.arange(exact.shape[0]) < b0)
+    (idx,) = jnp.nonzero(fail, size=p, fill_value=0)
+    idx = idx.astype(jnp.int32)
+    valid = jnp.arange(p, dtype=jnp.int32) < jnp.sum(fail.astype(jnp.int32))
+    return idx, valid, qs[idx]
+
+
+@jax.jit
+def _knn_merge_round(ids_buf, d2_buf, exact_buf, b0, idx, valid, ids_n,
+                     d2_n, exact_n):
+    """Scatter an escalation round's results over the fixed buffers.
+
+    Padding slots (``valid`` False) are routed to an out-of-range index
+    and dropped — ``fill_value=0`` slots must not race a genuine update
+    of query 0 (duplicate-index scatter order is undefined).  Returns the
+    merged buffers plus the remaining failed-certificate count, so each
+    escalation round costs the host exactly one scalar sync."""
+    n = ids_buf.shape[0]
+    idx_w = jnp.where(valid, idx, n)
+    ids_buf = ids_buf.at[idx_w].set(ids_n, mode="drop")
+    d2_buf = d2_buf.at[idx_w].set(d2_n, mode="drop")
+    exact_buf = exact_buf.at[idx_w].set(exact_n, mode="drop")
+    nfail = jnp.sum(
+        (~exact_buf) & (jnp.arange(n, dtype=jnp.int32) < b0)
+    )
+    return ids_buf, d2_buf, exact_buf, nfail
+
+
+def _knn_batch_fused(
+    dev: DeviceTable,
+    qs: np.ndarray,
+    k: int,
+    use_kernel: bool,
+    n_candidate_leaves: int | None,
+    return_dists: bool,
+):
+    """Fused k-NN batch: budget escalation without host selection.
+
+    Each round reruns only the queries whose certificate failed — packed,
+    gathered, and scattered back on device; the host syncs one scalar per
+    round (the failure count, which sizes the next power-of-two bucket)
+    and transfers results once, after every certificate holds."""
+    q0 = qs.shape[0]
+    s = dev.leaf_size
+    cap = _pow2(dev.n_leaves)
+    if n_candidate_leaves is None:
+        c = min(_pow2(max(8, -(-2 * k) // s)), cap)
+    else:
+        c = min(_pow2(max(n_candidate_leaves, 1)), cap)
+    (batch,), b0 = _pad_batch([qs], [0.0])
+    qsj = jnp.asarray(batch)
+    b0j = np.int32(b0)
+    ids_buf, d2_buf, exact_buf, nfail = _knn_core_fused(
+        dev, qsj, b0j, k, c, use_kernel
+    )
+    n_fail = int(nfail) if c < dev.n_leaves else 0
+    while n_fail:
+        c = min(c * 2, cap)
+        idx, valid, qsel = _knn_pending(qsj, exact_buf, b0j, _pow2(n_fail))
+        ids_n, d2_n, exact_n, _ = _knn_core_fused(
+            dev, qsel, np.int32(0), k, c, use_kernel
+        )
+        ids_buf, d2_buf, exact_buf, nfail = _knn_merge_round(
+            ids_buf, d2_buf, exact_buf, b0j, idx, valid, ids_n, d2_n,
+            exact_n
+        )
+        n_fail = int(nfail) if c < dev.n_leaves else 0
+    m = min(k, dev.live_points())
+    ids, d2k = jax.device_get((ids_buf[:b0, :m], d2_buf[:b0, :m]))
+    results = [ids[j].astype(np.int64) for j in range(q0)]
+    if return_dists:
+        return results, [d2k[j] for j in range(q0)]
+    return results
+
+
 def knn_query_batch_jax(
     dev: DeviceTable,
     qs: np.ndarray,
     k: int,
     *,
     use_kernel: bool | None = None,
+    fused: bool | None = None,
     n_candidate_leaves: int | None = None,
     return_dists: bool = False,
 ) -> list[np.ndarray]:
@@ -639,6 +1103,8 @@ def knn_query_batch_jax(
     (mindist of each cold box against the k-th returned distance)."""
     if use_kernel is None:
         use_kernel = _use_kernel_default()
+    if fused is None:
+        fused = _fused_default()
     qs = np.atleast_2d(np.asarray(qs, dtype=np.float32))
     q0 = qs.shape[0]
     if dev.n_leaves == 0:  # partial export before the first graft: the
@@ -647,6 +1113,10 @@ def knn_query_batch_jax(
         if return_dists:
             return empty, [np.zeros(0, dtype=np.float32) for _ in range(q0)]
         return empty
+    if fused:
+        return _knn_batch_fused(
+            dev, qs, k, use_kernel, n_candidate_leaves, return_dists
+        )
     s = dev.leaf_size
     cap = _pow2(dev.n_leaves)
     if n_candidate_leaves is None:

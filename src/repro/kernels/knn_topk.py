@@ -20,6 +20,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 DEFAULT_QT = 256
@@ -118,3 +119,107 @@ def pairwise_dist2(
         out_shape=jax.ShapeDtypeStruct((nq, n_p), jnp.float32),
         interpret=interpret,
     )(queries, points, valid)
+
+
+# --------------------------------------------------------------------------
+# second-generation tiled kernels (fused traversal + scan; see ops.py)
+# --------------------------------------------------------------------------
+def _leaf_mindist_kernel(q_ref, lo_ref, hi_ref, out_ref):
+    q = q_ref[...]                          # (qt, d) float32
+    lo = lo_ref[...].astype(jnp.float32)    # (lt, d) bounds (f32 or bf16)
+    hi = hi_ref[...].astype(jnp.float32)
+    acc = jnp.zeros((q.shape[0], lo.shape[0]), jnp.float32)
+    for k in range(q.shape[1]):             # static unroll over dimensions:
+        qk = q[:, k][:, None]               # one (qt, lt) plane at a time
+        g = jnp.maximum(lo[:, k][None, :] - qk, 0.0) + jnp.maximum(
+            qk - hi[:, k][None, :], 0.0
+        )
+        acc = acc + g * g
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("qt", "lt", "interpret"))
+def leaf_mindist_tiled(
+    queries: jnp.ndarray,   # (nq, d) float32, nq % qt == 0
+    leaf_lo: jnp.ndarray,   # (L, d) leaf MBB lows (f32 or bf16), L % lt == 0
+    leaf_hi: jnp.ndarray,   # (L, d)
+    *,
+    qt: int = 128,
+    lt: int = DEFAULT_PT,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """(nq, L) squared box mindists, VMEM-tiled over both axes.
+
+    The candidate-selection stage of the device k-NN engine.  Bound tiles
+    may be bf16 (the compressed-MBB layout): outward rounding only widens a
+    box, so a bf16 mindist never exceeds the f32 mindist — candidate
+    selection stays a superset-safe underestimate and the exactness
+    certificate derived from it is conservative (see queries_jax)."""
+    nq, d = queries.shape
+    n_l = leaf_lo.shape[0]
+    assert nq % qt == 0 and n_l % lt == 0, "pad inputs to tile multiples"
+    grid = (nq // qt, n_l // lt)
+    return pl.pallas_call(
+        _leaf_mindist_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((qt, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((lt, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((lt, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((qt, lt), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nq, n_l), jnp.float32),
+        interpret=interpret,
+    )(queries, leaf_lo, leaf_hi)
+
+
+def _pair_dist2_kernel(q_idx_ref, leaf_idx_ref, q_ref, pts_ref, cnt_ref,
+                       out_ref):
+    q = q_ref[...]                          # (1, d) this pair's query point
+    p = pts_ref[...]                        # (1, S, d) this pair's leaf block
+    cnt = cnt_ref[...]                      # (1,) live slots in the block
+    s = p.shape[1]
+    acc = jnp.zeros((1, s), jnp.float32)
+    for k in range(p.shape[2]):             # static unroll over dimensions
+        diff = p[..., k] - q[:, k][:, None]
+        acc = acc + diff * diff
+    valid = jax.lax.broadcasted_iota(jnp.int32, (1, s), 1) < cnt[:, None]
+    big = jnp.asarray(jnp.finfo(jnp.float32).max, jnp.float32)
+    out_ref[...] = jnp.where(valid, acc, big)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pair_dist2(
+    queries: jnp.ndarray,     # (nq, d) float32 query points
+    leaf_pts: jnp.ndarray,    # (L, S, d) float32 leaf-blocked points
+    leaf_counts: jnp.ndarray, # (L,) int32 live slots per block
+    q_idx: jnp.ndarray,       # (P,) int32 query of each candidate pair
+    leaf_idx: jnp.ndarray,    # (P,) int32 leaf slot of each candidate pair
+    *,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """Fused (query, leaf) candidate scan: (P, S) squared distances.
+
+    Each pair's leaf block streams from the (L, S, d) table straight into
+    VMEM through scalar-prefetch BlockSpec index maps — no XLA-materialized
+    (P, S, d) gather.  Invalid slots carry float32 max so they sort last in
+    the top-k merge."""
+    n_p = q_idx.shape[0]
+    _, s, d = leaf_pts.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(n_p,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, q, l: (q[i], 0)),
+            pl.BlockSpec((1, s, d), lambda i, q, l: (l[i], 0, 0)),
+            pl.BlockSpec((1,), lambda i, q, l: (l[i],)),
+        ],
+        out_specs=pl.BlockSpec((1, s), lambda i, q, l: (i, 0)),
+    )
+    return pl.pallas_call(
+        _pair_dist2_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((n_p, s), jnp.float32),
+        interpret=interpret,
+    )(q_idx.astype(jnp.int32), leaf_idx.astype(jnp.int32),
+      queries, leaf_pts, leaf_counts)

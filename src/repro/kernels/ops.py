@@ -196,3 +196,100 @@ window_count_ref = ref.window_count_ref
 window_count_gathered_ref = ref.window_count_gathered_ref
 window_mask_gathered_ref = ref.window_mask_gathered_ref
 gathered_dist2_ref = ref.gathered_dist2_ref
+
+
+def compiled_supported() -> bool:
+    """True when ``interpret=False`` pallas_call can actually compile on
+    the attached backend (Mosaic = TPU only; the CPU backend raises)."""
+    return _on_tpu()
+
+
+# --------------------------------------------------------------------------
+# second-generation fused/tiled wrappers (the queries_jax hot path)
+# --------------------------------------------------------------------------
+def box_hits_tiled(lo, hi, qlo, qhi, *, nt: int | None = None,
+                   qt: int | None = None, interpret: bool | None = None):
+    """(n, nq) box-intersection mask via the VMEM-tiled kernel.
+
+    ``lo``/``hi`` may be bf16 (compressed-MBB storage).  Padding boxes are
+    inverted (lo = +max, hi = -max) and padding query windows likewise, so
+    neither can ever intersect; both axes are sliced back."""
+    if interpret is None:
+        interpret = interpret_default()
+    lo = jnp.asarray(lo)
+    hi = jnp.asarray(hi)
+    qlo = jnp.asarray(qlo, jnp.float32)
+    qhi = jnp.asarray(qhi, jnp.float32)
+    n, d = lo.shape
+    if nt is None or qt is None:
+        nt0, qt0 = _wf.vmem_tiles(n, qlo.shape[0], d,
+                                  in_bytes=lo.dtype.itemsize)
+        nt = nt if nt is not None else nt0
+        qt = qt if qt is not None else qt0
+    big = float(jnp.finfo(jnp.float32).max)
+    lo_p, n0 = _pad_rows(lo, nt, big)
+    hi_p, _ = _pad_rows(hi, nt, -big)
+    qlo_p, q0 = _pad_rows(qlo, qt, big)
+    qhi_p, _ = _pad_rows(qhi, qt, -big)
+    out = _wf.box_hits_tiled(lo_p, hi_p, qlo_p, qhi_p, nt=nt, qt=qt,
+                             interpret=interpret)
+    return out[:n0, :q0]
+
+
+def pair_window_ids(qlo, qhi, leaf_lo, leaf_hi, leaf_pts, leaf_ids,
+                    leaf_counts, q_idx, leaf_idx, pair_valid, *,
+                    interpret: bool | None = None):
+    """Fused (query, leaf) pair window scan: ``(ids_or (P, S), counts)``.
+
+    One grid step per pair; the pair's leaf block is gathered into VMEM by
+    the scalar-prefetch index maps, so no (P, S, d) temporary exists."""
+    if interpret is None:
+        interpret = interpret_default()
+    return _wf.pair_window_ids(
+        jnp.asarray(qlo, jnp.float32), jnp.asarray(qhi, jnp.float32),
+        leaf_lo, leaf_hi, leaf_pts, leaf_ids, leaf_counts,
+        q_idx, leaf_idx, pair_valid, interpret=interpret,
+    )
+
+
+def leaf_mindist_tiled(queries, leaf_lo, leaf_hi, *, qt: int = 128,
+                       lt: int | None = None,
+                       interpret: bool | None = None):
+    """(nq, L) squared box mindists via the VMEM-tiled kernel.
+
+    ``leaf_lo``/``leaf_hi`` may be bf16.  Padding leaves carry degenerate
+    far-away boxes (lo = hi = +max) whose mindist overflows to +inf, so
+    they can never be selected; both axes are sliced back."""
+    if interpret is None:
+        interpret = interpret_default()
+    q = jnp.asarray(queries, jnp.float32)
+    lo = jnp.asarray(leaf_lo)
+    hi = jnp.asarray(leaf_hi)
+    if lt is None:
+        nt0, _ = _wf.vmem_tiles(lo.shape[0], q.shape[0], lo.shape[1],
+                                in_bytes=lo.dtype.itemsize)
+        lt = nt0
+    big = float(jnp.finfo(jnp.float32).max)
+    qp, nq = _pad_rows(q, qt, 0.0)
+    lo_p, n_l = _pad_rows(lo, lt, big)
+    hi_p, _ = _pad_rows(hi, lt, big)
+    out = _knn.leaf_mindist_tiled(qp, lo_p, hi_p, qt=qt, lt=lt,
+                                  interpret=interpret)
+    return out[:nq, :n_l]
+
+
+def pair_dist2(queries, leaf_pts, leaf_counts, q_idx, leaf_idx, *,
+               interpret: bool | None = None):
+    """Fused (query, leaf) candidate distances: (P, S), invalid = f32 max."""
+    if interpret is None:
+        interpret = interpret_default()
+    return _knn.pair_dist2(
+        jnp.asarray(queries, jnp.float32), leaf_pts, leaf_counts,
+        q_idx, leaf_idx, interpret=interpret,
+    )
+
+
+box_hits_tiled_ref = ref.box_hits_tiled_ref
+pair_window_ids_ref = ref.pair_window_ids_ref
+leaf_mindist_ref = ref.leaf_mindist_ref
+pair_dist2_ref = ref.pair_dist2_ref

@@ -67,3 +67,69 @@ def gathered_dist2_ref(queries, points, valid):
     )
     big = jnp.finfo(jnp.float32).max
     return jnp.where(valid > 0, d2, big)
+
+
+def box_hits_tiled_ref(lo, hi, qlo, qhi):
+    """Reference box-intersection mask: (n, nq), f32 compare after widening
+    any bf16 storage (matching the kernel's in-register cast)."""
+    lo = lo.astype(jnp.float32)
+    hi = hi.astype(jnp.float32)
+    inter = (lo[:, None, :] <= qhi[None, :, :]) & (
+        hi[:, None, :] >= qlo[None, :, :]
+    )
+    return jnp.all(inter, axis=-1).astype(jnp.int32)
+
+
+def pair_window_ids_ref(qlo, qhi, leaf_lo, leaf_hi, leaf_pts, leaf_ids,
+                        leaf_counts, q_idx, leaf_idx, pair_valid):
+    """Reference fused pair scan: plain gathers, ids-or-minus-one."""
+    lo_p = qlo[q_idx]                         # (P, d)
+    hi_p = qhi[q_idx]
+    pts = leaf_pts[leaf_idx]                  # (P, S, d)
+    ids = leaf_ids[leaf_idx]                  # (P, S)
+    s = leaf_pts.shape[1]
+    valid = (
+        jnp.arange(s, dtype=jnp.int32)[None, :]
+        < leaf_counts[leaf_idx][:, None]
+    ) & (pair_valid[:, None] > 0)
+    box_ok = jnp.all(
+        (leaf_lo[leaf_idx].astype(jnp.float32) <= hi_p)
+        & (leaf_hi[leaf_idx].astype(jnp.float32) >= lo_p),
+        axis=1,
+    )
+    inside = jnp.all(
+        (pts >= lo_p[:, None, :]) & (pts <= hi_p[:, None, :]), axis=2
+    ) & valid & box_ok[:, None]
+    counts = jnp.sum(inside.astype(jnp.int32), axis=1)
+    return jnp.where(inside, ids, -1), counts
+
+
+def leaf_mindist_ref(queries, leaf_lo, leaf_hi):
+    """Reference squared box mindists: (nq, L).
+
+    Accumulates per dimension in the kernel's order so results are
+    bit-identical (a fused jnp.sum can round differently by one ulp)."""
+    lo = leaf_lo.astype(jnp.float32)
+    hi = leaf_hi.astype(jnp.float32)
+    acc = jnp.zeros((queries.shape[0], lo.shape[0]), jnp.float32)
+    for k in range(queries.shape[1]):
+        qk = queries[:, k][:, None]
+        g = jnp.maximum(lo[:, k][None, :] - qk, 0.0) + jnp.maximum(
+            qk - hi[:, k][None, :], 0.0
+        )
+        acc = acc + g * g
+    return acc
+
+
+def pair_dist2_ref(queries, leaf_pts, leaf_counts, q_idx, leaf_idx):
+    """Reference fused pair distances: plain gathers, invalid = f32 max."""
+    q = queries[q_idx]                        # (P, d)
+    pts = leaf_pts[leaf_idx]                  # (P, S, d)
+    s = leaf_pts.shape[1]
+    d2 = jnp.sum((pts - q[:, None, :]) ** 2, axis=2)
+    valid = (
+        jnp.arange(s, dtype=jnp.int32)[None, :]
+        < leaf_counts[leaf_idx][:, None]
+    )
+    big = jnp.finfo(jnp.float32).max
+    return jnp.where(valid, d2, big)

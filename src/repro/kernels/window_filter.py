@@ -26,10 +26,40 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 DEFAULT_QT = 128
 DEFAULT_PT = 512
+
+# VMEM budget for one tiled block's working set (inputs + output), well
+# under the ~16 MB/core so the pipeline can keep two blocks in flight
+VMEM_TILE_BUDGET = 4 * 1024 * 1024
+
+
+def vmem_tiles(n: int, q: int, d: int, in_bytes: int = 4,
+               budget: int = VMEM_TILE_BUDGET) -> tuple[int, int]:
+    """(nt, qt) tile sizes for an (n x q) box-test grid whose per-block
+    working set — two (nt, d) bound tiles, two (qt, d) query tiles, and the
+    (nt, qt) output plane — fits ``budget`` bytes of VMEM.
+
+    Tiles respect the TPU minimums (8 sublanes x 128 lanes for f32; the
+    bf16 bound tiles are cast to f32 in-register, so f32 minimums apply)
+    and shrink the box axis first: the query axis is the broadcast axis,
+    so a wide qt amortizes bound loads across more queries."""
+    qt = min(128, _pow2_ceil(q))
+    nt = 1024
+
+    def block_bytes(nt_, qt_):
+        return 2 * nt_ * d * in_bytes + 2 * qt_ * d * 4 + nt_ * qt_ * 4
+
+    while nt > 8 and block_bytes(nt, qt) > budget:
+        nt //= 2
+    return max(nt, 8), max(qt, 8)
+
+
+def _pow2_ceil(x: int) -> int:
+    return 1 << max(0, (int(x) - 1).bit_length())
 
 
 def _tiles_kernel(lo_ref, hi_ref, p_ref, valid_ref, out_ref):
@@ -176,3 +206,148 @@ def window_count_gathered(
         out_shape=jax.ShapeDtypeStruct((nq,), jnp.int32),
         interpret=interpret,
     )(lo, hi, points, valid)
+
+
+# --------------------------------------------------------------------------
+# second-generation tiled kernels (fused traversal + scan; see ops.py)
+# --------------------------------------------------------------------------
+def _box_hits_kernel(lo_ref, hi_ref, qlo_ref, qhi_ref, out_ref):
+    lo = lo_ref[...].astype(jnp.float32)    # (nt, d) box lows (f32 or bf16)
+    hi = hi_ref[...].astype(jnp.float32)    # (nt, d)
+    qlo = qlo_ref[...]                      # (qt, d) query lows, f32
+    qhi = qhi_ref[...]                      # (qt, d)
+    acc = None
+    for k in range(lo.shape[1]):            # static unroll over dimensions:
+        h = (lo[:, k][:, None] <= qhi[:, k][None, :]) & (
+            hi[:, k][:, None] >= qlo[:, k][None, :]
+        )                                   # one (nt, qt) plane at a time
+        acc = h if acc is None else acc & h
+    out_ref[...] = acc.astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("nt", "qt", "interpret"))
+def box_hits_tiled(
+    lo: jnp.ndarray,        # (n, d) box lows (f32, or outward-rounded bf16)
+    hi: jnp.ndarray,        # (n, d)
+    qlo: jnp.ndarray,       # (nq, d) float32 query window lows, nq % qt == 0
+    qhi: jnp.ndarray,       # (nq, d)
+    *,
+    nt: int = DEFAULT_PT,
+    qt: int = DEFAULT_QT,
+    interpret: bool = True,
+) -> jnp.ndarray:
+    """(n, nq) int32 box-intersection mask, VMEM-tiled over both axes.
+
+    The per-level frontier box test of the device query engine: one level
+    block's MBB columns against the whole query batch.  Bound tiles may be
+    bf16 (the compressed-MBB layout) — they are widened to f32 in-register,
+    so only the *storage* (and therefore the HBM traffic) is halved; the
+    comparison itself is exact on the outward-rounded bounds, which keeps
+    the hit mask a superset of the f32 mask (never a false negative)."""
+    n, d = lo.shape
+    nq = qlo.shape[0]
+    assert n % nt == 0 and nq % qt == 0, "pad inputs to tile multiples"
+    grid = (n // nt, nq // qt)
+    return pl.pallas_call(
+        _box_hits_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((nt, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((nt, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((qt, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((qt, d), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((nt, qt), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((n, nq), jnp.int32),
+        interpret=interpret,
+    )(lo, hi, qlo, qhi)
+
+
+def _pair_window_ids_kernel(
+    q_idx_ref, leaf_idx_ref, pv_ref,        # scalar prefetch (SMEM)
+    qlo_ref, qhi_ref, llo_ref, lhi_ref, pts_ref, ids_ref, cnt_ref,
+    out_ids_ref, out_cnt_ref,
+):
+    i = pl.program_id(0)
+    qlo = qlo_ref[...]                      # (1, d) this pair's query box
+    qhi = qhi_ref[...]
+    llo = llo_ref[...].astype(jnp.float32)  # (1, d) exact f32 leaf MBB
+    lhi = lhi_ref[...].astype(jnp.float32)
+    p = pts_ref[...]                        # (1, S, d) this pair's leaf block
+    ids = ids_ref[...]                      # (1, S)
+    cnt = cnt_ref[...]                      # (1,) live slots in the block
+    s = p.shape[1]
+    valid = (
+        jax.lax.broadcasted_iota(jnp.int32, (1, s), 1) < cnt[:, None]
+    ) & (pv_ref[i] > 0)
+    # certified f32 re-check of the pair's leaf box: a pair surfaced by the
+    # widened bf16 frontier whose exact MBB misses the window is dropped
+    # here, before its slots can cost a containment test
+    box_ok = None
+    for k in range(p.shape[2]):
+        ok = (llo[:, k] <= qhi[:, k]) & (lhi[:, k] >= qlo[:, k])
+        box_ok = ok if box_ok is None else box_ok & ok
+    acc = valid & box_ok[:, None]
+    for k in range(p.shape[2]):             # exact containment on f32 points
+        pk = p[..., k]                      # (1, S)
+        acc = acc & (pk >= qlo[:, k][:, None]) & (pk <= qhi[:, k][:, None])
+    out_ids_ref[...] = jnp.where(acc, ids, -1)
+    out_cnt_ref[...] = jnp.sum(acc.astype(jnp.int32), axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def pair_window_ids(
+    qlo: jnp.ndarray,       # (nq, d) float32 query window lows
+    qhi: jnp.ndarray,       # (nq, d)
+    leaf_lo: jnp.ndarray,   # (L, d) exact f32 leaf MBB lows
+    leaf_hi: jnp.ndarray,   # (L, d)
+    leaf_pts: jnp.ndarray,  # (L, S, d) float32 leaf-blocked points
+    leaf_ids: jnp.ndarray,  # (L, S) int32 dataset rows, pad = -1
+    leaf_counts: jnp.ndarray,  # (L,) int32 live slots per block
+    q_idx: jnp.ndarray,     # (P,) int32 query of each candidate pair
+    leaf_idx: jnp.ndarray,  # (P,) int32 leaf slot of each candidate pair
+    pair_valid: jnp.ndarray,  # (P,) int32 padding mask
+    *,
+    interpret: bool = True,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Fused (query, leaf) pair scan: ``(ids_or (P, S), counts (P,))``.
+
+    ``ids_or[p, s]`` is the dataset row of slot ``s`` of pair ``p``'s leaf
+    when the point lies inside the pair's query window, else ``-1``; the
+    device packing stage compacts the non-negatives.  The pair's leaf block
+    and id row are pulled straight from the (L, S, d) leaf table into VMEM
+    through scalar-prefetch BlockSpec index maps — the gather that the
+    first-generation path materialized as an XLA (P, S, d) temporary is
+    fused into the kernel's block streaming."""
+    n_p = q_idx.shape[0]
+    _, s, d = leaf_pts.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(n_p,),
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, q, l, pv: (q[i], 0)),
+            pl.BlockSpec((1, d), lambda i, q, l, pv: (q[i], 0)),
+            pl.BlockSpec((1, d), lambda i, q, l, pv: (l[i], 0)),
+            pl.BlockSpec((1, d), lambda i, q, l, pv: (l[i], 0)),
+            pl.BlockSpec((1, s, d), lambda i, q, l, pv: (l[i], 0, 0)),
+            pl.BlockSpec((1, s), lambda i, q, l, pv: (l[i], 0)),
+            pl.BlockSpec((1,), lambda i, q, l, pv: (l[i],)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, s), lambda i, q, l, pv: (i, 0)),
+            pl.BlockSpec((1,), lambda i, q, l, pv: (i,)),
+        ],
+    )
+    return pl.pallas_call(
+        _pair_window_ids_kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((n_p, s), jnp.int32),
+            jax.ShapeDtypeStruct((n_p,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        q_idx.astype(jnp.int32), leaf_idx.astype(jnp.int32),
+        pair_valid.astype(jnp.int32),
+        qlo, qhi, leaf_lo, leaf_hi, leaf_pts, leaf_ids, leaf_counts,
+    )

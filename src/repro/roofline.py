@@ -335,6 +335,63 @@ def analytic_hbm_bytes(cfg, shape, n_micro: int = 1) -> float:
     return pbytes + cache
 
 
+# --------------------------------------------------------------------------
+# query-kernel rooflines: achieved vs peak bandwidth per fused kernel
+# --------------------------------------------------------------------------
+# Minimum-traffic models for the PR-7 tiled kernel family: each counts the
+# bytes a perfect cache would still have to move (every input once, every
+# output once).  Achieved GB/s from a wall-clock measurement over these
+# bytes is therefore a *lower bound* on true traffic — re-streamed tiles
+# only push the real number higher, so peak_fraction is conservative.
+
+def bytes_box_hits_tiled(n: int, nq: int, d: int,
+                         box_bytes: int = 4) -> int:
+    """(n boxes x nq windows) intersection-mask kernel traffic.
+
+    ``box_bytes=2`` models the compressed bf16-MBB layout — the knob whose
+    bandwidth halving this roofline exists to show."""
+    return 2 * n * d * box_bytes + 2 * nq * d * 4 + n * nq * 4
+
+
+def bytes_pair_window_ids(p: int, s: int, d: int) -> int:
+    """Fused (query, leaf) pair window scan: per pair one leaf block of
+    points + ids + count + one query box in, one id row + count out."""
+    per_pair = s * d * 4 + s * 4 + 4 + 2 * d * 4 + s * 4 + 4
+    return p * per_pair
+
+
+def bytes_leaf_mindist_tiled(nq: int, n_l: int, d: int,
+                             box_bytes: int = 4) -> int:
+    """(nq x L) squared-mindist kernel traffic."""
+    return 2 * n_l * d * box_bytes + nq * d * 4 + nq * n_l * 4
+
+
+def bytes_pair_dist2(p: int, s: int, d: int) -> int:
+    """Fused (query, leaf) candidate-distance kernel traffic."""
+    per_pair = s * d * 4 + 4 + d * 4 + s * 4
+    return p * per_pair
+
+
+def kernel_roofline(bytes_moved: float, seconds: float,
+                    bw: float = HBM_BW) -> dict:
+    """Achieved-vs-peak bandwidth for one kernel invocation.
+
+    ``bw`` defaults to the TPU v5e HBM roof; pass a host-measured STREAM
+    number when the wall-clock came from the CPU backend (interpret-mode
+    Pallas timings are *not* meaningful inputs — measure the compiled
+    path)."""
+    if seconds <= 0:
+        raise ValueError("seconds must be positive")
+    achieved = bytes_moved / seconds
+    return {
+        "bytes": float(bytes_moved),
+        "seconds": float(seconds),
+        "achieved_gbps": achieved / 1e9,
+        "peak_gbps": bw / 1e9,
+        "peak_fraction": achieved / bw,
+    }
+
+
 def roofline_terms(flops: float, hbm_bytes: float, coll_bytes: float,
                    chips: int) -> dict:
     compute_s = flops / (chips * PEAK_FLOPS)

@@ -226,6 +226,7 @@ class DeviceQueryServer:
 
     def __init__(self, table, points: np.ndarray, *,
                  microbatch: int = 64, use_kernel: bool | None = None,
+                 compressed: bool = False,
                  shards: int | None = None, adaptive: bool = False,
                  ambi=None, compact_slack: float = 0.5,
                  fault_plan=None, retry=None, deadline_s: float | None = None,
@@ -262,13 +263,14 @@ class DeviceQueryServer:
         if shards is not None and shards > 1:
             self.sdev = ShardedDeviceTable.from_table(
                 table, points, shards, partial=adaptive,
-                stats=self.upload_stats,
+                stats=self.upload_stats, compressed=compressed,
             )
             self.dev = None
             n_shards = self.sdev.m
         else:
             self.dev = DeviceTable.from_table(
-                table, points, partial=adaptive, stats=self.upload_stats
+                table, points, partial=adaptive, stats=self.upload_stats,
+                compressed=compressed,
             )
             self.sdev = None
             n_shards = 1
@@ -281,6 +283,7 @@ class DeviceQueryServer:
         self.compact_slack = float(compact_slack)
         self.microbatch = int(microbatch)
         self.use_kernel = use_kernel
+        self.compressed = bool(compressed)
         self.stats = DeviceQueryStats(shards=n_shards)
         # durability plane (adaptive only): write-ahead graft journal +
         # snapshot barriers; recovery = snapshot + replay (see recover())
@@ -407,7 +410,7 @@ class DeviceQueryServer:
             t = self.ambi.table if self.adaptive else self.table
             self.dev = DeviceTable.from_table(
                 t, self.points, partial=self.adaptive,
-                stats=self.upload_stats,
+                stats=self.upload_stats, compressed=self.compressed,
             )
         for s in shard_ids:
             self._breaker(s).reset()
@@ -798,6 +801,7 @@ class DeviceQueryServer:
                         self.sdev = ShardedDeviceTable.from_table(
                             t, self.points, self.requested_shards,
                             partial=True, stats=self.upload_stats,
+                            compressed=self.compressed,
                         )
                         self.stats.shards = self.sdev.m
                         self.stats.shard_refreshes += self.sdev.m

@@ -103,6 +103,23 @@ class DeviceEngine:
         return knn_query_batch_jax(self.dev, qs, k)
 
 
+class FusedDeviceEngine:
+    """PR-7 second-generation device engine: fused on-device pair packing
+    with an optional bf16 compressed-MBB export.  Same id-identity
+    contract — the compressed traversal's f32 re-check is what the
+    four-way harness pins here."""
+
+    def __init__(self, index, compressed=True):
+        self.dev = DeviceTable.from_index(index, compressed=compressed)
+        self.name = f"fused[{'bf16' if compressed else 'f32'}]"
+
+    def window(self, los, his):
+        return window_query_batch_jax(self.dev, los, his, fused=True)
+
+    def knn(self, qs, k):
+        return knn_query_batch_jax(self.dev, qs, k, fused=True)
+
+
 class ShardedEngine:
     def __init__(self, index, m):
         self.sdev = ShardedDeviceTable.from_index(index, m)
@@ -159,7 +176,8 @@ class ServerEngine:
 def engine_suite(index, ms=(1, 2, 4), adaptive=True):
     """Every engine over one built index; first entry is the NumPy oracle."""
     return (
-        [NumpyEngine(index), DeviceEngine(index)]
+        [NumpyEngine(index), DeviceEngine(index),
+         FusedDeviceEngine(index, compressed=True)]
         + [ShardedEngine(index, m) for m in ms]
         + ([AdaptiveServeEngine(index)] if adaptive else [])
     )

@@ -1,0 +1,239 @@
+"""bf16 compressed-MBB certificate: property tests + engine parity.
+
+The compressed layout stores outward-rounded bfloat16 copies of the box
+columns (``lo`` toward -inf, ``hi`` toward +inf).  Three properties make it
+safe to traverse against:
+
+  * containment — every compressed box contains its f32 box, so a window
+    intersecting the f32 box always intersects the compressed one: the
+    frontier can *over*-collect but never miss (no false negatives);
+  * mindist under-estimation — the squared mindist to a compressed box
+    never exceeds the f32 mindist, so the k-NN exactness certificate
+    (k-th distance <= closest unscanned mindist) only gets *harder* to
+    pass, never wrongly certifies;
+  * certified f32 re-check — the pair-scan stage tests point containment
+    against the exact f32 columns, so query results are id-identical to
+    the NumPy engine despite the lossy traversal bounds.
+
+Hypothesis drives the rounding properties over adversarial floats (ulp
+boundaries, subnormals, huge magnitudes); the parity suite pins the
+end-to-end guarantee over FMBI and grafted-AMBI tables.
+"""
+import numpy as np
+import pytest
+
+from repro.core import knn_query_batch, window_query_batch
+from repro.core.nodetable import _bf16_outward, compress_boxes_bf16
+from repro.core.queries_jax import (
+    DeviceTable,
+    knn_query_batch_jax,
+    window_query_batch_jax,
+)
+
+from engines import build_fmbi, build_grafted_ambi, f32_points
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except Exception:  # pragma: no cover - optional dependency
+    HAVE_HYPOTHESIS = False
+
+
+finite_f32 = st.floats(
+    min_value=-3.4e38, max_value=3.4e38, allow_nan=False,
+    allow_infinity=False, width=32,
+) if HAVE_HYPOTHESIS else None
+
+
+# --------------------------------------------------------------------------
+# rounding direction: the bit-level property everything rests on
+# --------------------------------------------------------------------------
+if HAVE_HYPOTHESIS:
+
+    @given(finite_f32)
+    @settings(max_examples=300, deadline=None)
+    def test_outward_rounding_direction(x):
+        lo = np.float32(_bf16_outward(np.float32(x), up=False))
+        hi = np.float32(_bf16_outward(np.float32(x), up=True))
+        assert lo <= np.float32(x) <= hi
+
+    @given(finite_f32)
+    @settings(max_examples=300, deadline=None)
+    def test_outward_rounding_is_tight(x):
+        """At most one bf16 ulp of slack: the next representable value
+        toward the rounding direction would cross ``x``."""
+        import ml_dtypes
+
+        x = np.float32(x)
+        lo = _bf16_outward(x, up=False)
+        hi = _bf16_outward(x, up=True)
+        # nextafter in bf16 space: bump the bit pattern by one
+        for v, up in ((lo, False), (hi, True)):
+            f32 = np.float32(v)
+            if f32 == x or not np.isfinite(f32):
+                continue
+            u = np.frombuffer(
+                np.asarray(v, dtype=ml_dtypes.bfloat16).tobytes(),
+                dtype=np.uint16,
+            )[0]
+            # stepping one ulp back toward x must overshoot it
+            stepped = np.frombuffer(
+                np.uint16(u + (1 if (f32 < x) == (not up) else -1))
+                .tobytes(), dtype=ml_dtypes.bfloat16,
+            )[0]
+            back = np.float32(stepped)
+            if np.isfinite(back):
+                assert (back > x) if not up else (back < x)
+
+    @given(st.integers(0, 2**32 - 1))
+    @settings(max_examples=300, deadline=None)
+    def test_outward_rounding_bit_patterns(bits):
+        """Every finite f32 bit pattern rounds outward (exhaustive-style:
+        arbitrary sign/exponent/mantissa combinations, incl. subnormals)."""
+        x = np.uint32(bits).view(np.float32)
+        if not np.isfinite(x):
+            return
+        lo = np.float32(_bf16_outward(x, up=False))
+        hi = np.float32(_bf16_outward(x, up=True))
+        assert lo <= x <= hi
+
+    @given(st.lists(finite_f32, min_size=2, max_size=16))
+    @settings(max_examples=200, deadline=None)
+    def test_compressed_box_contains_f32_box(vals):
+        """compress_boxes_bf16 output contains the input box, so every
+        window intersecting the f32 box intersects the compressed box."""
+        v = np.asarray(vals, dtype=np.float32)
+        lo = np.full(4, v.min(), dtype=np.float32)
+        hi = np.full(4, v.max(), dtype=np.float32)
+        lo_c, hi_c = compress_boxes_bf16(lo[None], hi[None])
+        assert np.all(np.asarray(lo_c, np.float32) <= lo)
+        assert np.all(np.asarray(hi_c, np.float32) >= hi)
+        # mindist under-estimation: for any query point, the compressed
+        # box is closer (gap shrinks when bounds move outward)
+        q = np.float32(vals[0])
+        g32 = np.maximum(lo - q, 0) + np.maximum(q - hi, 0)
+        gc = (np.maximum(np.asarray(lo_c[0], np.float32) - q, 0)
+              + np.maximum(q - np.asarray(hi_c[0], np.float32), 0))
+        assert np.all(gc <= g32)
+
+
+def test_outward_rounding_bit_sweep_fixed():
+    """Deterministic stand-in for the hypothesis rounding properties
+    (always runs): 200k pseudo-random f32 bit patterns — every exponent
+    band, subnormals, both signs — must round outward in both directions,
+    and exact bf16 values must round to themselves."""
+    rng = np.random.default_rng(12345)
+    bits = rng.integers(0, 2**32, 200_000, dtype=np.uint64).astype(np.uint32)
+    x = bits.view(np.float32)
+    x = x[np.isfinite(x)]
+    lo = np.asarray(_bf16_outward(x, up=False), np.float32)
+    hi = np.asarray(_bf16_outward(x, up=True), np.float32)
+    assert np.all(lo <= x) and np.all(hi >= x)
+    # exact bf16 values are fixed points of both roundings
+    exact = (x.view(np.uint32) & np.uint32(0xFFFF)) == 0
+    assert np.array_equal(lo[exact], x[exact])
+    assert np.array_equal(hi[exact], x[exact])
+    # slack is at most one bf16 ulp: re-rounding the rounded value is a
+    # no-op (idempotence), so the result is the adjacent representable
+    assert np.array_equal(
+        np.asarray(_bf16_outward(lo, up=False), np.float32), lo
+    )
+    assert np.array_equal(
+        np.asarray(_bf16_outward(hi, up=True), np.float32), hi
+    )
+
+
+def test_no_false_negative_fixed_sweep():
+    """Dense deterministic sweep (runs with or without hypothesis): every
+    f32 window/box intersection survives compression."""
+    rng = np.random.default_rng(0)
+    lo = rng.random((500, 3)).astype(np.float32)
+    hi = lo + rng.uniform(0, 0.2, (500, 3)).astype(np.float32)
+    lo_c, hi_c = compress_boxes_bf16(lo, hi)
+    qlo = rng.random((64, 3)).astype(np.float32)
+    qhi = qlo + rng.uniform(0, 0.3, (64, 3)).astype(np.float32)
+    hit32 = np.all(
+        (lo[:, None, :] <= qhi[None]) & (hi[:, None, :] >= qlo[None]), axis=2
+    )
+    hit_c = np.all(
+        (np.asarray(lo_c, np.float32)[:, None, :] <= qhi[None])
+        & (np.asarray(hi_c, np.float32)[:, None, :] >= qlo[None]), axis=2
+    )
+    assert np.all(hit_c | ~hit32)  # compressed hits are a superset
+
+
+# --------------------------------------------------------------------------
+# end-to-end: the f32 re-check pins id-identical results vs NumPy
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("builder", [build_fmbi, build_grafted_ambi])
+@pytest.mark.parametrize("kind", ["uniform", "skew", "grid"])
+def test_compressed_engine_window_id_identical(builder, kind):
+    pts = f32_points(3000, 3, seed=17, kind=kind)
+    idx = builder(pts)
+    rng = np.random.default_rng(3)
+    ctr = rng.random((24, 3))
+    w = 0.05 + 0.1 * rng.random((24, 1))
+    los, his = ctr - w, ctr + w
+    ref, _ = window_query_batch(idx, los, his)
+    dev = DeviceTable.from_index(idx, compressed=True)
+    assert dev.compressed
+    for fused in (False, True):
+        got = window_query_batch_jax(dev, los, his, fused=fused)
+        for a, b in zip(ref, got):
+            assert set(np.asarray(a).tolist()) == set(
+                np.asarray(b).tolist()
+            )
+
+
+@pytest.mark.parametrize("builder", [build_fmbi, build_grafted_ambi])
+def test_compressed_engine_knn_id_identical(builder):
+    pts = f32_points(3000, 3, seed=23)  # continuous: unique distances
+    idx = builder(pts)
+    rng = np.random.default_rng(5)
+    qs = rng.random((24, 3))
+    ref, _ = knn_query_batch(idx, qs, 11)
+    dev = DeviceTable.from_index(idx, compressed=True)
+    for fused in (False, True):
+        got = knn_query_batch_jax(dev, qs, 11, fused=fused)
+        for a, b in zip(ref, got):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # a starved budget escalates to the same answer under bf16 bounds
+    got = knn_query_batch_jax(dev, qs, 11, fused=True,
+                              n_candidate_leaves=1)
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_compressed_layout_roundtrip_and_delta():
+    """apply_delta preserves compression: the refreshed table still
+    carries bf16 columns and still answers id-identically."""
+    from repro.core import AMBI
+
+    pts = f32_points(2500, 2, seed=31)
+    ambi = AMBI(pts, 250)
+    dev = DeviceTable.from_table(ambi.table, ambi.points, partial=True,
+                                 compressed=True)
+    ambi.window(np.zeros(2), np.ones(2))  # refine everything
+    dev = dev.apply_delta(ambi.table, ambi.points)
+    assert dev.compressed and dev.leaf_lo_c is not None
+    rng = np.random.default_rng(7)
+    ctr = rng.random((8, 2))
+    los, his = ctr - 0.05, ctr + 0.05
+    ref, _ = window_query_batch(ambi.index, los, his)
+    got = window_query_batch_jax(dev, los, his, fused=True)
+    for a, b in zip(ref, got):
+        assert set(np.asarray(a).tolist()) == set(np.asarray(b).tolist())
+
+
+def test_compressed_halves_box_bytes():
+    pts = f32_points(3000, 3, seed=41)
+    idx = build_fmbi(pts)
+    dev = DeviceTable.from_index(idx, compressed=True)
+    assert dev.leaf_lo_c.dtype.itemsize == 2
+    assert dev.leaf_lo.dtype.itemsize == 4
+    for (lo_c, hi_c), (lo, hi, _, _) in zip(dev.levels_c, dev.levels):
+        assert lo_c.dtype.itemsize == 2 and lo_c.shape == lo.shape
+        # containment holds level by level on-device too
+        assert np.all(np.asarray(lo_c, np.float32) <= np.asarray(lo))
+        assert np.all(np.asarray(hi_c, np.float32) >= np.asarray(hi))

@@ -163,3 +163,137 @@ def test_dist2_dtype_f32_output_for_bf16_inputs():
     p = jnp.asarray(rng.normal(0, 1, (128, 4)), jnp.bfloat16)
     out = ops.pairwise_dist2(q, p, qt=64, pt=128)
     assert out.dtype == jnp.float32
+
+
+# --------------------------------------------------------------------------
+# PR-7 fused tiled kernels: frontier box test + pair-scan family
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("d", [2, 4])
+@pytest.mark.parametrize("box_dtype", [jnp.float32, jnp.bfloat16])
+def test_box_hits_tiled_matches_ref(d, box_dtype):
+    rng = np.random.default_rng(d * 13)
+    n, nq = 150, 77  # both axes ragged: exercises inverted-box padding
+    lo = rng.random((n, d)).astype(np.float32) * 0.8
+    hi = lo + rng.uniform(0.02, 0.3, (n, d)).astype(np.float32)
+    qlo = rng.random((nq, d)).astype(np.float32) * 0.8
+    qhi = qlo + rng.uniform(0.02, 0.3, (nq, d)).astype(np.float32)
+    lo_c, hi_c = jnp.asarray(lo, box_dtype), jnp.asarray(hi, box_dtype)
+    got = ops.box_hits_tiled(lo_c, hi_c, qlo, qhi)
+    want = ops.box_hits_tiled_ref(
+        lo_c, hi_c, jnp.asarray(qlo), jnp.asarray(qhi)
+    )
+    assert got.shape == (n, nq)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert np.asarray(got).sum() > 0
+
+
+def _pair_workload(seed, p=37, n_l=12, s=64, d=3):
+    """A (query, leaf) pair workload with ragged leaves and padding pairs."""
+    rng = np.random.default_rng(seed)
+    leaf_pts = rng.random((n_l, s, d)).astype(np.float32)
+    leaf_counts = rng.integers(1, s + 1, n_l).astype(np.int32)
+    big = np.finfo(np.float32).max
+    for l in range(n_l):  # dead slots: sentinel coords + id -1
+        leaf_pts[l, leaf_counts[l]:] = big
+    leaf_ids = np.arange(n_l * s, dtype=np.int32).reshape(n_l, s)
+    leaf_ids[np.arange(s)[None, :] >= leaf_counts[:, None]] = -1
+    leaf_lo = leaf_pts.min(axis=1)
+    leaf_hi = np.where(
+        np.arange(s)[None, :, None] < leaf_counts[:, None, None],
+        leaf_pts, -big,
+    ).max(axis=1)
+    nq = 9
+    qlo = rng.random((nq, d)).astype(np.float32) * 0.6
+    qhi = qlo + 0.35
+    q_idx = rng.integers(0, nq, p).astype(np.int32)
+    leaf_idx = rng.integers(0, n_l, p).astype(np.int32)
+    pair_valid = (rng.random(p) > 0.2).astype(np.int32)
+    return (qlo, qhi, leaf_lo, leaf_hi, leaf_pts, leaf_ids, leaf_counts,
+            q_idx, leaf_idx, pair_valid)
+
+
+@pytest.mark.parametrize("seed", [0, 7])
+def test_pair_window_ids_matches_ref(seed):
+    w = _pair_workload(seed)
+    gi, gc = ops.pair_window_ids(*[jnp.asarray(x) for x in w])
+    ri, rc = ops.pair_window_ids_ref(*[jnp.asarray(x) for x in w])
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(ri))
+    np.testing.assert_array_equal(np.asarray(gc), np.asarray(rc))
+    # invalid pairs contribute nothing
+    pv = w[-1]
+    assert np.all(np.asarray(gi)[pv == 0] == -1)
+    assert np.all(np.asarray(gc)[pv == 0] == 0)
+    # counts agree with the id matrix
+    np.testing.assert_array_equal(
+        (np.asarray(gi) >= 0).sum(axis=1), np.asarray(gc)
+    )
+
+
+@pytest.mark.parametrize("d", [2, 3])
+@pytest.mark.parametrize("box_dtype", [jnp.float32, jnp.bfloat16])
+def test_leaf_mindist_tiled_matches_ref(d, box_dtype):
+    rng = np.random.default_rng(d * 31)
+    nq, n_l = 21, 90  # ragged axes: degenerate far-box padding
+    q = rng.random((nq, d)).astype(np.float32)
+    lo = rng.random((n_l, d)).astype(np.float32) * 0.8
+    hi = lo + rng.uniform(0.02, 0.2, (n_l, d)).astype(np.float32)
+    lo_c, hi_c = jnp.asarray(lo, box_dtype), jnp.asarray(hi, box_dtype)
+    got = ops.leaf_mindist_tiled(q, lo_c, hi_c)
+    want = ops.leaf_mindist_ref(jnp.asarray(q), lo_c, hi_c)
+    assert got.shape == (nq, n_l)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-6, atol=0
+    )
+    # inside-the-box queries have exactly zero mindist
+    assert (np.asarray(got) == 0).any()
+
+
+@pytest.mark.parametrize("seed", [1, 5])
+def test_pair_dist2_matches_ref(seed):
+    (qlo, _, _, _, leaf_pts, _, leaf_counts, q_idx, leaf_idx,
+     _) = _pair_workload(seed)
+    q = qlo  # any query coordinates do
+    got = ops.pair_dist2(q, leaf_pts, leaf_counts, q_idx, leaf_idx)
+    want = ops.pair_dist2_ref(
+        jnp.asarray(q), jnp.asarray(leaf_pts), jnp.asarray(leaf_counts),
+        jnp.asarray(q_idx), jnp.asarray(leaf_idx),
+    )
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-6, atol=0
+    )
+    # dead slots carry the f32-max sentinel, never a finite distance
+    s = leaf_pts.shape[1]
+    dead = np.arange(s)[None, :] >= leaf_counts[leaf_idx][:, None]
+    assert np.all(np.asarray(got)[dead] == np.finfo(np.float32).max)
+
+
+def test_box_hits_tiled_compiled_matches_interpret():
+    """Interpret mode is the oracle everywhere; on a TPU backend the
+    compiled (Mosaic) lowering must agree with it bit-for-bit.  On CPU
+    the compiled leg is a no-op and the interpret-vs-ref assertion
+    carries the test."""
+    rng = np.random.default_rng(0)
+    lo = rng.random((200, 3)).astype(np.float32) * 0.8
+    hi = lo + 0.1
+    qlo = rng.random((64, 3)).astype(np.float32) * 0.8
+    qhi = qlo + 0.1
+    b = ops.box_hits_tiled(lo, hi, qlo, qhi, interpret=True)
+    want = ops.box_hits_tiled_ref(
+        jnp.asarray(lo), jnp.asarray(hi), jnp.asarray(qlo),
+        jnp.asarray(qhi),
+    )
+    np.testing.assert_array_equal(np.asarray(b), np.asarray(want))
+    if ops.compiled_supported():
+        a = ops.box_hits_tiled(lo, hi, qlo, qhi, interpret=False)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_vmem_tiles_respect_budget():
+    from repro.kernels.window_filter import VMEM_TILE_BUDGET, vmem_tiles
+
+    for n, q, d, b in [(100_000, 64, 2, 4), (5000, 1024, 16, 4),
+                       (128, 8, 3, 2)]:
+        nt, qt = vmem_tiles(n, q, d, in_bytes=b)
+        assert nt >= 8 and qt >= 8
+        block = 2 * nt * d * b + 2 * qt * d * 4 + nt * qt * 4
+        assert block <= VMEM_TILE_BUDGET or (nt, qt) == (8, 8)

@@ -337,3 +337,85 @@ def test_compile_variants_bounded_across_workload_drift():
     sweep()
     sweep()
     assert QJ.TRACE_COUNTS == before
+
+
+# --------------------------------------------------------------------------
+# PR-7 fused path: parity, env pin, and bounded recompiles
+# --------------------------------------------------------------------------
+@pytest.mark.parametrize("compressed", [False, True])
+def test_fused_engine_matches_unfused(compressed):
+    """The fused (on-device packed) pipeline is id-identical to the
+    first-generation path on the same export — window sets and k-NN
+    sequences — including a starved k-NN budget that must escalate."""
+    pts = _f32_points(5000, 3, 71, kind="skew")
+    idx = _build(pts)
+    dev = DeviceTable.from_index(idx, compressed=compressed)
+    rng = np.random.default_rng(72)
+    ctr = rng.random((19, 3))  # odd batch: pow2 padding rows in play
+    los, his = ctr - 0.06, ctr + 0.06
+    w0 = window_query_batch_jax(dev, los, his, fused=False)
+    w1 = window_query_batch_jax(dev, los, his, fused=True)
+    for a, b in zip(w0, w1):
+        assert set(np.asarray(a).tolist()) == set(np.asarray(b).tolist())
+    k0 = knn_query_batch_jax(dev, ctr, 10, fused=False,
+                             n_candidate_leaves=1)
+    k1 = knn_query_batch_jax(dev, ctr, 10, fused=True,
+                             n_candidate_leaves=1)
+    for a, b in zip(k0, k1):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_fused_default_env_pin(monkeypatch):
+    monkeypatch.delenv("REPRO_FUSED", raising=False)
+    assert QJ._fused_default() is True
+    monkeypatch.setenv("REPRO_FUSED", "0")
+    assert QJ._fused_default() is False
+    monkeypatch.setenv("REPRO_FUSED", "1")
+    assert QJ._fused_default() is True
+
+
+def test_fused_recompile_bounded():
+    """The fused path's pow2 bucketing keeps compiled variants bounded:
+    a repeated mixed sweep (both layouts, drifting widths and batch
+    sizes, escalating k-NN budgets) adds zero retraces after warmup —
+    including the new pair-pack / id-pack / pending-selection jits."""
+    pts = _f32_points(6000, 2, 73)
+    idx = _build(pts)
+    devs = [DeviceTable.from_index(idx, compressed=c)
+            for c in (False, True)]
+
+    def sweep():
+        rng = np.random.default_rng(74)  # same workload every sweep
+        for dev in devs:
+            for q, w in [(3, 0.01), (5, 0.05), (8, 0.2), (6, 0.4)]:
+                centers = rng.random((q, 2)).astype(np.float32)
+                window_query_batch_jax(dev, centers - w, centers + w,
+                                       fused=True)
+                knn_query_batch_jax(dev, centers, 8, fused=True,
+                                    n_candidate_leaves=1)
+
+    sweep()  # warm every bucket the workload can reach
+    before = QJ.trace_counts()
+    sweep()
+    sweep()
+    assert QJ.trace_counts() == before
+
+
+def test_fused_partial_export_cold_mask():
+    """return_cold on the fused path surfaces the same cold-hit rows as
+    the first-generation path on a partial export."""
+    pts = _f32_points(4000, 2, 75)
+    ambi = AMBI(pts, 250)
+    c = np.asarray([0.5, 0.5])
+    ambi.window(c - 0.05, c + 0.05)  # refine one hotspot only
+    dev = DeviceTable.from_table(ambi.table, ambi.points, partial=True)
+    rng = np.random.default_rng(76)
+    ctr = rng.random((9, 2))
+    los, his = ctr - 0.08, ctr + 0.08
+    r0, cold0 = window_query_batch_jax(dev, los, his, fused=False,
+                                       return_cold=True)
+    r1, cold1 = window_query_batch_jax(dev, los, his, fused=True,
+                                       return_cold=True)
+    np.testing.assert_array_equal(np.asarray(cold0), np.asarray(cold1))
+    for a, b in zip(r0, r1):
+        assert set(np.asarray(a).tolist()) == set(np.asarray(b).tolist())
