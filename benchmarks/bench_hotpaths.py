@@ -47,6 +47,7 @@ from repro.core import (
     window_query_batch,
 )
 from repro.core.datasets import osm_like
+from repro.core.ioutil import atomic_write_json
 from repro.core.fmbi import _distribute_vectorized, refine_subspace
 from repro.core.pagestore import branch_capacity, leaf_capacity
 from repro.core.splittree import build_group_median_tree
@@ -560,7 +561,7 @@ def main(argv=None) -> int:
     for key in SMOKE_GATED.values():
         res[f"smoke_{key}"] = smoke_res[key]
 
-    BENCH_CORE.write_text(json.dumps(res, indent=2, sort_keys=True) + "\n")
+    atomic_write_json(BENCH_CORE, res)
     print(f"wrote {BENCH_CORE}")
     return 0
 

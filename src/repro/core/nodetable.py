@@ -39,6 +39,8 @@ from typing import Optional
 
 import numpy as np
 
+from .ioutil import atomic_output
+
 
 # --------------------------------------------------------------------------
 # bf16 compressed-MBB export (outward rounding; shared with queries_jax.py)
@@ -485,19 +487,15 @@ class NodeTable:
         for k, v in (extra or {}).items():
             payload[f"meta_{k}"] = np.asarray(v)
         # Crash-safe write: a kill mid-save must never leave a torn .npz at
-        # ``path`` — the snapshot is often the only durable copy.  Write the
-        # archive into a temp file in the same directory (np.savez appends
-        # ".npz" to bare string paths, so hand it an open handle), fsync,
-        # then atomically swap it in.
+        # ``path`` — the snapshot is often the only durable copy.  The
+        # shared tmp+fsync+replace helper writes into the destination
+        # directory and atomically swaps (np.savez appends ".npz" to bare
+        # string paths, so hand it the open handle).
         path = os.fspath(path)
         if not path.endswith(".npz"):
             path = path + ".npz"
-        tmp = path + ".tmp"
-        with open(tmp, "wb") as f:
+        with atomic_output(path) as f:
             np.savez(f, **payload)
-            f.flush()
-            os.fsync(f.fileno())
-        os.replace(tmp, path)
 
     def equals(self, other: "NodeTable") -> bool:
         """Bit-identical structural equality (the crash-recovery invariant:

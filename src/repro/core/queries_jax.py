@@ -1031,13 +1031,19 @@ def _knn_batch_fused(
     use_kernel: bool,
     n_candidate_leaves: int | None,
     return_dists: bool,
+    max_rounds: int | None = None,
+    return_exact: bool = False,
 ):
     """Fused k-NN batch: budget escalation without host selection.
 
     Each round reruns only the queries whose certificate failed — packed,
     gathered, and scattered back on device; the host syncs one scalar per
     round (the failure count, which sizes the next power-of-two bucket)
-    and transfers results once, after every certificate holds."""
+    and transfers results once, after every certificate holds.
+
+    ``max_rounds`` caps the escalation rounds beyond the first dispatch
+    (the serving brownout tier); capped queries return their best-effort
+    answer with a ``False`` entry in the ``return_exact`` mask."""
     q0 = qs.shape[0]
     s = dev.leaf_size
     cap = _pow2(dev.n_leaves)
@@ -1051,8 +1057,10 @@ def _knn_batch_fused(
     ids_buf, d2_buf, exact_buf, nfail = _knn_core_fused(
         dev, qsj, b0j, k, c, use_kernel
     )
-    n_fail = int(nfail) if c < dev.n_leaves else 0
-    while n_fail:
+    full_scan = c >= dev.n_leaves
+    n_fail = int(nfail) if not full_scan else 0
+    rounds = 0
+    while n_fail and (max_rounds is None or rounds < max_rounds):
         c = min(c * 2, cap)
         idx, valid, qsel = _knn_pending(qsj, exact_buf, b0j, _pow2(n_fail))
         ids_n, d2_n, exact_n, _ = _knn_core_fused(
@@ -1062,13 +1070,22 @@ def _knn_batch_fused(
             ids_buf, d2_buf, exact_buf, b0j, idx, valid, ids_n, d2_n,
             exact_n
         )
-        n_fail = int(nfail) if c < dev.n_leaves else 0
+        full_scan = c >= dev.n_leaves
+        n_fail = int(nfail) if not full_scan else 0
+        rounds += 1
     m = min(k, dev.live_points())
     ids, d2k = jax.device_get((ids_buf[:b0, :m], d2_buf[:b0, :m]))
     results = [ids[j].astype(np.int64) for j in range(q0)]
+    out = (results,)
     if return_dists:
-        return results, [d2k[j] for j in range(q0)]
-    return results
+        out = out + ([d2k[j] for j in range(q0)],)
+    if return_exact:
+        if full_scan:  # whole leaf table scanned: vacuously exact
+            exact = np.ones(q0, dtype=bool)
+        else:
+            exact = np.asarray(jax.device_get(exact_buf[:b0]))[:q0].copy()
+        out = out + (exact,)
+    return out if len(out) > 1 else out[0]
 
 
 def knn_query_batch_jax(
@@ -1080,6 +1097,8 @@ def knn_query_batch_jax(
     fused: bool | None = None,
     n_candidate_leaves: int | None = None,
     return_dists: bool = False,
+    max_rounds: int | None = None,
+    return_exact: bool = False,
 ) -> list[np.ndarray]:
     """Compiled batched k-NN: per-query ascending-distance row-id arrays.
 
@@ -1100,22 +1119,35 @@ def knn_query_batch_jax(
     On a *partial* export the results are exact over the refined subset
     only (an all-cold export returns empty results): whether the cold
     subspaces could hold closer neighbors is the serving layer's check
-    (mindist of each cold box against the k-th returned distance)."""
+    (mindist of each cold box against the k-th returned distance).
+
+    ``max_rounds`` caps the escalation rounds beyond the first dispatch
+    — the serving brownout tier's budget cap.  A capped query returns
+    its best-effort answer (the exact k-NN over the candidate leaves
+    scanned so far, a superset-ranked approximation); ``return_exact``
+    appends a per-query bool mask naming which answers the certificate
+    actually covers, so callers can label capped answers honestly
+    instead of silently serving approximations."""
     if use_kernel is None:
         use_kernel = _use_kernel_default()
     if fused is None:
         fused = _fused_default()
+    if max_rounds is not None and max_rounds < 0:
+        raise ValueError(f"max_rounds must be >= 0, got {max_rounds}")
     qs = np.atleast_2d(np.asarray(qs, dtype=np.float32))
     q0 = qs.shape[0]
     if dev.n_leaves == 0:  # partial export before the first graft: the
         # device holds nothing scannable — every query is the host's
-        empty = [np.zeros(0, dtype=np.int64) for _ in range(q0)]
+        out = ([np.zeros(0, dtype=np.int64) for _ in range(q0)],)
         if return_dists:
-            return empty, [np.zeros(0, dtype=np.float32) for _ in range(q0)]
-        return empty
+            out = out + ([np.zeros(0, dtype=np.float32) for _ in range(q0)],)
+        if return_exact:
+            out = out + (np.ones(q0, dtype=bool),)
+        return out if len(out) > 1 else out[0]
     if fused:
         return _knn_batch_fused(
-            dev, qs, k, use_kernel, n_candidate_leaves, return_dists
+            dev, qs, k, use_kernel, n_candidate_leaves, return_dists,
+            max_rounds, return_exact,
         )
     s = dev.leaf_size
     cap = _pow2(dev.n_leaves)
@@ -1125,20 +1157,34 @@ def knn_query_batch_jax(
         c = min(_pow2(max(n_candidate_leaves, 1)), cap)
     results: list = [None] * q0
     dists: list = [None] * q0
+    exact_mask = np.ones(q0, dtype=bool)
     pending = np.arange(q0)
+    rounds = 0
     while len(pending):
         (batch,), b0 = _pad_batch([qs[pending]], [0.0])
         ids, d2k, exact = jax.device_get(
             _knn_core(dev, jnp.asarray(batch), k, c, use_kernel)
         )
         done = exact[:b0] if c < dev.n_leaves else np.ones(b0, dtype=bool)
+        flush = done
+        if max_rounds is not None and rounds >= max_rounds:
+            # budget cap (brownout): emit best-effort answers for the
+            # still-failing queries and mark them inexact
+            flush = np.ones(b0, dtype=bool)
         # padding fill (BIG/inf distances) sorts last, so the result is
         # always the first min(k, n) entries — no distance threshold needed
         # (live_points recovers the count after a pytree round-trip)
         m = min(k, dev.live_points())
-        for j in np.flatnonzero(done):
+        for j in np.flatnonzero(flush):
             results[pending[j]] = ids[j, :m].astype(np.int64)
             dists[pending[j]] = d2k[j, :m]
-        pending = pending[~done]
+            exact_mask[pending[j]] = bool(done[j])
+        pending = pending[~flush]
         c = min(c * 2, cap)
-    return (results, dists) if return_dists else results
+        rounds += 1
+    out = (results,)
+    if return_dists:
+        out = out + (dists,)
+    if return_exact:
+        out = out + (exact_mask,)
+    return out if len(out) > 1 else out[0]

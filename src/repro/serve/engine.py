@@ -238,7 +238,7 @@ class DeviceQueryServer:
         from ..core.distributed_jax import ShardedDeviceTable
         from ..core.queries_jax import DeviceTable, UploadStats
         from .journal import GraftJournal
-        from .resilience import RetryPolicy
+        from .resilience import RetryPolicy, TableLock
 
         if adaptive:
             if ambi is None:
@@ -256,6 +256,12 @@ class DeviceQueryServer:
         self.breaker_cooldown_s = float(breaker_cooldown_s)
         self.clock = clock  # None -> time.monotonic inside the primitives
         self.breakers: dict = {}
+        # table RW-lock: device dispatches and cold-mask computations read
+        # the host table; adaptive refinement (graft/apply_delta/compact)
+        # and shard repair write it.  The async frontend overlaps a device
+        # worker with host refinement, so the lock is load-bearing there;
+        # single-threaded callers pay two uncontended acquisitions.
+        self.table_lock = TableLock()
         # per-server upload accounting (satellite: no cross-server leakage)
         self.upload_stats = UploadStats()
         if adaptive and fault_plan is not None and ambi is not None:
@@ -378,7 +384,7 @@ class DeviceQueryServer:
                 res = self.retry.call(
                     attempt, deadline=deadline,
                     no_retry=(DeadlineExceeded, ShardUnavailable),
-                    on_retry=self._count_retry,
+                    on_retry=self._count_retry, call_key=("shard", int(s)),
                 )
             except (DeadlineExceeded, ShardUnavailable):
                 raise
@@ -401,17 +407,18 @@ class DeviceQueryServer:
         shard_ids = sorted(int(s) for s in shard_ids)
         if not shard_ids:
             return []
-        if self.sdev is not None:
-            self.sdev.refresh(shard_ids)
-            self.stats.shard_refreshes += len(shard_ids)
-        else:
-            from ..core.queries_jax import DeviceTable
+        with self.table_lock.write():
+            if self.sdev is not None:
+                self.sdev.refresh(shard_ids)
+                self.stats.shard_refreshes += len(shard_ids)
+            else:
+                from ..core.queries_jax import DeviceTable
 
-            t = self.ambi.table if self.adaptive else self.table
-            self.dev = DeviceTable.from_table(
-                t, self.points, partial=self.adaptive,
-                stats=self.upload_stats, compressed=self.compressed,
-            )
+                t = self.ambi.table if self.adaptive else self.table
+                self.dev = DeviceTable.from_table(
+                    t, self.points, partial=self.adaptive,
+                    stats=self.upload_stats, compressed=self.compressed,
+                )
         for s in shard_ids:
             self._breaker(s).reset()
         return shard_ids
@@ -451,7 +458,7 @@ class DeviceQueryServer:
         return a
 
     def window(self, los: np.ndarray, his: np.ndarray, *,
-               return_certs: bool = False) -> list[np.ndarray]:
+               return_certs: bool = False, deadline=None) -> list[np.ndarray]:
         """Per-query dataset row ids inside each [lo, hi] box.
 
         ``return_certs=True`` opts into degraded serving: the return is
@@ -460,6 +467,10 @@ class DeviceQueryServer:
         ``CompletenessCertificate`` names the unanswered subspaces
         instead of raising.  Adaptive serving answers outages host-side,
         so its certificates are always intact.
+
+        ``deadline`` overrides the server's own per-batch budget — the
+        async frontend passes the admitted batch's remaining budget so a
+        queued-then-dispatched request is bounded end to end.
         """
         from ..core.distributed_jax import (
             CompletenessCertificate,
@@ -474,7 +485,8 @@ class DeviceQueryServer:
             raise ValueError(
                 f"los/his shape mismatch: {los.shape} vs {his.shape}"
             )
-        deadline = self._deadline()
+        if deadline is None:
+            deadline = self._deadline()
         out: list[np.ndarray] = []
         certs: list = []
         for a, b in self._chunks(los.shape[0]):
@@ -487,23 +499,25 @@ class DeviceQueryServer:
                     CompletenessCertificate.intact() for _ in range(b - a)
                 )
             elif self.sdev is not None:
-                res = window_query_batch_sharded(
-                    self.sdev, los[a:b], his[a:b],
-                    use_kernel=self.use_kernel, runner=runner,
-                    return_certs=return_certs,
-                )
+                with self.table_lock.read():
+                    res = window_query_batch_sharded(
+                        self.sdev, los[a:b], his[a:b],
+                        use_kernel=self.use_kernel, runner=runner,
+                        return_certs=return_certs,
+                    )
                 if return_certs:
                     res, cs = res
                     certs.extend(cs)
                 out.extend(res)
             else:
                 try:
-                    out.extend(runner(0, lambda a=a, b=b: (
-                        window_query_batch_jax(
-                            self.dev, los[a:b], his[a:b],
-                            use_kernel=self.use_kernel,
-                        )
-                    )))
+                    with self.table_lock.read():
+                        out.extend(runner(0, lambda a=a, b=b: (
+                            window_query_batch_jax(
+                                self.dev, los[a:b], his[a:b],
+                                use_kernel=self.use_kernel,
+                            )
+                        )))
                     certs.extend(
                         CompletenessCertificate.intact()
                         for _ in range(b - a)
@@ -525,12 +539,20 @@ class DeviceQueryServer:
         return out
 
     def knn(self, qs: np.ndarray, k: int, *,
-            return_certs: bool = False) -> list[np.ndarray]:
+            return_certs: bool = False, deadline=None,
+            max_rounds: int | None = None) -> list[np.ndarray]:
         """Per-query ascending-distance row ids (length min(k, n)).
 
         Degraded mode mirrors :meth:`window`; a k-NN certificate can be
         ``certified_exact`` even when shards were down (the pruning
         radius clears their subspaces — see the distributed protocol).
+
+        ``max_rounds`` caps the device engine's budget-escalation rounds
+        (the frontend's brownout tier).  A capped query returns its
+        best-effort answer with ``certified_exact=False`` on its
+        certificate.  The cap applies to the single-table compiled
+        dispatch; the sharded two-round protocol and the adaptive host
+        path keep their own exactness machinery and ignore it.
         """
         from ..core.distributed_jax import (
             CompletenessCertificate,
@@ -543,7 +565,8 @@ class DeviceQueryServer:
         if not isinstance(k, (int, np.integer)) or int(k) < 1:
             raise ValueError(f"k must be a positive integer, got {k!r}")
         k = int(k)
-        deadline = self._deadline()
+        if deadline is None:
+            deadline = self._deadline()
         out: list[np.ndarray] = []
         certs: list = []
         for a, b in self._chunks(qs.shape[0]):
@@ -554,24 +577,32 @@ class DeviceQueryServer:
                     CompletenessCertificate.intact() for _ in range(b - a)
                 )
             elif self.sdev is not None:
-                res = knn_query_batch_sharded(
-                    self.sdev, qs[a:b], k, use_kernel=self.use_kernel,
-                    runner=runner, return_certs=return_certs,
-                )
+                with self.table_lock.read():
+                    res = knn_query_batch_sharded(
+                        self.sdev, qs[a:b], k, use_kernel=self.use_kernel,
+                        runner=runner, return_certs=return_certs,
+                    )
                 if return_certs:
                     res, cs = res
                     certs.extend(cs)
                 out.extend(res)
             else:
                 try:
-                    out.extend(runner(0, lambda a=a, b=b: (
-                        knn_query_batch_jax(
-                            self.dev, qs[a:b], k, use_kernel=self.use_kernel
-                        )
-                    )))
+                    with self.table_lock.read():
+                        res, exact = runner(0, lambda a=a, b=b: (
+                            knn_query_batch_jax(
+                                self.dev, qs[a:b], k,
+                                use_kernel=self.use_kernel,
+                                max_rounds=max_rounds, return_exact=True,
+                            )
+                        ))
+                    out.extend(res)
                     certs.extend(
-                        CompletenessCertificate.intact()
-                        for _ in range(b - a)
+                        CompletenessCertificate.intact() if bool(e)
+                        else CompletenessCertificate(
+                            complete=True, certified_exact=False
+                        )
+                        for e in exact
                     )
                 except ShardUnavailable:
                     if not return_certs:
@@ -589,6 +620,188 @@ class DeviceQueryServer:
             return out, certs
         return out
 
+    def cold_window_mask(self, los: np.ndarray, his: np.ndarray) -> np.ndarray:
+        """Which window queries reach unrefined (cold) space — the cheap
+        host-side test the async frontend uses to split a microbatch into
+        a device-lane hot part and a refine-lane cold part *before*
+        dispatch, so host refinement overlaps device execution instead of
+        serializing behind it.  Hit sets are downward-closed, so reaching
+        an unrefined row equals intersecting its MBB.  Non-adaptive
+        servers have no cold space: all-False."""
+        los = np.atleast_2d(np.asarray(los, dtype=np.float64))
+        his = np.atleast_2d(np.asarray(his, dtype=np.float64))
+        if not self.adaptive:
+            return np.zeros(los.shape[0], dtype=bool)
+        with self.table_lock.read():
+            return self._cold_mask_unlocked(los, his)
+
+    # -- brownout tier: device-only answers, no host refinement --------------
+    def _cold_boxes_cert(self, lo, hi):
+        """Certificate for a cold query answered device-only: the unrefined
+        subspaces intersecting the window are the unanswered region."""
+        from ..core.distributed_jax import CompletenessCertificate
+        from ..core.geometry import boxes_intersect_windows
+
+        t = self.ambi.table
+        unref = np.flatnonzero(t.unrefined)
+        if len(unref):
+            hit = boxes_intersect_windows(
+                t.mbb_lo[unref], t.mbb_hi[unref], lo[None], hi[None]
+            )[0]
+            unref = unref[hit]
+        if not len(unref):
+            return CompletenessCertificate.intact()
+        return CompletenessCertificate(
+            complete=False, certified_exact=False, missing_shards=(),
+            missing_lo=np.asarray(t.mbb_lo[unref], dtype=np.float32),
+            missing_hi=np.asarray(t.mbb_hi[unref], dtype=np.float32),
+        )
+
+    def window_hot(self, los: np.ndarray, his: np.ndarray, *,
+                   deadline=None):
+        """Brownout-tier window serving: answer from the device's refined
+        subset only — no host refinement, no grafting, no cold-path I/O.
+        Returns ``(results, certs)``; a query reaching cold space comes
+        back *partial* (its refined-subset hits) with the unrefined
+        subspaces it touches listed as the certificate's missing boxes.
+        Only meaningful on an adaptive server; a fully refined table makes
+        this identical to :meth:`window`."""
+        from ..core.distributed_jax import CompletenessCertificate
+        from ..core.queries_jax import window_query_batch_jax
+
+        if not self.adaptive:
+            return self.window(los, his, return_certs=True,
+                               deadline=deadline)
+        los = self._validate_batch(los, "los")
+        his = self._validate_batch(his, "his")
+        if deadline is None:
+            deadline = self._deadline()
+        out: list[np.ndarray] = []
+        certs: list = []
+        for a, b in self._chunks(los.shape[0]):
+            runner = self._shard_runner(deadline)
+            with self.table_lock.read():
+                cold_q = np.asarray(
+                    self._cold_mask_unlocked(los[a:b], his[a:b])
+                )
+                if self.sdev is not None:
+                    res = [np.zeros(0, dtype=np.int64)] * (b - a)
+                    hot = np.flatnonzero(~cold_q)
+                    if hot.size:
+                        hres, hcs = self._sharded_window(
+                            los[a:b][hot], his[a:b][hot], runner
+                        )
+                        for qi, ids in zip(hot, hres):
+                            res[qi] = ids
+                else:
+                    res, cold = runner(0, lambda a=a, b=b: (
+                        window_query_batch_jax(
+                            self.dev, los[a:b], his[a:b],
+                            use_kernel=self.use_kernel, return_cold=True,
+                        )
+                    ))
+                    res = list(res)
+                    cold_q = cold_q | np.asarray(cold).any(axis=1)
+                for i in range(b - a):
+                    certs.append(
+                        self._cold_boxes_cert(los[a + i], his[a + i])
+                        if cold_q[i]
+                        else CompletenessCertificate.intact()
+                    )
+            out.extend(res)
+            self.stats.microbatches += 1
+            self.stats.hot_queries += int((~cold_q).sum())
+            self.stats.cold_queries += int(cold_q.sum())
+        self.stats.queries += los.shape[0]
+        self.stats.degraded_queries += sum(1 for c in certs if not c.complete)
+        return out, certs
+
+    def knn_hot(self, qs: np.ndarray, k: int, *, deadline=None,
+                max_rounds: int | None = None):
+        """Brownout-tier k-NN: device-only, escalation capped, no host
+        refinement.  Returns ``(results, certs)`` — a query whose answer
+        a cold box could still beat (or whose escalation was capped)
+        carries ``certified_exact=False``."""
+        from ..core.distributed_jax import (
+            CompletenessCertificate,
+            knn_query_batch_sharded,
+        )
+        from ..core.queries_jax import knn_query_batch_jax
+
+        if not self.adaptive:
+            return self.knn(qs, k, return_certs=True, deadline=deadline,
+                            max_rounds=max_rounds)
+        qs = self._validate_batch(qs, "qs")
+        k = int(k)
+        if deadline is None:
+            deadline = self._deadline()
+        out: list[np.ndarray] = []
+        certs: list = []
+        for a, b in self._chunks(qs.shape[0]):
+            runner = self._shard_runner(deadline)
+            with self.table_lock.read():
+                t = self.ambi.table
+                if self.sdev is not None:
+                    res, _cs = knn_query_batch_sharded(
+                        self.sdev, qs[a:b], k, use_kernel=self.use_kernel,
+                        runner=runner, return_certs=True,
+                    )
+                    res = list(res)
+                    exact = np.ones(b - a, dtype=bool)
+                else:
+                    res, exact = runner(0, lambda a=a, b=b: (
+                        knn_query_batch_jax(
+                            self.dev, qs[a:b], k,
+                            use_kernel=self.use_kernel,
+                            max_rounds=max_rounds, return_exact=True,
+                        )
+                    ))
+                    res = list(res)
+                cold_q = self._knn_cold_mask(qs[a:b], res, k)
+                unref = np.flatnonzero(t.unrefined)
+                for i in range(b - a):
+                    if not cold_q[i] and exact[i]:
+                        certs.append(CompletenessCertificate.intact())
+                    else:
+                        certs.append(CompletenessCertificate(
+                            complete=not cold_q[i],
+                            certified_exact=False,
+                            missing_shards=(),
+                            missing_lo=np.asarray(
+                                t.mbb_lo[unref], dtype=np.float32),
+                            missing_hi=np.asarray(
+                                t.mbb_hi[unref], dtype=np.float32),
+                        ))
+            out.extend(res)
+            self.stats.microbatches += 1
+            self.stats.hot_queries += int((~cold_q).sum())
+            self.stats.cold_queries += int(cold_q.sum())
+        self.stats.queries += qs.shape[0]
+        self.stats.degraded_queries += sum(1 for c in certs if not c.complete)
+        return out, certs
+
+    def _cold_mask_unlocked(self, los, his) -> np.ndarray:
+        """`cold_window_mask` body without the lock (callers hold read)."""
+        from ..core.geometry import boxes_intersect_windows
+
+        t = self.ambi.table
+        unref = np.flatnonzero(t.unrefined)
+        if not len(unref):
+            return np.zeros(np.atleast_2d(los).shape[0], dtype=bool)
+        return boxes_intersect_windows(
+            t.mbb_lo[unref], t.mbb_hi[unref],
+            np.asarray(los, dtype=np.float64),
+            np.asarray(his, dtype=np.float64),
+        ).any(axis=1)
+
+    def _sharded_window(self, los, his, runner):
+        from ..core.distributed_jax import window_query_batch_sharded
+
+        return window_query_batch_sharded(
+            self.sdev, los, his, use_kernel=self.use_kernel,
+            runner=runner, return_certs=True,
+        )
+
     # -- adaptive serving loop ----------------------------------------------
     # The host AMBI engine is authoritative over the full dataset, so the
     # adaptive server degrades *gracefully* under device outages: a failed
@@ -604,7 +817,9 @@ class DeviceQueryServer:
         def attempt():
             return self.journal.append(op, **args)
 
-        self.retry.call(attempt, on_retry=self._count_retry)
+        self.retry.call(
+            attempt, on_retry=self._count_retry, call_key="journal"
+        )
         self.stats.journal_records += 1
 
     def _host_window(self, lo, hi) -> np.ndarray:
@@ -620,7 +835,9 @@ class DeviceQueryServer:
                 self.fault_plan.fire("host_refine", op="window")
             return self.ambi.window(lo, hi)
 
-        ids, _ = self.retry.call(attempt, on_retry=self._count_retry)
+        ids, _ = self.retry.call(
+            attempt, on_retry=self._count_retry, call_key="host_refine"
+        )
         return ids
 
     def _host_knn(self, q, k: int) -> np.ndarray:
@@ -631,7 +848,9 @@ class DeviceQueryServer:
                 self.fault_plan.fire("host_refine", op="knn")
             return self.ambi.knn(q, k)
 
-        ids, _ = self.retry.call(attempt, on_retry=self._count_retry)
+        ids, _ = self.retry.call(
+            attempt, on_retry=self._count_retry, call_key="host_refine"
+        )
         return ids
 
     def _window_adaptive(self, los, his, deadline=None) -> list[np.ndarray]:
@@ -645,53 +864,56 @@ class DeviceQueryServer:
         from ..core.queries_jax import window_query_batch_jax
 
         runner = self._shard_runner(deadline)
-        t = self.ambi.table
-        unref = np.flatnonzero(t.unrefined)
-        if self.sdev is not None:
-            # reaching an unrefined row == intersecting its MBB (hit sets
-            # are downward-closed), so the host-side router test equals
-            # the frontier's cold mask without a cross-shard gather — and,
-            # being known up front, lets the device serve only the hot part
-            cold_q = (
-                boxes_intersect_windows(
-                    t.mbb_lo[unref], t.mbb_hi[unref],
-                    np.asarray(los, dtype=np.float64),
-                    np.asarray(his, dtype=np.float64),
-                ).any(axis=1)
-                if len(unref)
-                else np.zeros(los.shape[0], dtype=bool)
-            )
-            out: list = [None] * los.shape[0]
-            hot = np.flatnonzero(~cold_q)
-            if hot.size:
-                res, cs = window_query_batch_sharded(
-                    self.sdev, los[hot], his[hot],
-                    use_kernel=self.use_kernel, runner=runner,
-                    return_certs=True,
+        with self.table_lock.read():
+            t = self.ambi.table
+            unref = np.flatnonzero(t.unrefined)
+            if self.sdev is not None:
+                # reaching an unrefined row == intersecting its MBB (hit
+                # sets are downward-closed), so the host-side router test
+                # equals the frontier's cold mask without a cross-shard
+                # gather — and, being known up front, lets the device
+                # serve only the hot part
+                cold_q = (
+                    boxes_intersect_windows(
+                        t.mbb_lo[unref], t.mbb_hi[unref],
+                        np.asarray(los, dtype=np.float64),
+                        np.asarray(his, dtype=np.float64),
+                    ).any(axis=1)
+                    if len(unref)
+                    else np.zeros(los.shape[0], dtype=bool)
                 )
-                for qi, ids, cert in zip(hot, res, cs):
-                    if cert.complete:
-                        out[qi] = ids
-                    else:  # dead shard: exact host answer instead
-                        cold_q[qi] = True
-                        self.stats.host_fallbacks += 1
-        else:
-            try:
-                res, cold = runner(0, lambda: window_query_batch_jax(
-                    self.dev, los, his,
-                    use_kernel=self.use_kernel, return_cold=True,
-                ))
-                out = list(res)
-                cold_q = cold.any(axis=1)
-            except ShardUnavailable:
-                # whole-device outage: the host serves the full microbatch
-                out = [None] * los.shape[0]
-                cold_q = np.ones(los.shape[0], dtype=bool)
-                self.stats.host_fallbacks += los.shape[0]
+                out: list = [None] * los.shape[0]
+                hot = np.flatnonzero(~cold_q)
+                if hot.size:
+                    res, cs = window_query_batch_sharded(
+                        self.sdev, los[hot], his[hot],
+                        use_kernel=self.use_kernel, runner=runner,
+                        return_certs=True,
+                    )
+                    for qi, ids, cert in zip(hot, res, cs):
+                        if cert.complete:
+                            out[qi] = ids
+                        else:  # dead shard: exact host answer instead
+                            cold_q[qi] = True
+                            self.stats.host_fallbacks += 1
+            else:
+                try:
+                    res, cold = runner(0, lambda: window_query_batch_jax(
+                        self.dev, los, his,
+                        use_kernel=self.use_kernel, return_cold=True,
+                    ))
+                    out = list(res)
+                    cold_q = cold.any(axis=1)
+                except ShardUnavailable:
+                    # whole-device outage: host serves the full microbatch
+                    out = [None] * los.shape[0]
+                    cold_q = np.ones(los.shape[0], dtype=bool)
+                    self.stats.host_fallbacks += los.shape[0]
         if cold_q.any():
-            for i in np.flatnonzero(cold_q):
-                out[i] = self._host_window(los[i], his[i])
-            self._after_refinement(unref)  # the pre-serving unrefined rows
+            with self.table_lock.write():
+                for i in np.flatnonzero(cold_q):
+                    out[i] = self._host_window(los[i], his[i])
+                self._after_refinement(unref)  # pre-serving unrefined rows
         self.stats.hot_queries += int((~cold_q).sum())
         self.stats.cold_queries += int(cold_q.sum())
         return out
@@ -704,34 +926,36 @@ class DeviceQueryServer:
         from ..core.queries_jax import knn_query_batch_jax
 
         runner = self._shard_runner(deadline)
-        t = self.ambi.table
-        degraded = np.zeros(qs.shape[0], dtype=bool)
-        if self.sdev is not None:
-            res, cs = knn_query_batch_sharded(
-                self.sdev, qs, k, use_kernel=self.use_kernel,
-                runner=runner, return_certs=True,
-            )
-            res = list(res)
-            for i, cert in enumerate(cs):
-                if not cert.certified_exact:
-                    degraded[i] = True
-                    self.stats.host_fallbacks += 1
-        else:
-            try:
-                res = list(runner(0, lambda: knn_query_batch_jax(
-                    self.dev, qs, k, use_kernel=self.use_kernel
-                )))
-            except ShardUnavailable:
-                res = [np.zeros(0, dtype=np.int64)] * qs.shape[0]
-                degraded[:] = True
-                self.stats.host_fallbacks += qs.shape[0]
-        out = list(res)
-        cold_q = self._knn_cold_mask(qs, res, k) | degraded
-        if cold_q.any():
+        with self.table_lock.read():
+            t = self.ambi.table
+            degraded = np.zeros(qs.shape[0], dtype=bool)
+            if self.sdev is not None:
+                res, cs = knn_query_batch_sharded(
+                    self.sdev, qs, k, use_kernel=self.use_kernel,
+                    runner=runner, return_certs=True,
+                )
+                res = list(res)
+                for i, cert in enumerate(cs):
+                    if not cert.certified_exact:
+                        degraded[i] = True
+                        self.stats.host_fallbacks += 1
+            else:
+                try:
+                    res = list(runner(0, lambda: knn_query_batch_jax(
+                        self.dev, qs, k, use_kernel=self.use_kernel
+                    )))
+                except ShardUnavailable:
+                    res = [np.zeros(0, dtype=np.int64)] * qs.shape[0]
+                    degraded[:] = True
+                    self.stats.host_fallbacks += qs.shape[0]
+            out = list(res)
+            cold_q = self._knn_cold_mask(qs, res, k) | degraded
             before_unref = np.flatnonzero(t.unrefined)
-            for i in np.flatnonzero(cold_q):
-                out[i] = self._host_knn(qs[i], k)
-            self._after_refinement(before_unref)
+        if cold_q.any():
+            with self.table_lock.write():
+                for i in np.flatnonzero(cold_q):
+                    out[i] = self._host_knn(qs[i], k)
+                self._after_refinement(before_unref)
         self.stats.hot_queries += int((~cold_q).sum())
         self.stats.cold_queries += int(cold_q.sum())
         return out
@@ -814,7 +1038,9 @@ class DeviceQueryServer:
                 self.stats.delta_refreshes += 1
 
         try:
-            self.retry.call(upload, on_retry=self._count_retry)
+            self.retry.call(
+                upload, on_retry=self._count_retry, call_key="apply_delta"
+            )
         except RetryExhausted:
             pass  # device stale, host authoritative; retried next graft
         self._maybe_compact()
@@ -869,7 +1095,9 @@ class DeviceQueryServer:
                 },
             )
 
-        self.retry.call(attempt, on_retry=self._count_retry)
+        self.retry.call(
+            attempt, on_retry=self._count_retry, call_key="snapshot"
+        )
         if self.journal is not None:
             self.journal.truncate()
         self.stats.checkpoints += 1

@@ -20,6 +20,8 @@ Failure points (the names the serving stack fires; see
   * ``snapshot_save``    — durable snapshot barrier write
   * ``snapshot_load``    — snapshot read at recovery time
   * ``journal_append``   — graft-journal record append
+  * ``admission``        — async-frontend request admission (ctx: kind)
+  * ``batch_close``      — async-frontend microbatch close/dispatch
 
 A plan can schedule faults two ways, per rule: an explicit ``at_calls``
 set (fire on exactly those 1-based call indices at the point — the
@@ -44,6 +46,8 @@ FAILURE_POINTS = (
     "snapshot_save",
     "snapshot_load",
     "journal_append",
+    "admission",
+    "batch_close",
 )
 
 

@@ -19,14 +19,32 @@ while production uses the real ones.
     burn) until ``cooldown_s`` has elapsed, then a single half-open
     trial either closes it or re-opens it.  The serving layer keeps one
     breaker per shard so a dead shard degrades only its own subspace.
+  * :class:`TableLock` — a writer-preferring readers-writer lock.  The
+    async frontend races device dispatches (readers of the host
+    ``NodeTable``) against adaptive refinement (``graft`` /
+    ``apply_delta`` / ``compact`` — writers); the lock makes that safe
+    while keeping the common read path concurrent.  Writer preference
+    means a query storm cannot starve refinement.
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
+import threading
 import time
+import zlib
 from typing import Callable, Optional
 
 import numpy as np
+
+
+def _call_id(key) -> int:
+    """Stable 32-bit id for a retry call site (pure function of the key)."""
+    if key is None:
+        return 0
+    if isinstance(key, (int, np.integer)):
+        return int(key) & 0xFFFFFFFF
+    return zlib.crc32(repr(key).encode()) & 0xFFFFFFFF
 
 
 class DeadlineExceeded(RuntimeError):
@@ -74,9 +92,16 @@ class RetryPolicy:
     """Bounded retries with exponential backoff + seeded jitter.
 
     Attempt ``i`` (0-based) sleeps ``base_delay_s * backoff**i`` scaled
-    by a jitter factor drawn uniformly from ``[1 - jitter, 1 + jitter]``
-    out of a seeded stream, capped at ``max_delay_s`` and at the
-    deadline's remaining budget.  ``max_attempts=1`` means no retries.
+    by a jitter factor drawn uniformly from ``[1 - jitter, 1 + jitter]``,
+    capped at ``max_delay_s`` and at the deadline's remaining budget.
+    ``max_attempts=1`` means no retries.
+
+    The jitter draw is a *pure function* of ``(seed, call-id, attempt)``
+    — there is no shared rng stream, so concurrent :meth:`call`\\ s from
+    the async frontend's worker threads see the same delays no matter
+    how the scheduler interleaves them.  Callers that run concurrently
+    pass distinct ``call_key``\\ s (e.g. the shard id) to decorrelate
+    their jitter; the key is hashed stably, never by ``id()``.
     """
 
     max_attempts: int = 3
@@ -90,14 +115,14 @@ class RetryPolicy:
     def __post_init__(self):
         if self.max_attempts < 1:
             raise ValueError("max_attempts must be >= 1")
-        self._rng = np.random.default_rng(self.seed)
 
-    def delay(self, attempt: int) -> float:
+    def delay(self, attempt: int, call_id: int = 0) -> float:
         """Backoff before retry number ``attempt`` (1-based)."""
         raw = self.base_delay_s * (self.backoff ** (attempt - 1))
         if raw <= 0.0:
             return 0.0
-        factor = 1.0 + self.jitter * (2.0 * self._rng.random() - 1.0)
+        rng = np.random.default_rng([self.seed, call_id, attempt])
+        factor = 1.0 + self.jitter * (2.0 * rng.random() - 1.0)
         return float(min(raw * max(factor, 0.0), self.max_delay_s))
 
     def call(
@@ -108,10 +133,12 @@ class RetryPolicy:
         no_retry: tuple = (DeadlineExceeded,),
         deadline: Optional[Deadline] = None,
         on_retry: Optional[Callable[[int, BaseException], None]] = None,
+        call_key=None,
     ):
         """Run ``fn`` under the policy; raises :class:`RetryExhausted`
         (with the last failure as ``__cause__``) when attempts run out,
         or :class:`DeadlineExceeded` when the budget is spent first."""
+        cid = _call_id(call_key)
         last: Optional[BaseException] = None
         for attempt in range(1, self.max_attempts + 1):
             if deadline is not None:
@@ -126,7 +153,7 @@ class RetryPolicy:
                     break
                 if on_retry is not None:
                     on_retry(attempt, e)
-                pause = self.delay(attempt)
+                pause = self.delay(attempt, cid)
                 if deadline is not None:
                     deadline.check()
                     pause = min(pause, max(deadline.remaining(), 0.0))
@@ -184,3 +211,59 @@ class CircuitBreaker:
     def reset(self) -> None:
         """Force-close (the repair path: the shard was just rebuilt)."""
         self.record_success()
+
+
+class TableLock:
+    """Writer-preferring readers-writer lock for the serving-time table.
+
+    Device dispatches and cold-mask computations *read* the host
+    ``NodeTable``; adaptive refinement (``graft``), delta uploads, shard
+    re-exports, ``compact`` row remaps, and shard ``repair`` *write* it.
+    Before this lock the adaptive path mutated the table with no
+    synchronization at all — safe only because ``DeviceQueryServer`` was
+    called from one thread; the async frontend overlaps a device worker
+    with host refinement, so the races became real.
+
+    Semantics: any number of concurrent readers, one writer, and a
+    waiting writer blocks *new* readers (writer preference — a query
+    storm cannot starve refinement).  Not reentrant: a thread must
+    never nest acquisitions, which the serving code honors by releasing
+    its read section before entering a write section.
+    """
+
+    def __init__(self):
+        self._cond = threading.Condition()
+        self._readers = 0
+        self._writer = False
+        self._writers_waiting = 0
+
+    @contextlib.contextmanager
+    def read(self):
+        with self._cond:
+            while self._writer or self._writers_waiting:
+                self._cond.wait()
+            self._readers += 1
+        try:
+            yield
+        finally:
+            with self._cond:
+                self._readers -= 1
+                if self._readers == 0:
+                    self._cond.notify_all()
+
+    @contextlib.contextmanager
+    def write(self):
+        with self._cond:
+            self._writers_waiting += 1
+            try:
+                while self._writer or self._readers:
+                    self._cond.wait()
+            finally:
+                self._writers_waiting -= 1
+            self._writer = True
+        try:
+            yield
+        finally:
+            with self._cond:
+                self._writer = False
+                self._cond.notify_all()

@@ -173,6 +173,40 @@ class ServerEngine:
         return self.srv.knn(qs, k)
 
 
+class FrontendEngine:
+    """The async admission/batching frontend over ``DeviceQueryServer``,
+    driven deterministically (virtual clock, inline lanes): every query
+    goes through submit -> bounded queue -> microbatch close -> dispatch,
+    and the served ids must still be id-identical to the NumPy oracle —
+    batching and padding are not allowed to change answers."""
+
+    name = "frontend"
+
+    def __init__(self, index, **kw):
+        from repro.serve.engine import DeviceQueryServer
+        from repro.serve.frontend import Frontend, VirtualClock
+
+        self.srv = DeviceQueryServer.from_index(index, microbatch=32, **kw)
+        self.clock = VirtualClock()
+        self.fe = Frontend(self.srv, clock=self.clock, queue_bound=4096,
+                           batch_max=32, batch_window_s=0.001)
+
+    def _drain(self, reqs):
+        self.fe.drain()
+        bad = [r for r in reqs if r.status != "ok"]
+        assert not bad, f"frontend dropped {len(bad)} requests in parity run"
+        return [r.ids for r in reqs]
+
+    def window(self, los, his):
+        reqs = [self.fe.submit_window(lo, hi)
+                for lo, hi in zip(np.atleast_2d(los), np.atleast_2d(his))]
+        return self._drain(reqs)
+
+    def knn(self, qs, k):
+        reqs = [self.fe.submit_knn(q, k) for q in np.atleast_2d(qs)]
+        return self._drain(reqs)
+
+
 def engine_suite(index, ms=(1, 2, 4), adaptive=True):
     """Every engine over one built index; first entry is the NumPy oracle."""
     return (
@@ -180,6 +214,7 @@ def engine_suite(index, ms=(1, 2, 4), adaptive=True):
          FusedDeviceEngine(index, compressed=True)]
         + [ShardedEngine(index, m) for m in ms]
         + ([AdaptiveServeEngine(index)] if adaptive else [])
+        + [FrontendEngine(index)]
     )
 
 

@@ -204,6 +204,48 @@ def test_backoff_delays_exponential_and_seeded():
     assert [mk().delay(i) for i in (1, 2)] == [mk().delay(i) for i in (1, 2)]
 
 
+def test_retry_jitter_deterministic_across_threads():
+    """The jitter draw is a pure function of (seed, call-id, attempt): two
+    threads hammering ONE shared policy concurrently must each see exactly
+    the delays a single-threaded run of their call site sees — a shared
+    rng stream would interleave nondeterministically."""
+    import threading
+
+    tl = threading.local()
+    pol = RetryPolicy(max_attempts=4, base_delay_s=0.1, jitter=0.5, seed=7,
+                      sleep=lambda s: tl.slept.append(s))
+
+    def boom():
+        raise RuntimeError("down")
+
+    def delays_for(key):
+        tl.slept = []
+        with pytest.raises(RetryExhausted):
+            pol.call(boom, call_key=key)
+        return list(tl.slept)
+
+    # single-threaded reference, then 2 threads x 50 interleaved calls
+    expect = {key: delays_for(key) for key in ("lane-a", "lane-b")}
+    results = {"lane-a": [], "lane-b": []}
+
+    def worker(key):
+        for _ in range(50):
+            results[key].append(delays_for(key))
+
+    threads = [threading.Thread(target=worker, args=(k,))
+               for k in ("lane-a", "lane-b")]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    for key in ("lane-a", "lane-b"):
+        assert len(results[key]) == 50
+        assert all(s == expect[key] for s in results[key])
+    # distinct call sites decorrelate; same site reproduces exactly
+    assert len(expect["lane-a"]) == 3
+    assert expect["lane-a"] != expect["lane-b"]
+
+
 def test_deadline_caps_backoff_and_raises():
     clk = VirtualClock()
     dl = Deadline(1.0, clock=clk)

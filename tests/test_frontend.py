@@ -1,0 +1,436 @@
+"""Async serving frontend (PR-8): admission, batching, shedding, brownout.
+
+Saturation behavior is pinned under a virtual clock — the same burst
+replays bit-identically — and the robustness contract is two-sided, like
+the chaos tests: overload must surface as *honest* degradation (bounded
+queue, certificates on every dropped or degraded answer), while every
+admitted answer stays id-identical to the NumPy oracle.
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.serve.engine import DeviceQueryServer
+from repro.serve.faults import FaultPlan, FaultRule
+from repro.serve.frontend import Frontend, VirtualClock
+from repro.serve.resilience import RetryPolicy
+
+from engines import NumpyEngine, build_fmbi, f32_points
+
+K = 5
+
+
+@pytest.fixture(scope="module")
+def setup():
+    pts = f32_points(1500, 2, seed=21)
+    index = build_fmbi(pts, M=64)
+    return pts, index
+
+
+def _server(index, **kw):
+    kw.setdefault("microbatch", 16)
+    return DeviceQueryServer.from_index(index, **kw)
+
+
+def _stream(n, d, seed):
+    """Deterministic mixed stream of (kind, *payload) items."""
+    rng = np.random.default_rng(seed)
+    out = []
+    for i in range(n):
+        c = rng.random(d) * 0.9
+        if i % 3 == 2:
+            out.append(("knn", np.clip(c, 0, 1)))
+        else:
+            out.append(("window", np.clip(c - 0.08, 0, 1),
+                        np.clip(c + 0.08, 0, 1)))
+    return out
+
+
+def _submit(fe, item):
+    if item[0] == "window":
+        return fe.submit_window(item[1], item[2])
+    return fe.submit_knn(item[1], K)
+
+
+# --------------------------------------------------------------------------
+# admission: the queue bound is an invariant, not a hint
+# --------------------------------------------------------------------------
+def test_queue_depth_never_exceeds_bound(setup):
+    _, index = setup
+    srv = _server(index)
+    clock = VirtualClock()
+    fe = Frontend(srv, clock=clock, queue_bound=8, batch_max=4,
+                  batch_window_s=0.01)
+    reqs = []
+    for item in _stream(40, 2, seed=1):
+        reqs.append(_submit(fe, item))
+        assert fe.depth <= 8
+        if len(reqs) % 13 == 0:
+            clock.advance(0.02)
+            fe.pump()
+            assert fe.depth <= 8
+    fe.drain()
+    assert fe.stats.depth_peak <= 8
+    assert fe.stats.rejected > 0, "overflow must reject, not queue"
+    for r in reqs:
+        assert r.done
+        if r.status == "rejected":
+            assert "queue full" in r.reason
+            assert r.cert is not None and not r.cert.complete
+            assert r.ids.size == 0
+
+
+def test_rejected_after_stop(setup):
+    _, index = setup
+    fe = Frontend(_server(index), clock=VirtualClock(), queue_bound=8)
+    fe.stop()
+    r = fe.submit_window([0.1, 0.1], [0.2, 0.2])
+    assert r.status == "rejected" and "stopped" in r.reason
+
+
+# --------------------------------------------------------------------------
+# saturation: 2x burst sheds with certificates, admitted answers exact
+# --------------------------------------------------------------------------
+def test_burst_sheds_excess_with_certs_admitted_stay_exact(setup):
+    pts, index = setup
+    srv = _server(index)
+    oracle = NumpyEngine(index)
+    clock = VirtualClock()
+    bound = 16
+    fe = Frontend(srv, clock=clock, queue_bound=bound, batch_max=8,
+                  batch_window_s=0.001)
+    stream = _stream(2 * bound, 2, seed=7)  # 2x the queue capacity, no pumps
+    reqs = [_submit(fe, it) for it in stream]
+    fe.drain()
+
+    dropped = [r for r in reqs if r.status != "ok"]
+    served = [(r, it) for r, it in zip(reqs, stream) if r.status == "ok"]
+    assert dropped, "a 2x-capacity burst must shed"
+    assert len(served) + len(dropped) == len(reqs)
+    for r in dropped:
+        assert r.status == "rejected"
+        assert r.cert is not None and not r.cert.complete
+    # admitted answers: id-identical to the NumPy oracle
+    w = [(r, it) for r, it in served if it[0] == "window"]
+    los = np.stack([it[1] for _, it in w])
+    his = np.stack([it[2] for _, it in w])
+    for (r, _), ref in zip(w, oracle.window(los, his)):
+        assert np.array_equal(np.sort(r.ids), np.sort(ref))
+    kq = [(r, it) for r, it in served if it[0] == "knn"]
+    qs = np.stack([it[1] for _, it in kq])
+    for (r, _), ref in zip(kq, oracle.knn(qs, K)):
+        assert np.array_equal(r.ids, ref)
+
+
+# --------------------------------------------------------------------------
+# batch former: closes at size N or age T, whichever first
+# --------------------------------------------------------------------------
+def test_batch_closes_at_size_or_age(setup):
+    _, index = setup
+    srv = _server(index)
+    clock = VirtualClock()
+    fe = Frontend(srv, clock=clock, queue_bound=64, batch_max=4,
+                  batch_window_s=0.01)
+    # size trigger: the 4th submit makes the lane due with no time passing
+    reqs = [fe.submit_window([0.1, 0.1], [0.3, 0.3]) for _ in range(4)]
+    assert fe.pump() == 1
+    assert all(r.status == "ok" for r in reqs)
+    # age trigger: one lone request closes only once the window elapses
+    r = fe.submit_window([0.1, 0.1], [0.3, 0.3])
+    assert fe.pump() == 0 and not r.done
+    clock.advance(0.009)
+    assert fe.pump() == 0 and not r.done
+    clock.advance(0.002)
+    assert fe.pump() == 1 and r.status == "ok"
+    # lanes are independent: knn with different k never share a batch
+    a = fe.submit_knn([0.5, 0.5], 2)
+    b = fe.submit_knn([0.5, 0.5], 3)
+    clock.advance(0.02)
+    assert fe.pump() == 2
+    assert a.ids.size == 2 and b.ids.size == 3
+
+
+# --------------------------------------------------------------------------
+# deadlines: expired requests are certified timeouts, never silent stalls
+# --------------------------------------------------------------------------
+def test_deadline_expired_in_queue_times_out_with_cert(setup):
+    _, index = setup
+    clock = VirtualClock()
+    fe = Frontend(_server(index), clock=clock, queue_bound=16,
+                  batch_max=100, batch_window_s=10.0,
+                  default_deadline_s=0.05)
+    r1 = fe.submit_window([0.1, 0.1], [0.3, 0.3])
+    r2 = fe.submit_window([0.1, 0.1], [0.3, 0.3], deadline_s=1.0)
+    clock.advance(0.1)  # past r1's deadline; the lane is now due
+    fe.pump()
+    assert r1.status == "timeout"
+    assert r1.cert is not None and not r1.cert.complete
+    assert r2.status == "ok", "a live member still gets served"
+    st = fe.stats
+    assert st.timed_out == 1 and st.completed == 1
+
+
+# --------------------------------------------------------------------------
+# brownout: watermark hysteresis, no flapping, certified degradation
+# --------------------------------------------------------------------------
+def test_brownout_hysteresis_does_not_flap(setup):
+    _, index = setup
+    srv = _server(index)
+    clock = VirtualClock()
+    fe = Frontend(srv, clock=clock, queue_bound=64, batch_max=999,
+                  batch_window_s=0.005, brownout_high=16, brownout_low=4)
+    # four independent knn lanes, staggered in time for one-lane stepping
+    for k in (1, 2, 3, 4):
+        for _ in range(4):
+            fe.submit_knn([0.5, 0.5], k)
+        clock.advance(0.001)
+    assert fe.brownout and fe.stats.brownout_enters == 1
+    # drain lane by lane: depths 12 and 8 sit between the watermarks and
+    # must neither exit nor re-enter
+    clock.advance(0.0015)  # lane k=1 is 5.5ms old; k=2 only 4.5ms
+    assert fe.pump() == 1
+    assert fe.depth == 12 and fe.brownout and fe.stats.brownout_exits == 0
+    clock.advance(0.001)
+    assert fe.pump() == 1
+    assert fe.depth == 8 and fe.brownout and fe.stats.brownout_exits == 0
+    clock.advance(0.001)
+    assert fe.pump() == 1
+    assert fe.depth == 4 and not fe.brownout  # at the low watermark: exit
+    assert fe.stats.brownout_exits == 1
+    # climbing back to just under high must not re-enter
+    for _ in range(11):
+        fe.submit_knn([0.5, 0.5], 5)
+    assert fe.depth == 15 and not fe.brownout
+    assert fe.stats.brownout_enters == 1
+    fe.submit_knn([0.5, 0.5], 5)
+    assert fe.brownout and fe.stats.brownout_enters == 2
+    fe.drain()
+
+
+def test_brownout_caps_knn_and_marks_requests(setup):
+    _, index = setup
+    srv = _server(index)
+    clock = VirtualClock()
+    fe = Frontend(srv, clock=clock, queue_bound=32, batch_max=4,
+                  batch_window_s=10.0, brownout_high=6, brownout_low=1,
+                  brownout_knn_rounds=0)
+    reqs = [fe.submit_knn(np.random.default_rng(i).random(2), K)
+            for i in range(8)]
+    assert fe.brownout
+    fe.drain()
+    assert all(r.status == "ok" for r in reqs)
+    assert any(r.brownout for r in reqs)
+    assert fe.stats.brownout_batches > 0
+    for r in reqs:
+        assert r.cert is not None  # capped answers still carry provenance
+
+
+# --------------------------------------------------------------------------
+# determinism: identical schedule -> identical outcome, twice
+# --------------------------------------------------------------------------
+def _run_schedule(index):
+    srv = _server(index)
+    clock = VirtualClock()
+    fe = Frontend(srv, clock=clock, queue_bound=12, batch_max=4,
+                  batch_window_s=0.01, default_deadline_s=0.5,
+                  brownout_high=8, brownout_low=2)
+    reqs = []
+    for i, item in enumerate(_stream(30, 2, seed=13)):
+        reqs.append(_submit(fe, item))
+        if i % 5 == 4:
+            clock.advance(0.004)
+            fe.pump()
+    clock.advance(1.0)
+    fe.drain()
+    trace = [(r.status, r.reason,
+              tuple(np.sort(r.ids).tolist()) if r.ids is not None else None,
+              r.brownout, r.t_done)
+             for r in reqs]
+    return trace, fe.stats
+
+
+def test_virtual_clock_replay_is_bit_identical(setup):
+    _, index = setup
+    t1, s1 = _run_schedule(index)
+    t2, s2 = _run_schedule(index)
+    assert t1 == t2
+    assert s1 == s2
+
+
+# --------------------------------------------------------------------------
+# fault points: admission + batch_close wired into the seeded fault plane
+# --------------------------------------------------------------------------
+def test_admission_fault_point_rejects(setup):
+    _, index = setup
+    plan = FaultPlan([FaultRule("admission", rate=1.0, max_fires=2)],
+                     seed=5)
+    fe = Frontend(_server(index), clock=VirtualClock(), queue_bound=16,
+                  fault_plan=plan)
+    r1 = fe.submit_window([0.1, 0.1], [0.2, 0.2])
+    r2 = fe.submit_knn([0.5, 0.5], K)
+    r3 = fe.submit_window([0.1, 0.1], [0.2, 0.2])
+    assert r1.status == "rejected" and "fault" in r1.reason
+    assert r2.status == "rejected" and r2.cert is not None
+    assert r3.status == "queued"  # max_fires spent; admission recovers
+    fe.drain()
+    assert r3.status == "ok"
+
+
+def test_batch_close_fault_retries_then_serves(setup):
+    _, index = setup
+    # one injected close failure; the server's retry policy outlasts it
+    plan = FaultPlan([FaultRule("batch_close", at_calls={1})], seed=5)
+    srv = _server(index, retry=RetryPolicy(max_attempts=2,
+                                           sleep=lambda s: None))
+    fe = Frontend(srv, clock=VirtualClock(), queue_bound=16,
+                  batch_max=2, batch_window_s=0.001, fault_plan=plan)
+    r1 = fe.submit_window([0.1, 0.1], [0.4, 0.4])
+    r2 = fe.submit_window([0.2, 0.2], [0.5, 0.5])
+    fe.drain()
+    assert r1.status == "ok" and r2.status == "ok"
+
+
+def test_batch_close_fault_exhausting_retries_sheds_with_certs(setup):
+    _, index = setup
+    plan = FaultPlan([FaultRule("batch_close", rate=1.0)], seed=5)
+    srv = _server(index, retry=RetryPolicy(max_attempts=2,
+                                           sleep=lambda s: None))
+    fe = Frontend(srv, clock=VirtualClock(), queue_bound=16,
+                  batch_max=2, batch_window_s=0.001, fault_plan=plan)
+    reqs = [fe.submit_window([0.1, 0.1], [0.4, 0.4]) for _ in range(4)]
+    fe.drain()
+    for r in reqs:
+        assert r.status == "shed"
+        assert r.cert is not None and not r.cert.complete
+        assert "dispatch failed" in r.reason
+    assert fe.stats.shed == 4
+
+
+# --------------------------------------------------------------------------
+# real-time mode: dispatcher + refine threads, same contract
+# --------------------------------------------------------------------------
+def test_realtime_dispatcher_serves_and_drains(setup):
+    pts, index = setup
+    srv = _server(index)
+    oracle = NumpyEngine(index)
+    fe = Frontend(srv, queue_bound=256, batch_max=8,
+                  batch_window_s=0.001).start()
+    stream = _stream(40, 2, seed=3)
+    reqs = [_submit(fe, it) for it in stream]
+    for r in reqs:
+        assert r.wait(30.0), "request never reached a terminal state"
+    fe.stop()
+    served = [(r, it) for r, it in zip(reqs, stream) if r.status == "ok"]
+    assert served, "an unsaturated run must serve"
+    w = [(r, it) for r, it in served if it[0] == "window"]
+    los = np.stack([it[1] for _, it in w])
+    his = np.stack([it[2] for _, it in w])
+    for (r, _), ref in zip(w, oracle.window(los, his)):
+        assert np.array_equal(np.sort(r.ids), np.sort(ref))
+
+
+def test_virtual_mode_rejects_start(setup):
+    _, index = setup
+    fe = Frontend(_server(index), clock=VirtualClock())
+    with pytest.raises(RuntimeError, match="VirtualClock"):
+        fe.start()
+
+
+# --------------------------------------------------------------------------
+# adaptive serving through the frontend: overlap + device-only brownout
+# --------------------------------------------------------------------------
+def _adaptive_server(pts, M=64, **kw):
+    from repro.core import AMBI
+
+    kw.setdefault("microbatch", 16)
+    return DeviceQueryServer.from_ambi(AMBI(pts, M), **kw)
+
+
+def _brute_window(pts, lo, hi):
+    return np.sort(np.flatnonzero(
+        (pts >= lo).all(axis=1) & (pts <= hi).all(axis=1)
+    ))
+
+
+def test_adaptive_overlap_refines_on_second_lane_and_stays_exact(setup):
+    pts, _ = setup
+    srv = _adaptive_server(pts)
+    clock = VirtualClock()
+    fe = Frontend(srv, clock=clock, queue_bound=64, batch_max=8,
+                  batch_window_s=0.001)
+    rng = np.random.default_rng(11)
+    reqs = []
+    for _ in range(16):
+        c = rng.random(2) * 0.9
+        reqs.append(fe.submit_window(np.clip(c - 0.06, 0, 1),
+                                     np.clip(c + 0.06, 0, 1)))
+    clock.advance(0.01)
+    fe.pump()
+    fe.drain()
+    assert fe.stats.refine_batches > 0, "cold sub-batches use the refine lane"
+    for r in reqs:
+        assert r.status == "ok"
+        lo, hi = r.payload
+        assert np.array_equal(np.sort(r.ids), _brute_window(pts, lo, hi))
+
+
+def test_adaptive_brownout_serves_device_only_with_certs(setup):
+    pts, _ = setup
+    srv = _adaptive_server(pts)
+    clock = VirtualClock()
+    fe = Frontend(srv, clock=clock, queue_bound=64, batch_max=4,
+                  batch_window_s=10.0, brownout_high=6, brownout_low=1)
+    rng = np.random.default_rng(12)
+    reqs = []
+    for _ in range(12):
+        c = rng.random(2) * 0.9
+        reqs.append(fe.submit_window(np.clip(c - 0.06, 0, 1),
+                                     np.clip(c + 0.06, 0, 1)))
+    assert fe.brownout
+    grafts_before = srv.stats.grafts
+    fe.drain()
+    brown = [r for r in reqs if r.brownout]
+    assert brown, "the flooded tail must be served in brownout"
+    assert srv.stats.grafts == grafts_before, \
+        "brownout must not pay for host refinement"
+    # a fresh AMBI is all-cold: the degraded answers must say so honestly
+    degraded = [r for r in brown if not r.cert.complete]
+    assert degraded
+    for r in degraded:
+        assert r.cert.missing_lo is not None and len(r.cert.missing_lo) > 0
+        # the returned ids never lie outside the requested window
+        lo, hi = r.payload
+        if r.ids.size:
+            assert ((pts[r.ids] >= lo) & (pts[r.ids] <= hi)).all()
+
+
+# --------------------------------------------------------------------------
+# table RW-lock regression: queries racing refinement stay exact
+# --------------------------------------------------------------------------
+def test_table_lock_queries_racing_refinement_stay_exact():
+    pts = f32_points(4000, 2, seed=33)
+    srv = _adaptive_server(pts, M=64)
+    rngs = [np.random.default_rng(s) for s in (1, 2, 3)]
+    errors = []
+
+    def worker(rng):
+        try:
+            for _ in range(12):
+                c = rng.random((8, 2)) * 0.9
+                los, his = np.clip(c - 0.05, 0, 1), np.clip(c + 0.05, 0, 1)
+                for lo, hi, ids in zip(los, his, srv.window(los, his)):
+                    expect = _brute_window(pts, lo, hi)
+                    if not np.array_equal(np.sort(ids), expect):
+                        errors.append((lo, hi))
+                        return
+        except Exception as e:  # pragma: no cover - the regression itself
+            errors.append(repr(e))
+
+    threads = [threading.Thread(target=worker, args=(r,)) for r in rngs]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120.0)
+    assert not errors, f"racing refinement corrupted answers: {errors[:2]}"
+    assert srv.ambi.is_fully_refined() or srv.stats.grafts > 0
