@@ -16,6 +16,10 @@ It also times the compiled device query engine (``queries_jax``) on the
 same workload, recording ``*_jax_s`` entries next to the CPU-engine
 numbers, and the sharded device engine (``distributed_jax``, 4-way
 partition behind the subspace-MBB router) as ``*_sharded_*`` entries.
+Streaming ingest (PR-9) records sustained insert throughput through the
+serving stack (``ingest_sustained_points_per_s`` — a rate, gated from
+below) and the 64-window batch latency over the resulting multi-tier
+state (``ingest_query_batch_64_s``).
 
   PYTHONPATH=src python -m benchmarks.bench_hotpaths            # full, writes BENCH_CORE.json
   PYTHONPATH=src python -m benchmarks.bench_hotpaths --smoke    # quick gate, no write
@@ -79,6 +83,7 @@ SMOKE_CEILINGS_S = {
     "adaptive_serve_first": 8.0,
     "adaptive_serve_steady": 1.5,
     "adaptive_recovery": 8.0,
+    "ingest_query": 2.0,
 }
 
 # hot paths gated against the committed smoke-scale baselines: >30%
@@ -94,7 +99,14 @@ SMOKE_GATED = {
     "adaptive_serve_first": "adaptive_serve_first_result_s",
     "adaptive_serve_steady": "adaptive_serve_steady_batch_64_s",
     "adaptive_recovery": "adaptive_recovery_s",
+    "ingest_sustained": "ingest_sustained_points_per_s",
+    "ingest_query": "ingest_query_batch_64_s",
 }
+# gated entries that are rates (higher is better): the gate inverts — a
+# fresh run fails when it lands >30% BELOW the committed baseline
+SMOKE_RATE_GATED = {"ingest_sustained"}
+# static floors for rate paths with no committed baseline (points/s)
+SMOKE_RATE_FLOORS = {"ingest_sustained": 2_000.0}
 SMOKE_REGRESSION_FRAC = 0.30
 SMOKE_NOISE_FLOOR_S = 0.05
 # one-shot cold-start paths carry jit-compile variance well above the
@@ -384,6 +396,36 @@ def run(n: int = 600_000, seed: int = 0, repeats: int = 3) -> dict:
         results["adaptive_recovery_s"] = -1.0
         results["adaptive_recovery_error"] = str(e)
 
+    # ---- streaming ingest (LSM tiers, delta-only device refresh) ---------
+    # sustained throughput: batched inserts through the serving stack —
+    # memtable appends, flushes, tier merges AND the incremental device
+    # refresh after each mutation; then the 64-window batch latency on the
+    # resulting multi-tier state (what a reader pays mid-ingest)
+    try:
+        from repro.core import StreamingIndex
+        from repro.serve.engine import DeviceQueryServer
+
+        stream = StreamingIndex(pts, buffer_pages=M)
+        ingest_srv = DeviceQueryServer.from_streaming(stream, microbatch=64)
+        ingest_n = min(32_768, max(4_096, n // 16))
+        irng = np.random.default_rng(5)
+        feed = irng.random((ingest_n, d))
+        t0 = time.perf_counter()
+        for off in range(0, ingest_n, 1024):
+            ingest_srv.insert(feed[off:off + 1024])
+        dt = time.perf_counter() - t0
+        results["ingest_sustained_points_per_s"] = round(ingest_n / dt, 1)
+        results["ingest_flushes"] = stream.flushes
+        results["ingest_tier_merges"] = stream.merges + stream.fusions
+        ingest_srv.window(los, his)  # compile/warm on the final tier shapes
+        results["ingest_query_batch_64_s"] = _timed(
+            lambda: ingest_srv.window(los, his), repeats
+        )
+    except Exception as e:  # pragma: no cover - accelerator-env dependent
+        results["ingest_sustained_points_per_s"] = -1.0
+        results["ingest_query_batch_64_s"] = -1.0
+        results["ingest_error"] = str(e)
+
     # ---- JAX candidate-leaf window_count --------------------------------
     try:
         import jax.numpy as jnp
@@ -488,6 +530,20 @@ def smoke_gate(res: dict, use_baselines: bool = True) -> list[str]:
                             "(see *_error entry in the results)")
             continue
         base = baselines.get(f"smoke_{key}", -1.0)
+        if name in SMOKE_RATE_GATED:  # higher is better: gate the floor
+            if base > 0:
+                limit = base * (1 - SMOKE_REGRESSION_FRAC)
+                if got < limit:
+                    failures.append(
+                        f"{name}: {got:.1f}/s < {limit:.1f}/s "
+                        f"(committed smoke baseline {base:.1f}/s -30%)"
+                    )
+            elif got < SMOKE_RATE_FLOORS[name]:
+                failures.append(
+                    f"{name}: {got:.1f}/s < static floor "
+                    f"{SMOKE_RATE_FLOORS[name]:.1f}/s (no committed baseline)"
+                )
+            continue
         if base > 0:
             floor = SMOKE_NOISE_FLOOR_OVERRIDES_S.get(
                 name, SMOKE_NOISE_FLOOR_S
@@ -561,7 +617,13 @@ def main(argv=None) -> int:
     for key in SMOKE_GATED.values():
         res[f"smoke_{key}"] = smoke_res[key]
 
-    atomic_write_json(BENCH_CORE, res)
+    # merge over the committed file: keys this run skipped (e.g. the 10M
+    # scaling numbers under --no-scale) must survive the rewrite
+    out = {}
+    if BENCH_CORE.exists():
+        out = json.loads(BENCH_CORE.read_text())
+    out.update(res)
+    atomic_write_json(BENCH_CORE, out)
     print(f"wrote {BENCH_CORE}")
     return 0
 

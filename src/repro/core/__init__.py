@@ -14,13 +14,16 @@ from .queries import (
     window_query,
     window_query_batch,
 )
+from .streaming import DeviceMirror, StreamingIndex
 
 ALL_LOADERS = dict(LOADERS, fmbi=lambda pts, M, store=None: bulk_load(pts, M, store))
 
 __all__ = [
     "AMBI",
     "ALL_LOADERS",
+    "DeviceMirror",
     "LOADERS",
+    "StreamingIndex",
     "Index",
     "IOStats",
     "Node",

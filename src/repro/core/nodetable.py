@@ -121,12 +121,24 @@ class NodeTable:
         "_unrefined",
         "_perm",
         "_dfs",
+        "node_reallocs",
+        "perm_reallocs",
+        "node_rows_copied",
+        "perm_elems_copied",
     )
 
     def __init__(self, dim: int, node_capacity: int = 8, perm_capacity: int = 8):
         self.dim = int(dim)
         self._n = 0
         self._np = 0
+        # Reallocation accounting: how many times the backing arrays were
+        # reallocated and how many live elements those reallocations copied.
+        # Under amortized doubling total copies stay O(final size); a
+        # regression here means some path reintroduced O(n^2) append cost.
+        self.node_reallocs = 0
+        self.perm_reallocs = 0
+        self.node_rows_copied = 0
+        self.perm_elems_copied = 0
         self._mbb_lo = np.zeros((node_capacity, dim))
         self._mbb_hi = np.zeros((node_capacity, dim))
         self._page_id = np.zeros(node_capacity, dtype=np.int64)
@@ -212,7 +224,14 @@ class NodeTable:
         need = self._n + k
         cap = len(self._page_id)
         if need > cap:
+            # Always at least double: growing to the exact ``need`` would
+            # make a run of large-then-small appends reallocate (and copy
+            # the whole table) on every small append — the O(n^2) pattern
+            # sustained ingest streams hit.  Doubling keeps total copy work
+            # O(final size) regardless of append sizing.
             new = max(need, 2 * cap)
+            self.node_reallocs += 1
+            self.node_rows_copied += self._n
             grow2 = lambda a: np.concatenate(
                 [a, np.zeros((new - cap, self.dim), a.dtype)]
             )
@@ -239,6 +258,8 @@ class NodeTable:
         cap = len(self._perm)
         if need > cap:
             new = max(need, 2 * cap)
+            self.perm_reallocs += 1
+            self.perm_elems_copied += self._np
             self._perm = np.concatenate(
                 [self._perm, np.zeros(new - cap, np.int64)]
             )
@@ -354,6 +375,103 @@ class NodeTable:
             rows.append(first + j)
         self._append_level_order(queue, rows)
 
+    # -- streaming-mirror surgery -------------------------------------------
+    # The streaming device mirror (core/streaming.py) is one append-only
+    # table whose synthetic root spans the live LSM tiers.  These helpers
+    # are its whole mutation surface: append a tier subtree, re-point the
+    # root's CSR child block at the live tier roots (as freshly appended
+    # row copies, keeping the block contiguous), and neutralize retired
+    # rows.  Rows are never removed — ``DeviceTable.apply_delta`` requires
+    # previously exported leaf rows to persist — so retirement inverts the
+    # MBB and zeroes the fill count instead: traversal never reaches a
+    # detached row, and the recomputed device metadata makes its leaf block
+    # unmatchable (inverted box) and empty (count 0) for the global
+    # leaf-table pruning paths.
+    def append_subtree(self, src: "NodeTable") -> int:
+        """Append every row of ``src`` (root first); returns the base row.
+
+        ``src.perm`` is appended wholesale, so its ids must already be in
+        this table's id namespace (streaming tiers index the global point
+        buffer directly).  Page ids are taken verbatim — the tiers share
+        one ``PageStore`` namespace with the mirror.
+        """
+        k = src.n_nodes
+        base = self._grow_nodes(k)
+        pbase = self._np
+        self._append_perm(src.perm)
+        sl = slice(base, base + k)
+        self._mbb_lo[sl] = src.mbb_lo
+        self._mbb_hi[sl] = src.mbb_hi
+        self._page_id[sl] = src.page_id
+        self._child_count[sl] = src.child_count
+        self._leaf_count[sl] = src.leaf_count
+        self._raw_pages[sl] = src.raw_pages
+        self._unrefined[sl] = src.unrefined
+        self._first_child[sl] = np.where(
+            src.child_count > 0, src.first_child + base, 0
+        )
+        self._leaf_start[sl] = np.where(
+            src.leaf_start >= 0, src.leaf_start + pbase, -1
+        )
+        self._dfs = None
+        return base
+
+    def append_row_copies(self, rows) -> int:
+        """Append verbatim copies of ``rows`` (pointers preserved, so a copy
+        of a branch adopts the original's children); returns the base row."""
+        rows = np.asarray(rows, dtype=np.int64)
+        base = self._grow_nodes(len(rows))
+        sl = slice(base, base + len(rows))
+        self._mbb_lo[sl] = self._mbb_lo[rows]
+        self._mbb_hi[sl] = self._mbb_hi[rows]
+        self._page_id[sl] = self._page_id[rows]
+        self._first_child[sl] = self._first_child[rows]
+        self._child_count[sl] = self._child_count[rows]
+        self._leaf_start[sl] = self._leaf_start[rows]
+        self._leaf_count[sl] = self._leaf_count[rows]
+        self._raw_pages[sl] = self._raw_pages[rows]
+        self._unrefined[sl] = self._unrefined[rows]
+        self._dfs = None
+        return base
+
+    def set_root_children(self, first: int, count: int) -> None:
+        """Re-point row 0's CSR child block and tighten its MBB."""
+        self._first_child[0] = first
+        self._child_count[0] = count
+        self._mbb_lo[0] = self._mbb_lo[first : first + count].min(axis=0)
+        self._mbb_hi[0] = self._mbb_hi[first : first + count].max(axis=0)
+        self._leaf_start[0] = -1
+        self._leaf_count[0] = 0
+        self._dfs = None
+
+    def append_branch(self, first: int, count: int, page_id: int) -> int:
+        """Append a branch row adopting the existing contiguous row block
+        ``[first, first + count)`` as its children; returns the new row."""
+        r = self._grow_nodes(1)
+        self._mbb_lo[r] = self._mbb_lo[first : first + count].min(axis=0)
+        self._mbb_hi[r] = self._mbb_hi[first : first + count].max(axis=0)
+        self._page_id[r] = page_id
+        self._first_child[r] = first
+        self._child_count[r] = count
+        self._leaf_start[r] = -1
+        self._leaf_count[r] = 0
+        self._raw_pages[r] = 0
+        self._unrefined[r] = False
+        self._dfs = None
+        return r
+
+    def neutralize_rows(self, rows) -> None:
+        """Mark detached rows dead for every engine: inverted MBB (matches
+        no window, +inf k-NN mindist) and zero fill count."""
+        rows = np.asarray(rows, dtype=np.int64)
+        # 1e17: beyond any data yet small enough that f32 mindist math on
+        # the inverted box (sums and squares of ~2e17) stays finite
+        big = 1e17
+        self._mbb_lo[rows] = big
+        self._mbb_hi[rows] = -big
+        self._leaf_count[rows] = 0
+        self._dfs = None
+
     # -- vacuum --------------------------------------------------------------
     def compact(self) -> np.ndarray:
         """Vacuum the dead ``perm`` segments (and any unreachable rows)
@@ -403,18 +521,31 @@ class NodeTable:
         )
         self._n = n_new
         self._np = len(perm)
-        self._mbb_lo = mbb_lo
-        self._mbb_hi = mbb_hi
-        self._page_id = page_id
-        self._first_child = first_child
-        self._child_count = child_count
-        self._leaf_start = leaf_start
-        self._leaf_count = leaf_count
-        self._raw_pages = raw_pages
-        self._unrefined = unrefined
-        self._perm = perm
+        # Rebuild with capacity headroom: exact-fit arrays would force the
+        # very next graft — however small — to copy the whole table again,
+        # so a compact-then-trickle-grafts serving loop goes quadratic.
+        cap = n_new + n_new // 8 + 16
+        pcap = len(perm) + len(perm) // 8 + 16
+        self._mbb_lo = self._pad_cap(mbb_lo, cap)
+        self._mbb_hi = self._pad_cap(mbb_hi, cap)
+        self._page_id = self._pad_cap(page_id, cap)
+        self._first_child = self._pad_cap(first_child, cap)
+        self._child_count = self._pad_cap(child_count, cap)
+        self._leaf_start = self._pad_cap(leaf_start, cap, -1)
+        self._leaf_count = self._pad_cap(leaf_count, cap)
+        self._raw_pages = self._pad_cap(raw_pages, cap)
+        self._unrefined = self._pad_cap(unrefined, cap)
+        self._perm = self._pad_cap(perm, pcap)
         self._dfs = None
         return remap
+
+    @staticmethod
+    def _pad_cap(a: np.ndarray, cap: int, fill=0) -> np.ndarray:
+        """Copy ``a`` into a ``cap``-capacity array (headroom for appends)."""
+        shape = (cap, a.shape[1]) if a.ndim == 2 else cap
+        out = np.full(shape, fill, a.dtype)
+        out[: len(a)] = a
+        return out
 
     # -- traversal orders ---------------------------------------------------
     def parent_rows(self) -> np.ndarray:
@@ -450,15 +581,25 @@ class NodeTable:
 
     def subtree_points(self) -> np.ndarray:
         """Points under each row (leaves count their range, unrefined rows
-        their raw range).  Children always live at higher row ids than their
-        parent, so one reverse sweep accumulates bottom-up."""
+        their raw range), accumulated bottom-up over the BFS levels reached
+        from the root.  Level-wise accumulation (rather than a reverse row
+        sweep) keeps this correct for append-only tables — the streaming
+        mirror's root child block is appended *after* the subtrees it
+        points at, so children may live at lower row ids than their parent.
+        Unreachable (detached) rows keep their own leaf count."""
         sizes = np.where(self.leaf_start >= 0, self.leaf_count, 0).astype(np.int64)
-        fc, cc = self._first_child, self._child_count
-        for r in range(self._n - 1, -1, -1):
-            k = int(cc[r])
-            if k:
-                f = int(fc[r])
-                sizes[r] += int(sizes[f : f + k].sum())
+        blocks = []
+        cur = np.zeros(min(1, self._n), dtype=np.int64)
+        while cur.size:
+            blocks.append(cur)
+            cur = ragged_ranges(self.first_child[cur], self.child_count[cur])
+        for blk in reversed(blocks):
+            cc = self.child_count[blk]
+            parents = blk[cc > 0]
+            if len(parents) == 0:
+                continue
+            kids = ragged_ranges(self.first_child[parents], cc[cc > 0])
+            np.add.at(sizes, np.repeat(parents, cc[cc > 0]), sizes[kids])
         return sizes
 
     # -- serialization ------------------------------------------------------
@@ -516,7 +657,11 @@ class NodeTable:
         with np.load(path) as z:
             dim = int(z["dim"])
             n = len(z["page_id"])
-            t = cls(dim, node_capacity=max(n, 1), perm_capacity=max(len(z["perm"]), 1))
+            np_ = len(z["perm"])
+            # capacity headroom: a loaded snapshot that immediately starts
+            # grafting must not pay a full-table copy on the first append
+            t = cls(dim, node_capacity=n + n // 8 + 16,
+                    perm_capacity=np_ + np_ // 8 + 16)
             t._n = n
             t._np = len(z["perm"])
             t._mbb_lo[:n] = z["mbb_lo"]
@@ -567,7 +712,8 @@ class NodeTable:
         dim = live[0].dim
         total_nodes = 1 + sum(t.n_nodes for t in live)
         total_perm = sum(t.n_perm for t in live)
-        out = cls(dim, node_capacity=total_nodes, perm_capacity=max(total_perm, 1))
+        out = cls(dim, node_capacity=total_nodes + total_nodes // 8 + 16,
+                  perm_capacity=total_perm + total_perm // 8 + 16)
         out._grow_nodes(total_nodes)
         # row mapping: server root -> 1 + s; row r > 0 -> base_s + r - 1
         bases = []

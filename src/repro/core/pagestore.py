@@ -110,6 +110,11 @@ class PageStore:
         self.stats = IOStats()
         self.buffer = LRUBuffer(buffer_pages)
         self._next_id = 0
+        # Free-list of recycled page-id runs, kept sorted and coalesced as
+        # ``[start, length]`` pairs.  Pages freed when a merged-away tier is
+        # retired are handed back out by ``alloc`` (first fit) before the
+        # high-water mark advances, so sustained ingest does not leak ids.
+        self._free: list[list[int]] = []
         # Optional fault-injection hook, called as ``hook(op, n_pages)`` at
         # the *entry* of each accounted I/O op — before any counter or
         # buffer mutation, so an injected failure leaves the store's state
@@ -132,6 +137,7 @@ class PageStore:
             "writes": self.stats.writes,
             "buffer_capacity": self.buffer.capacity,
             "buffer_pages": [int(p) for p in self.buffer._pages],
+            "free_runs": [[int(s), int(ln)] for s, ln in self._free],
         }
 
     def load_state(self, state: dict) -> None:
@@ -140,17 +146,71 @@ class PageStore:
         self.stats = IOStats(int(state["reads"]), int(state["writes"]))
         self.buffer = LRUBuffer(int(state["buffer_capacity"]))
         self.buffer.load_run(state["buffer_pages"])
+        self._free = [[int(s), int(ln)] for s, ln in state.get("free_runs", [])]
 
     # -- allocation -------------------------------------------------------
     def alloc(self, n: int = 1) -> int:
-        """Reserve ``n`` consecutive page ids; returns the first id."""
+        """Reserve ``n`` consecutive page ids; returns the first id.
+
+        Recycled runs (``free_range``) are reused first-fit before the
+        high-water mark advances.
+        """
+        n = int(n)
+        for i, (s, ln) in enumerate(self._free):
+            if ln >= n:
+                if ln == n:
+                    del self._free[i]
+                else:
+                    self._free[i] = [s + n, ln - n]
+                return s
         first = self._next_id
         self._next_id += n
         return first
 
+    def free_range(self, first: int, n: int = 1) -> None:
+        """Return ``n`` consecutive page ids starting at ``first`` to the
+        allocator.  The freed pages are evicted from the LRU buffer: a
+        recycled id must behave exactly like a fresh one for I/O accounting
+        (its first read after re-allocation is a charged miss, never a free
+        hit inherited from the retired owner)."""
+        first, n = int(first), int(n)
+        if n <= 0:
+            return
+        for pid in range(first, first + n):
+            self.buffer.evict(pid)
+        self._free.append([first, n])
+        self._free.sort()
+        merged = [self._free[0]]
+        for s, ln in self._free[1:]:
+            ps, pln = merged[-1]
+            if s <= ps + pln:
+                merged[-1][1] = max(pln, s + ln - ps)
+            else:
+                merged.append([s, ln])
+        self._free = merged
+
+    def free_pages(self, page_ids) -> None:
+        """Free an arbitrary set of page ids (grouped into runs)."""
+        ids = np.unique(np.asarray(list(page_ids), dtype=np.int64))
+        if len(ids) == 0:
+            return
+        breaks = np.flatnonzero(np.diff(ids) != 1) + 1
+        for run in np.split(ids, breaks):
+            self.free_range(int(run[0]), len(run))
+
     @property
     def allocated_pages(self) -> int:
+        """Allocator high-water mark (ids ever handed out)."""
         return self._next_id
+
+    @property
+    def free_page_count(self) -> int:
+        return sum(ln for _, ln in self._free)
+
+    @property
+    def live_pages(self) -> int:
+        """Pages currently owned by some index (high-water minus freed)."""
+        return self._next_id - self.free_page_count
 
     def mark_allocated(self, n_pages: int) -> None:
         """Advance the allocator past ``n_pages`` already-existing pages —

@@ -180,6 +180,10 @@ class DeviceQueryStats:
     journal_records: int = 0   # ops durably journaled before execution
     checkpoints: int = 0       # snapshot barriers written
     replayed_records: int = 0  # journal records replayed at recovery
+    inserts: int = 0           # streamed points ingested
+    deletes: int = 0           # ids tombstoned
+    stream_syncs: int = 0      # structural device syncs (flush/merge shipped)
+    stream_reshards: int = 0   # full re-shard fallbacks (should stay 0)
 
 
 class DeviceQueryServer:
@@ -224,11 +228,16 @@ class DeviceQueryServer:
     the accelerator.
     """
 
+    # overlay construction defaults — shared by the live ingest path and
+    # journal replay, which must build the identical structure
+    OVERLAY_KW = dict(delta_threshold=2048, delta_index_every=256,
+                     size_ratio=4)
+
     def __init__(self, table, points: np.ndarray, *,
                  microbatch: int = 64, use_kernel: bool | None = None,
                  compressed: bool = False,
                  shards: int | None = None, adaptive: bool = False,
-                 ambi=None, compact_slack: float = 0.5,
+                 ambi=None, stream=None, compact_slack: float = 0.5,
                  fault_plan=None, retry=None, deadline_s: float | None = None,
                  breaker_threshold: int = 3, breaker_cooldown_s: float = 30.0,
                  clock=None,
@@ -246,7 +255,26 @@ class DeviceQueryServer:
                     "adaptive serving needs the host AMBI engine — boot "
                     "with DeviceQueryServer.from_ambi(ambi)"
                 )
+            if stream is not None:
+                raise ValueError(
+                    "an adaptive server grows its streaming overlay on "
+                    "insert(); do not pass stream="
+                )
             table, points = ambi.table, ambi.points
+        self.stream = stream
+        self.mirror = None
+        if stream is not None:
+            from ..core.streaming import DeviceMirror
+
+            if not stream.tiers:
+                raise ValueError(
+                    "streaming serving boots from a stream with at least "
+                    "one tier — seed it with points or insert past the "
+                    "flush threshold first"
+                )
+            self.mirror = DeviceMirror(stream)
+            table = self.mirror.table
+            points = stream.points
         points = np.asarray(points)
         # resilience plane: per-server policies, injectable for tests
         self.fault_plan = fault_plan
@@ -284,8 +312,15 @@ class DeviceQueryServer:
         self.requested_shards = shards if shards is not None else 1
         self.adaptive = adaptive
         self.ambi = ambi
-        self.points = points
+        self._points = points
         self.dim = int(points.shape[1])
+        # compaction epoch: bumped under the writer lock whenever compact()
+        # moves rows, so a lock-split reader can detect that its captured
+        # row indices went stale before it re-enters as a writer
+        self._table_version = 0
+        # sharded streaming: shards whose refresh exhausted its retries —
+        # re-included in the next sync so the device converges
+        self._stream_stale_shards: set[int] = set()
         self.compact_slack = float(compact_slack)
         self.microbatch = int(microbatch)
         self.use_kernel = use_kernel
@@ -296,10 +331,10 @@ class DeviceQueryServer:
         self.journal = None
         self.snapshot_path = None
         if journal_path is not None or snapshot_path is not None:
-            if not adaptive:
+            if not adaptive and stream is None:
                 raise ValueError(
-                    "journaling/snapshots apply to adaptive serving — a "
-                    "static table needs no recovery log"
+                    "journaling/snapshots apply to adaptive or streaming "
+                    "serving — a static table needs no recovery log"
                 )
             if journal_path is None or snapshot_path is None:
                 raise ValueError(
@@ -315,10 +350,28 @@ class DeviceQueryServer:
                 # crash before the first compaction is still recoverable
                 self.checkpoint()
 
+    @property
+    def points(self) -> np.ndarray:
+        """The served dataset.  A streaming (non-adaptive) server's point
+        buffer grows in place, so this is the stream's live view; adaptive
+        servers keep the AMBI base here (the overlay carries its own)."""
+        if self.stream is not None and not self.adaptive:
+            return self.stream.points
+        return self._points
+
     @classmethod
     def from_index(cls, index, **kw) -> "DeviceQueryServer":
         """From a built ``core.fmbi.Index`` (or AMBI's ``.index``)."""
         return cls(index.table, index.points, **kw)
+
+    @classmethod
+    def from_streaming(cls, stream, **kw) -> "DeviceQueryServer":
+        """Live serving over a :class:`~repro.core.streaming.StreamingIndex`:
+        the server owns a :class:`DeviceMirror` of the stream's tiers,
+        ``insert``/``delete`` route through the stream under the writer
+        lock, and structural changes (flush/merge) ship to the device as
+        deltas — never a full re-export after boot."""
+        return cls(None, None, stream=stream, **kw)
 
     @classmethod
     def from_ambi(cls, ambi, **kw) -> "DeviceQueryServer":
@@ -492,8 +545,16 @@ class DeviceQueryServer:
         for a, b in self._chunks(los.shape[0]):
             runner = self._shard_runner(deadline)
             if self.adaptive:
+                res = self._window_adaptive(los[a:b], his[a:b], deadline)
+                if self.stream is not None:
+                    res = self._merge_overlay_window(res, los[a:b], his[a:b])
+                out.extend(res)
+                certs.extend(
+                    CompletenessCertificate.intact() for _ in range(b - a)
+                )
+            elif self.stream is not None:
                 out.extend(
-                    self._window_adaptive(los[a:b], his[a:b], deadline)
+                    self._window_streaming(los[a:b], his[a:b], runner)
                 )
                 certs.extend(
                     CompletenessCertificate.intact() for _ in range(b - a)
@@ -572,7 +633,18 @@ class DeviceQueryServer:
         for a, b in self._chunks(qs.shape[0]):
             runner = self._shard_runner(deadline)
             if self.adaptive:
-                out.extend(self._knn_adaptive(qs[a:b], k, deadline))
+                if self.stream is not None:
+                    k_eff = self._k_eff(k)
+                    res = self._knn_adaptive(qs[a:b], k_eff, deadline)
+                    res = self._merge_overlay_knn(res, qs[a:b], k)
+                else:
+                    res = self._knn_adaptive(qs[a:b], k, deadline)
+                out.extend(res)
+                certs.extend(
+                    CompletenessCertificate.intact() for _ in range(b - a)
+                )
+            elif self.stream is not None:
+                out.extend(self._knn_streaming(qs[a:b], k, runner))
                 certs.extend(
                     CompletenessCertificate.intact() for _ in range(b - a)
                 )
@@ -867,6 +939,7 @@ class DeviceQueryServer:
         with self.table_lock.read():
             t = self.ambi.table
             unref = np.flatnonzero(t.unrefined)
+            version = self._table_version
             if self.sdev is not None:
                 # reaching an unrefined row == intersecting its MBB (hit
                 # sets are downward-closed), so the host-side router test
@@ -911,6 +984,10 @@ class DeviceQueryServer:
                     self.stats.host_fallbacks += los.shape[0]
         if cold_q.any():
             with self.table_lock.write():
+                if self._table_version != version:
+                    # a writer compacted between our read and write
+                    # sections: the captured row indices are stale
+                    unref = np.flatnonzero(t.unrefined)
                 for i in np.flatnonzero(cold_q):
                     out[i] = self._host_window(los[i], his[i])
                 self._after_refinement(unref)  # pre-serving unrefined rows
@@ -951,8 +1028,11 @@ class DeviceQueryServer:
             out = list(res)
             cold_q = self._knn_cold_mask(qs, res, k) | degraded
             before_unref = np.flatnonzero(t.unrefined)
+            version = self._table_version
         if cold_q.any():
             with self.table_lock.write():
+                if self._table_version != version:
+                    before_unref = np.flatnonzero(t.unrefined)
                 for i in np.flatnonzero(cold_q):
                     out[i] = self._host_knn(qs[i], k)
                 self._after_refinement(before_unref)
@@ -985,6 +1065,282 @@ class DeviceQueryServer:
             )
             cold[i] = bool(minds[i].min() <= kth)
         return cold
+
+    # -- streaming ingest ----------------------------------------------------
+    # The stream (host LSM tiers + delta) is authoritative; the device
+    # serves the mirror of its tiers, tombstones filter host-side, and the
+    # not-yet-flushed delta rows are unioned in by brute force (they are
+    # few by construction: at most delta_threshold).
+    def _ensure_stream(self):
+        if self.stream is None:
+            if not self.adaptive:
+                raise ValueError(
+                    "ingest needs a streaming or adaptive server — boot "
+                    "with from_streaming(...) or from_ambi(...)"
+                )
+            from ..core.streaming import StreamingIndex
+
+            # adaptive overlay: the AMBI rows stay where they are (ids
+            # [0, n) keep meaning buffer rows); only new points get tiered
+            self.stream = StreamingIndex(
+                self._points, store=self.ambi.store, base_external=True,
+                **self.OVERLAY_KW,
+            )
+        return self.stream
+
+    def insert(self, pts) -> np.ndarray:
+        """Ingest points; returns their assigned ids.  Journaled (when
+        durable), applied under the writer lock, and any tier flush/merge
+        it triggers ships to the device before the lock drops."""
+        pts = self._validate_batch(pts, "pts")
+        if self.stream is None and not self.adaptive:
+            raise ValueError(
+                "this server is static — boot with from_streaming(...) "
+                "or from_ambi(...) to ingest"
+            )
+        self._journal_op(
+            "insert", pts=[[float(v) for v in p] for p in pts]
+        )
+        with self.table_lock.write():
+            stream = self._ensure_stream()
+            ids = stream.insert(pts)
+            self._sync_stream_device()
+        self.stats.inserts += len(pts)
+        return ids
+
+    def delete(self, ids) -> int:
+        """Tombstone ids; returns how many were newly deleted.  The points
+        stay physically present until a merge rewrites their tier — queries
+        filter them immediately."""
+        ids = np.unique(np.asarray(ids, dtype=np.int64).ravel())
+        if self.stream is None and not self.adaptive:
+            raise ValueError(
+                "this server is static — boot with from_streaming(...) "
+                "or from_ambi(...) to ingest"
+            )
+        self._journal_op("delete", ids=[int(i) for i in ids])
+        with self.table_lock.write():
+            stream = self._ensure_stream()
+            n = stream.delete(ids)
+            self._sync_stream_device()
+        self.stats.deletes += n
+        return n
+
+    def _sync_stream_device(self) -> None:
+        """Ship the stream's structural events (tier attach/merge) to the
+        device.  Caller holds the writer lock.  Single device: one
+        ``apply_delta`` (only new leaf blocks upload).  Sharded: plan
+        surgery + per-changed-shard refresh.  The adaptive overlay has no
+        mirror — its tiers serve host-side."""
+        if self.mirror is None:
+            return
+        from .resilience import RetryExhausted
+
+        info = self.mirror.sync()
+        if info is None and not self._stream_stale_shards:
+            return
+        self.stats.stream_syncs += 1
+
+        def upload():
+            if self.fault_plan is not None:
+                self.fault_plan.fire("apply_delta")
+            if self.sdev is not None:
+                self._stream_refresh_shards(info)
+            else:
+                self.dev = self.dev.apply_delta(
+                    self.mirror.table, self.stream.points
+                )
+                self.stats.delta_refreshes += 1
+
+        try:
+            self.retry.call(
+                upload, on_retry=self._count_retry, call_key="apply_delta"
+            )
+        except RetryExhausted:
+            # device stale, host authoritative; sharded keeps the failed
+            # set in _stream_stale_shards for the next sync
+            pass
+
+    def _stream_refresh_shards(self, info) -> None:
+        """Rewrite the shard plans through the mirror's sync summary and
+        re-export only the shards whose content changed.
+
+        Root copies that merely *moved* (the per-sync root-block rebuild,
+        fusion adopting old roots) are remapped in the plan without a
+        refresh — their subtree content is identical.  Shards lose plan
+        entries when a rebuild-merge retires their tiers and gain the
+        merged/attached roots back, preferring empty shards then the
+        smallest."""
+        sdev = self.sdev
+        # the stream's buffer reallocates as it grows; refresh gathers
+        # coordinates through source_points, so rebind the live view
+        sdev.source_points = self.stream.points
+        changed = set(self._stream_stale_shards)
+        self._stream_stale_shards = set()
+        if info is not None:
+            remap = info["remap"]
+            retired = info["retired"]
+            plans = sdev.shard_roots
+            for s in range(sdev.m):
+                new_plan = []
+                for r in plans[s]:
+                    r = int(remap.get(int(r), int(r)))
+                    if any(lo <= r < hi for lo, hi in retired):
+                        changed.add(s)
+                        continue
+                    if r not in new_plan:
+                        new_plan.append(r)
+                plans[s] = new_plan
+            placed = {r for p in plans for r in p}
+            pool = [int(r) for r in info["add_rows"] if r not in placed]
+            n_empty = sum(1 for p in plans if not p)
+            if pool and len(pool) < n_empty:
+                # a cascade merged everything a shard owned into one tier:
+                # expand the widest new root into its child rows (the same
+                # frontier move shard_plan makes at boot) until every
+                # shard can keep a subspace
+                t = self.mirror.table
+                sizes = t.subtree_points()
+                while len(pool) < n_empty:
+                    exp = [r for r in pool if t.child_count[r] > 0]
+                    if not exp:
+                        break
+                    r = max(exp, key=lambda r: int(sizes[r]))
+                    pool.remove(r)
+                    fc, cc = int(t.first_child[r]), int(t.child_count[r])
+                    pool.extend(range(fc, fc + cc))
+            for r in pool:
+                empties = [s for s in range(sdev.m) if not plans[s]]
+                s = (empties[0] if empties else
+                     min(range(sdev.m),
+                         key=lambda s: int(sdev.shards[s].n_points)))
+                plans[s].append(int(r))
+                changed.add(s)
+            for s in range(sdev.m):
+                if plans[s]:
+                    continue
+                donors = [d for d in range(sdev.m) if len(plans[d]) > 1]
+                if donors:
+                    d = max(donors,
+                            key=lambda d: int(sdev.shards[d].n_points))
+                    plans[s].append(plans[d].pop())
+                    changed.update((s, d))
+                else:
+                    # cannot keep m nonempty subspaces: full re-shard
+                    # (the delta-only acceptance counter pins this to 0)
+                    from ..core.distributed_jax import ShardedDeviceTable
+
+                    self.sdev = ShardedDeviceTable.from_table(
+                        self.mirror.table, self.stream.points,
+                        self.requested_shards, stats=self.upload_stats,
+                        compressed=self.compressed,
+                    )
+                    self.stats.stream_reshards += 1
+                    return
+        if changed:
+            try:
+                sdev.refresh(sorted(changed))
+            except Exception:
+                self._stream_stale_shards = changed
+                raise
+            self.stats.shard_refreshes += len(changed)
+
+    def _k_eff(self, k: int) -> int:
+        """k-NN over-fetch for tombstones: each component's top-(k+shadow)
+        must contain its k best live rows.  Bucketed to the next power of
+        two so a drifting shadow count reuses compiled k-variants."""
+        shadow = self.stream.shadow if self.stream is not None else 0
+        if shadow == 0:
+            return k
+        return max(k, 1 << (k + shadow - 1).bit_length())
+
+    def _window_streaming(self, los, his, runner) -> list[np.ndarray]:
+        from ..core.distributed_jax import window_query_batch_sharded
+        from ..core.queries_jax import window_query_batch_jax
+
+        with self.table_lock.read():
+            stream = self.stream
+            if self.sdev is not None:
+                res = window_query_batch_sharded(
+                    self.sdev, los, his, use_kernel=self.use_kernel,
+                    runner=runner,
+                )
+            else:
+                res = runner(0, lambda: window_query_batch_jax(
+                    self.dev, los, his, use_kernel=self.use_kernel,
+                ))
+            pend = stream.delta_live_rows()
+            if len(pend):
+                p = stream.points[pend]
+                inside = ((p[None, :, :] >= los[:, None, :])
+                          & (p[None, :, :] <= his[:, None, :])).all(axis=2)
+            out = []
+            for i, ids in enumerate(res):
+                ids = stream.filter_live(np.asarray(ids, dtype=np.int64))
+                if len(pend):
+                    ids = np.concatenate([ids, pend[inside[i]]])
+                out.append(np.sort(ids))
+        return out
+
+    def _knn_streaming(self, qs, k: int, runner) -> list[np.ndarray]:
+        from ..core.distributed_jax import knn_query_batch_sharded
+        from ..core.queries_jax import knn_query_batch_jax
+
+        with self.table_lock.read():
+            stream = self.stream
+            n_phys = int(self.sdev.n_points if self.sdev is not None
+                         else self.dev.live_points())
+            k_eff = min(self._k_eff(k), n_phys)
+            res = [np.empty(0, dtype=np.int64)] * len(qs)
+            if k_eff > 0:
+                if self.sdev is not None:
+                    res = knn_query_batch_sharded(
+                        self.sdev, qs, k_eff, use_kernel=self.use_kernel,
+                        runner=runner,
+                    )
+                else:
+                    res = runner(0, lambda: knn_query_batch_jax(
+                        self.dev, qs, k_eff, use_kernel=self.use_kernel,
+                    ))
+            pend = stream.delta_live_rows()
+            pts = stream.points
+            out = []
+            for i in range(len(qs)):
+                ids = stream.filter_live(np.asarray(res[i], dtype=np.int64))
+                if len(pend):
+                    ids = np.concatenate([ids, pend])
+                ids = np.unique(ids)
+                d2 = np.sum((pts[ids] - qs[i]) ** 2, axis=1)
+                out.append(ids[np.lexsort((ids, d2))[:k]])
+        return out
+
+    def _merge_overlay_window(self, res, los, his) -> list[np.ndarray]:
+        """Union an adaptive microbatch's base answers with the streaming
+        overlay's, filtering base rows tombstoned by delete()."""
+        with self.table_lock.read():
+            s = self.stream
+            over = s.window(los, his)
+            out = []
+            for base_ids, ov in zip(res, over):
+                ids = s.filter_live(np.asarray(base_ids, dtype=np.int64))
+                out.append(np.sort(np.concatenate([ids, ov])))
+        return out
+
+    def _merge_overlay_knn(self, res, qs, k: int) -> list[np.ndarray]:
+        """Two-level top-k: the base path served top-k_eff physical rows
+        (enough to survive tombstone filtering), the overlay serves its
+        own top-k live; rank the union by exact f64 distance."""
+        with self.table_lock.read():
+            s = self.stream
+            over = s.knn(qs, k)
+            pts = s.points
+            out = []
+            for i, (base_ids, ov) in enumerate(zip(res, over)):
+                ids = s.filter_live(np.asarray(base_ids, dtype=np.int64))
+                ids = np.unique(np.concatenate([ids, ov]))
+                d2 = np.sum((pts[ids] - qs[i]) ** 2, axis=1)
+                out.append(ids[np.lexsort((ids, d2))[:k]])
+        return out
 
     def _after_refinement(self, before_unref: np.ndarray) -> None:
         """Push the microbatch's grafts to the device: incremental delta
@@ -1055,6 +1411,14 @@ class DeviceQueryServer:
 
         t = self.ambi.table
         if t.n_perm > (1.0 + self.compact_slack) * len(self.points):
+            # the compact() row remap and the device/shard rebase must be
+            # one atomic writer section: a concurrent apply_delta swap (or
+            # reader capturing row indices) between them would observe a
+            # half-rebased slot map.  Callers enter through the adaptive
+            # write sections; this pins the invariant for new call sites.
+            assert self.table_lock._writer, (
+                "_maybe_compact requires the TableLock writer section"
+            )
             if self.journal is not None:
                 try:
                     self._journal_op("compact")
@@ -1065,6 +1429,7 @@ class DeviceQueryServer:
                 self.sdev.remap_source_rows(remap)
             elif self.dev is not None:
                 self.dev.remap_rows(remap)
+            self._table_version += 1
             self.stats.compactions += 1
             if self.snapshot_path is not None:
                 try:
@@ -1087,13 +1452,26 @@ class DeviceQueryServer:
         def attempt():
             if self.fault_plan is not None:
                 self.fault_plan.fire("snapshot_save", path=self.snapshot_path)
+            seq = self.journal.seq if self.journal else 0
+            if self.stream is not None and not self.adaptive:
+                # streaming barrier: the stream IS the authoritative state
+                # (points, tombstones, tiers, store); the mirror is derived
+                # and rebuilt at boot
+                self.stream.save(self.snapshot_path,
+                                 extra={"journal_seq": seq})
+                return
             self.ambi.table.save(
-                self.snapshot_path, points=self.points,
+                self.snapshot_path, points=self._points,
                 extra={
                     "ambi_state": self.ambi.state_meta(),
-                    "journal_seq": self.journal.seq if self.journal else 0,
+                    "journal_seq": seq,
                 },
             )
+            if self.stream is not None:
+                # adaptive overlay rides along as a sidecar in the same
+                # barrier; recovery replays post-seq ingest on top of it
+                self.stream.save(self._overlay_sidecar(),
+                                 extra={"journal_seq": seq})
 
         self.retry.call(
             attempt, on_retry=self._count_retry, call_key="snapshot"
@@ -1101,6 +1479,9 @@ class DeviceQueryServer:
         if self.journal is not None:
             self.journal.truncate()
         self.stats.checkpoints += 1
+
+    def _overlay_sidecar(self) -> str:
+        return self.snapshot_path[:-len(".npz")] + ".stream.npz"
 
     @staticmethod
     def _replay_op(ambi, rec: dict) -> None:
@@ -1135,6 +1516,7 @@ class DeviceQueryServer:
 
         from ..core.ambi import AMBI
         from ..core.nodetable import NodeTable
+        from ..core.streaming import StreamingIndex
         from .journal import GraftJournal
 
         snapshot_path = os.fspath(snapshot_path)
@@ -1142,6 +1524,32 @@ class DeviceQueryServer:
             snapshot_path += ".npz"
         if fault_plan is not None:
             fault_plan.fire("snapshot_load", path=snapshot_path)
+        if StreamingIndex.is_stream_snapshot(snapshot_path):
+            # streaming server: restore the stream, replay post-barrier
+            # ingest on the host, then boot (the mirror and device exports
+            # are derived state, rebuilt fresh from the restored tiers)
+            stream, meta = StreamingIndex.load(snapshot_path)
+            snap_seq = int(meta["journal_seq"])
+            was_armed = fault_plan is not None and fault_plan.armed
+            if was_armed:
+                fault_plan.disarm()
+            replayed = 0
+            try:
+                for rec in GraftJournal.read_records(
+                    journal_path, after_seq=snap_seq
+                ):
+                    cls._replay_ingest(stream, rec)
+                    replayed += 1
+            finally:
+                if was_armed:
+                    fault_plan.rearm()
+            srv = cls.from_streaming(
+                stream, snapshot_path=snapshot_path,
+                journal_path=journal_path, fault_plan=fault_plan, **kw,
+            )
+            srv.journal.seq = max(srv.journal.seq, snap_seq)
+            srv.stats.replayed_records = replayed
+            return srv
         table, meta, points = NodeTable.load(snapshot_path)
         if points is None or "ambi_state" not in meta:
             raise ValueError(
@@ -1152,6 +1560,10 @@ class DeviceQueryServer:
             np.asarray(points), table, str(meta["ambi_state"])
         )
         snap_seq = int(meta["journal_seq"])
+        overlay = None
+        sidecar = snapshot_path[:-len(".npz")] + ".stream.npz"
+        if os.path.exists(sidecar):
+            overlay, _ometa = StreamingIndex.load(sidecar)
         was_armed = fault_plan is not None and fault_plan.armed
         if was_armed:
             fault_plan.disarm()
@@ -1160,7 +1572,15 @@ class DeviceQueryServer:
             for rec in GraftJournal.read_records(
                 journal_path, after_seq=snap_seq
             ):
-                cls._replay_op(ambi, rec)
+                if rec.get("op") in ("insert", "delete"):
+                    if overlay is None:
+                        overlay = StreamingIndex(
+                            np.asarray(points), store=ambi.store,
+                            base_external=True, **cls.OVERLAY_KW,
+                        )
+                    cls._replay_ingest(overlay, rec)
+                else:
+                    cls._replay_op(ambi, rec)
                 replayed += 1
         finally:
             if was_armed:
@@ -1169,6 +1589,21 @@ class DeviceQueryServer:
             ambi, snapshot_path=snapshot_path, journal_path=journal_path,
             fault_plan=fault_plan, **kw,
         )
+        srv.stream = overlay
         srv.journal.seq = max(srv.journal.seq, snap_seq)
         srv.stats.replayed_records = replayed
         return srv
+
+    @staticmethod
+    def _replay_ingest(stream, rec: dict) -> None:
+        from .journal import JournalError
+
+        op = rec.get("op")
+        if op == "insert":
+            stream.insert(np.asarray(rec["pts"], dtype=np.float64))
+        elif op == "delete":
+            stream.delete(np.asarray(rec["ids"], dtype=np.int64))
+        else:
+            raise JournalError(
+                f"unknown journal op {op!r} (seq {rec.get('seq')})"
+            )

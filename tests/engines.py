@@ -207,6 +207,160 @@ class FrontendEngine:
         return self._drain(reqs)
 
 
+# --------------------------------------------------------------------------
+# streaming-ingest engines (insert/delete/window/knn) + rebuild oracle
+# --------------------------------------------------------------------------
+class RebuildOracle:
+    """The from-scratch authority for streaming parity: after every mutation
+    the index is conceptually discarded; each query bulk-loads a fresh FMBI
+    over the live points and maps positional ids back to global ids.  What
+    the LSM tiers, tombstones and delta uploads must be indistinguishable
+    from."""
+
+    name = "rebuild"
+
+    def __init__(self, pts, M=250):
+        self.M = M
+        self.pts = np.asarray(pts, np.float64).copy()
+        self.tomb = np.zeros(len(self.pts), bool)
+
+    def insert(self, new):
+        new = np.asarray(new, np.float64)
+        ids = np.arange(len(self.pts), len(self.pts) + len(new))
+        self.pts = np.concatenate([self.pts, new])
+        self.tomb = np.concatenate([self.tomb, np.zeros(len(new), bool)])
+        return ids
+
+    def delete(self, ids):
+        ids = np.unique(np.asarray(ids, np.int64))
+        ids = ids[(ids >= 0) & (ids < len(self.pts))]
+        fresh = ids[~self.tomb[ids]]
+        self.tomb[fresh] = True
+        return len(fresh)
+
+    def _rebuilt(self):
+        live = np.flatnonzero(~self.tomb)
+        return bulk_load(self.pts[live], self.M, PageStore(self.M)), live
+
+    def window(self, los, his):
+        idx, live = self._rebuilt()
+        res, _ = window_query_batch(idx, np.atleast_2d(los), np.atleast_2d(his))
+        return [np.sort(live[r]) for r in res]
+
+    def knn(self, qs, k):
+        idx, live = self._rebuilt()
+        qs = np.atleast_2d(qs)
+        # over-fetch: the index's own k-boundary tie-break is traversal
+        # order, so pull a margin and re-rank by (distance, id) — the
+        # streaming contract — before truncating to k
+        res, _ = knn_query_batch(idx, qs, min(k + 16, len(live)))
+        out = []
+        for q, r in zip(qs, res):
+            g = live[r]
+            d2 = np.sum((self.pts[g] - q) ** 2, axis=1)
+            out.append(g[np.lexsort((g, d2))][:k])
+        return out
+
+
+# small thresholds so short tests still cross flush/merge/fusion boundaries
+STREAM_KW = dict(delta_threshold=512, delta_index_every=128, size_ratio=3)
+
+
+class StreamingHostEngine:
+    """The host ``StreamingIndex`` itself: delta memtable + size-tiered
+    immutable NodeTables, queried with tombstone filtering."""
+
+    name = "stream-host"
+
+    def __init__(self, pts, **kw):
+        from repro.core import StreamingIndex
+
+        self.stream = StreamingIndex(
+            np.asarray(pts, np.float64), **{**STREAM_KW, **kw}
+        )
+
+    def insert(self, pts):
+        return self.stream.insert(pts)
+
+    def delete(self, ids):
+        return self.stream.delete(ids)
+
+    def window(self, los, his):
+        return self.stream.window(np.atleast_2d(los), np.atleast_2d(his))
+
+    def knn(self, qs, k):
+        return self.stream.knn(np.atleast_2d(qs), k)
+
+
+class StreamingServerEngine:
+    """``DeviceQueryServer.from_streaming``: the device mirror refreshed
+    delta-only while tiers flush, merge and retire underneath it."""
+
+    def __init__(self, pts, shards=None, stream_kw=None, **server_kw):
+        from repro.core import StreamingIndex
+        from repro.serve.engine import DeviceQueryServer
+
+        self.stream = StreamingIndex(
+            np.asarray(pts, np.float64), **{**STREAM_KW, **(stream_kw or {})}
+        )
+        self.srv = DeviceQueryServer.from_streaming(
+            self.stream, microbatch=32, shards=shards, **server_kw
+        )
+        self.name = f"stream-server[m={shards or 1}]"
+
+    def insert(self, pts):
+        return self.srv.insert(pts)
+
+    def delete(self, ids):
+        return self.srv.delete(ids)
+
+    def window(self, los, his):
+        return self.srv.window(np.atleast_2d(los), np.atleast_2d(his))
+
+    def knn(self, qs, k):
+        return self.srv.knn(np.atleast_2d(qs), k)
+
+
+class OverlayServerEngine:
+    """The adaptive server with a streaming overlay: the base dataset keeps
+    the cold/hot adaptive path; inserts and deletes land in a lazily created
+    ``StreamingIndex`` whose answers are merged into every query."""
+
+    name = "adaptive-overlay"
+
+    def __init__(self, pts, M=250, **kw):
+        from repro.core import AMBI
+        from repro.serve.engine import DeviceQueryServer
+
+        self.srv = DeviceQueryServer.from_ambi(
+            AMBI(np.asarray(pts, np.float64), M), microbatch=32, **kw
+        )
+        self.srv.OVERLAY_KW = dict(STREAM_KW)
+
+    def insert(self, pts):
+        return self.srv.insert(pts)
+
+    def delete(self, ids):
+        return self.srv.delete(ids)
+
+    def window(self, los, his):
+        return self.srv.window(np.atleast_2d(los), np.atleast_2d(his))
+
+    def knn(self, qs, k):
+        return self.srv.knn(np.atleast_2d(qs), k)
+
+
+def ingest_suite(pts, ms=(3,), adaptive=True):
+    """Every streaming-capable engine over the same base dataset; first
+    entry is the rebuild oracle."""
+    return (
+        [RebuildOracle(pts), StreamingHostEngine(pts),
+         StreamingServerEngine(pts)]
+        + [StreamingServerEngine(pts, shards=m) for m in ms]
+        + ([OverlayServerEngine(pts)] if adaptive else [])
+    )
+
+
 def engine_suite(index, ms=(1, 2, 4), adaptive=True):
     """Every engine over one built index; first entry is the NumPy oracle."""
     return (

@@ -204,3 +204,39 @@ def test_ragged_ranges():
         np.array([5, 6, 0, 1, 2]),
     )
     assert len(ragged_ranges(np.zeros(0), np.zeros(0))) == 0
+
+
+# --------------------------------------------------------------------------
+# amortized growth (PR-9 satellite): appends double, never copy-per-append
+# --------------------------------------------------------------------------
+def test_append_growth_is_amortized_doubling():
+    """Sustained appends (the streaming mirror's attach path) must grow the
+    backing arrays geometrically: O(log) reallocations and O(n) total rows
+    copied, never a reallocation-plus-full-copy per append."""
+    import math
+
+    t = bulk_load(_make_points("uniform", 2000, 2, 0), 250).table
+    src = bulk_load(_make_points("uniform", 400, 2, 1), 250).table
+    r0, c0 = t.node_reallocs, t.node_rows_copied
+    pr0, pc0 = t.perm_reallocs, t.perm_elems_copied
+    for _ in range(300):
+        t.append_subtree(src)
+    assert t.node_reallocs - r0 <= math.ceil(math.log2(t.n_nodes)) + 2
+    assert t.node_rows_copied - c0 <= 4 * t.n_nodes
+    assert t.perm_reallocs - pr0 <= math.ceil(math.log2(t.n_perm)) + 2
+    assert t.perm_elems_copied - pc0 <= 4 * t.n_perm
+
+
+def test_compact_leaves_append_headroom():
+    """Compaction keeps slack past the live rows, so the append that follows
+    a compact does not immediately reallocate (the flush-compact-flush
+    ping-pong the streaming delta would otherwise hit)."""
+    pts = osm_like(30_000, seed=5)
+    a = AMBI(pts, 300)
+    a.window(np.zeros(2), np.ones(2))  # refine everything (graft appends)
+    t = a.index.table
+    t.compact()
+    reallocs = t.node_reallocs
+    src = bulk_load(_make_points("uniform", 300, 2, 2), 250).table
+    t.append_subtree(src)
+    assert t.node_reallocs == reallocs, "append right after compact realloced"

@@ -1,0 +1,486 @@
+"""Streaming ingest (PR-9): LSM tiers, tombstones, delta-only device refresh.
+
+The contract under test, on every engine path: an interleaved stream of
+inserts, deletes and queries must be id-identical to throwing the index away
+and bulk-loading it from scratch over the live points — tombstoned ids never
+resurface, merges and tier retirements never change answers, and the device
+mirror refreshes incrementally (upload counters prove no full re-export).
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import DeviceMirror, PageStore, StreamingIndex, bulk_load
+from repro.serve.engine import DeviceQueryServer
+
+from engines import (
+    STREAM_KW,
+    OverlayServerEngine,
+    RebuildOracle,
+    StreamingHostEngine,
+    StreamingServerEngine,
+    f32_points,
+    ingest_suite,
+)
+
+try:  # optional dev dependency (see requirements-dev.txt)
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+# --------------------------------------------------------------------------
+# the interleaving driver: one op schedule, every engine, oracle parity
+# --------------------------------------------------------------------------
+def _drive_interleaved(engines, seed, steps=18, max_ins=150, check_every=3):
+    """Apply an identical insert/delete schedule to every engine and assert
+    window + k-NN parity against ``engines[0]`` (the rebuild oracle) at
+    checkpoints.  Returns the number of ids ever allocated."""
+    # decorrelate from f32_points(seed): replaying the base generator's
+    # stream would insert exact duplicate coordinates (k-boundary ties)
+    rng = np.random.default_rng(seed + 7919)
+    n_ids = len(engines[0].pts)
+    for step in range(steps):
+        ins = rng.random((int(rng.integers(1, max_ins)), 2))
+        ins = ins.astype(np.float32).astype(np.float64)
+        ids = [e.insert(ins) for e in engines]
+        for got in ids[1:]:  # id assignment itself must be identical
+            np.testing.assert_array_equal(got, ids[0])
+        n_ids += len(ins)
+        if step % 2 == 0:
+            dels = rng.integers(0, n_ids, size=int(rng.integers(1, 30)))
+            counts = [e.delete(dels) for e in engines]
+            assert counts[1:] == [counts[0]] * (len(engines) - 1)
+        if step % check_every == check_every - 1 or step == steps - 1:
+            los = rng.random((4, 2)) * 0.7
+            his = los + rng.uniform(0.05, 0.3)
+            ref = engines[0].window(los, his)
+            for e in engines[1:]:
+                got = e.window(los, his)
+                for i, (a, b) in enumerate(zip(got, ref)):
+                    assert np.array_equal(np.sort(a), b), (e.name, step, i)
+            qs = rng.random((4, 2)).astype(np.float32).astype(np.float64)
+            kref = engines[0].knn(qs, 8)
+            for e in engines[1:]:
+                got = e.knn(qs, 8)
+                for i, (a, b) in enumerate(zip(got, kref)):
+                    assert np.array_equal(a, b), (e.name, step, i)
+    return n_ids
+
+
+@pytest.mark.parametrize("seed", [0, 3, 11])
+def test_host_interleaving_matches_rebuild_oracle(seed):
+    pts = f32_points(2500, 2, seed=seed)
+    host = StreamingHostEngine(pts)
+    _drive_interleaved([RebuildOracle(pts), host], seed, steps=22)
+    s = host.stream
+    # the schedule actually crossed the LSM machinery, not just the memtable
+    assert s.flushes >= 2 and s.merges >= 1 and s.deleted > 0
+    assert s.tiers, "no live tier survived"
+
+
+def test_engine_matrix_interleaving():
+    """The acceptance gate: one interleaved schedule, id-identical answers
+    on all four paths — host, single-device server, sharded server, and the
+    adaptive server with the streaming overlay."""
+    pts = f32_points(3000, 2, seed=7)
+    engines = ingest_suite(pts, ms=(3,))
+    _drive_interleaved(engines, seed=7, steps=14)
+    sharded = next(e for e in engines if e.name == "stream-server[m=3]")
+    assert sharded.srv.stats.stream_reshards == 0
+
+
+def test_tombstones_never_resurface():
+    """Ids deleted early must be absent from every later answer while the
+    stream flushes, merges and retires the tiers that physically held them;
+    merges eventually drop the tombstoned rows (shadow shrinks)."""
+    pts = f32_points(2000, 2, seed=4)
+    s = StreamingIndex(pts, delta_threshold=256, delta_index_every=64,
+                       size_ratio=2)
+    rng = np.random.default_rng(4)
+    doomed = np.unique(rng.integers(0, 2000, size=120))
+    assert s.delete(doomed) == len(doomed)
+    peak_shadow = s.shadow
+    lo = np.zeros((1, 2))
+    hi = np.ones((1, 2))
+    for _ in range(20):
+        s.insert(rng.random((200, 2)).astype(np.float32).astype(np.float64))
+        everything = s.window(lo, hi)[0]
+        assert not np.intersect1d(everything, doomed).size
+        near = s.knn(pts[doomed[:4]], 4)
+        for r in near:
+            assert not np.intersect1d(r, doomed).size
+    # clean merges fuse; the cascade that reaches the tombstone-bearing
+    # boot tier rebuilds and physically drops the doomed rows
+    assert s.fusions >= 1 and s.merges >= 1
+    assert s.shadow < peak_shadow, "no merge ever dropped a tombstoned row"
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(
+        st.integers(0, 2**31 - 1),
+        st.lists(
+            st.tuples(st.integers(1, 120), st.integers(0, 25)),
+            min_size=4, max_size=9,
+        ),
+    )
+    @settings(max_examples=8, deadline=None)
+    def test_hypothesis_interleavings(seed, script):
+        """Arbitrary (insert-count, delete-count) scripts: the host stream
+        stays id-identical to the from-scratch rebuild."""
+        rng = np.random.default_rng(seed)
+        pts = rng.random((600, 2)).astype(np.float32).astype(np.float64)
+        oracle = RebuildOracle(pts)
+        host = StreamingHostEngine(
+            pts, delta_threshold=256, delta_index_every=64, size_ratio=2
+        )
+        n_ids = 600
+        for n_ins, n_del in script:
+            ins = rng.random((n_ins, 2)).astype(np.float32).astype(np.float64)
+            np.testing.assert_array_equal(host.insert(ins), oracle.insert(ins))
+            n_ids += n_ins
+            if n_del:
+                dels = rng.integers(0, n_ids, size=n_del)
+                assert host.delete(dels) == oracle.delete(dels)
+            los = rng.random((2, 2)) * 0.7
+            his = los + 0.25
+            for a, b in zip(host.window(los, his), oracle.window(los, his)):
+                np.testing.assert_array_equal(np.sort(a), b)
+            qs = rng.random((2, 2)).astype(np.float32).astype(np.float64)
+            for a, b in zip(host.knn(qs, 6), oracle.knn(qs, 6)):
+                np.testing.assert_array_equal(a, b)
+
+
+# --------------------------------------------------------------------------
+# device refresh: delta-only uploads, shard surgery, no page leaks
+# --------------------------------------------------------------------------
+def test_single_device_uploads_are_delta_only():
+    """The upload-counter proof: after boot, sustained ingest never triggers
+    a full re-export — every device refresh goes through ``apply_delta``."""
+    eng = StreamingServerEngine(f32_points(3000, 2, seed=2))
+    srv = eng.srv
+    boot_full = srv.upload_stats.full_exports
+    rng = np.random.default_rng(2)
+    n_ids = 3000
+    for _ in range(16):
+        n_ids += len(eng.insert(
+            rng.random((180, 2)).astype(np.float32).astype(np.float64)
+        ))
+        eng.delete(rng.integers(0, n_ids, size=10))
+    assert eng.stream.flushes >= 4 and eng.stream.merges >= 1
+    assert srv.upload_stats.full_exports == boot_full
+    assert srv.upload_stats.delta_refreshes >= eng.stream.flushes
+    # and the mirrored answers are still exact
+    oracle = RebuildOracle(f32_points(3000, 2, seed=2))
+    rng2 = np.random.default_rng(2)
+    for _ in range(16):
+        oracle.insert(rng2.random((180, 2)).astype(np.float32).astype(np.float64))
+        oracle.delete(rng2.integers(0, len(oracle.pts), size=10))
+    los = np.array([[0.1, 0.1], [0.5, 0.4]])
+    his = los + 0.3
+    for a, b in zip(eng.window(los, his), oracle.window(los, his)):
+        np.testing.assert_array_equal(np.sort(a), b)
+
+
+def test_sharded_refresh_avoids_full_reshard():
+    """Shard surgery absorbs tier attach/fuse/retire without ever falling
+    back to a full re-shard; only the shards whose plan rows changed get
+    re-exported."""
+    eng = StreamingServerEngine(f32_points(4000, 2, seed=9), shards=3)
+    rng = np.random.default_rng(9)
+    n_ids = 4000
+    for step in range(20):
+        n_ids += len(eng.insert(
+            rng.random((150, 2)).astype(np.float32).astype(np.float64)
+        ))
+        if step % 3 == 0:
+            eng.delete(rng.integers(0, n_ids, size=25))
+    st_ = eng.srv.stats
+    assert st_.stream_syncs >= 3
+    assert st_.stream_reshards == 0
+    assert st_.shard_refreshes > 0
+    # per-shard refreshes beat re-exporting all m shards on every sync
+    assert st_.shard_refreshes < 3 * st_.stream_syncs
+
+
+def test_tier_retirement_recycles_pages():
+    """Satellite regression: retired tiers hand their pages back to the
+    store's free list, so the allocator high-water mark stays bounded under
+    sustained churn instead of leaking one tier's pages per merge."""
+    pts = f32_points(2000, 2, seed=1)
+    s = StreamingIndex(pts, delta_threshold=256, delta_index_every=64,
+                       size_ratio=2)
+    rng = np.random.default_rng(1)
+    live = list(range(2000))
+    peak = s.store.allocated_pages
+    for _ in range(40):
+        ids = s.insert(rng.random((256, 2)).astype(np.float32).astype(np.float64))
+        live.extend(int(i) for i in ids)
+        rng.shuffle(live)
+        dead, live = live[:256], live[256:]
+        s.delete(dead)
+        peak = max(peak, s.store.allocated_pages)
+    assert s.merges >= 5
+    assert s.store.free_page_count > 0
+    # live set is ~constant => bounded pages, despite 40 rebuild/merge cycles
+    need = -(-s.n_live // 341) * 4  # leaves plus generous tree overhead
+    assert peak < need + 120, (peak, need)
+
+
+def test_mirror_rows_partition_live_tiers():
+    """DeviceMirror invariant: the BFS-reachable leaf rows of the mirror
+    table cover every live tier row exactly once — retired spans are
+    neutralized, never resurrected, and fusions adopt both children."""
+    pts = f32_points(1500, 2, seed=6)
+    s = StreamingIndex(pts, delta_threshold=256, delta_index_every=64,
+                       size_ratio=2)
+    mirror = DeviceMirror(s)
+    rng = np.random.default_rng(6)
+    for step in range(12):
+        s.insert(rng.random((200, 2)).astype(np.float32).astype(np.float64))
+        s.delete(rng.integers(0, s.n_ids, size=20))
+        mirror.sync()
+        t = mirror.table
+        seen = []
+        frontier = [0]
+        while frontier:
+            r = frontier.pop()
+            if t.child_count[r] > 0:
+                frontier.extend(
+                    range(t.first_child[r], t.first_child[r] + t.child_count[r])
+                )
+            elif t.leaf_count[r] > 0:
+                seen.append(t.perm[t.leaf_start[r]:t.leaf_start[r] + t.leaf_count[r]])
+        got = np.concatenate(seen)
+        want = (np.concatenate([tier.rows for tier in s.tiers])
+                if s.tiers else np.empty(0, np.int64))
+        assert len(got) == len(np.unique(got)), "duplicate ids in mirror"
+        np.testing.assert_array_equal(np.sort(got), np.sort(want))
+
+
+# --------------------------------------------------------------------------
+# races: ingest concurrent with query threads (the compaction-race fix)
+# --------------------------------------------------------------------------
+def _raced(engine_factory):
+    pts = f32_points(3000, 2, seed=13)
+    n_base = len(pts)
+    eng = engine_factory(pts)
+    rng0 = np.random.default_rng(13)
+    pre_deleted = np.unique(rng0.integers(0, n_base, size=80))
+    eng.delete(pre_deleted)
+    pre_set = set(int(i) for i in pre_deleted)
+
+    stop = threading.Event()
+    errors = []
+
+    def ingest():
+        rng = np.random.default_rng(99)
+        mine = []
+        try:
+            for _ in range(30):
+                ids = eng.insert(
+                    rng.random((64, 2)).astype(np.float32).astype(np.float64)
+                )
+                mine.extend(int(i) for i in ids)
+                if len(mine) > 128:  # only ever deletes its own inserts
+                    rng.shuffle(mine)
+                    eng.delete(mine[:32])
+                    mine = mine[32:]
+        except Exception as e:  # noqa: BLE001 - recorded for the main thread
+            errors.append(("ingest", e))
+        finally:
+            stop.set()
+
+    def query(tseed):
+        rng = np.random.default_rng(tseed)
+        try:
+            while not stop.is_set():
+                lo = rng.random(2) * 0.6
+                hi = lo + 0.3
+                got = eng.window(lo, hi)[0]
+                assert len(got) == len(np.unique(got))
+                in_box = ((pts >= lo) & (pts <= hi)).all(axis=1)
+                want_base = set(
+                    int(i) for i in np.flatnonzero(in_box)
+                ) - pre_set
+                got_base = set(int(i) for i in got if i < n_base)
+                assert got_base == want_base, "raced base-id window drift"
+                r = eng.knn(rng.random(2), 8)[0]
+                assert len(r) == len(np.unique(r)) and len(r) <= 8
+                assert not set(int(i) for i in r) & pre_set
+        except Exception as e:  # noqa: BLE001
+            errors.append((f"query-{tseed}", e))
+
+    threads = [threading.Thread(target=ingest)] + [
+        threading.Thread(target=query, args=(t,)) for t in (1, 2, 3)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert not errors, errors
+
+    # quiesced: full parity against a rebuild oracle replaying the same ops
+    oracle = RebuildOracle(pts)
+    oracle.delete(pre_deleted)
+    rng = np.random.default_rng(99)
+    mine = []
+    for _ in range(30):
+        ids = oracle.insert(
+            rng.random((64, 2)).astype(np.float32).astype(np.float64)
+        )
+        mine.extend(int(i) for i in ids)
+        if len(mine) > 128:
+            rng.shuffle(mine)
+            oracle.delete(mine[:32])
+            mine = mine[32:]
+    los = np.array([[0.05, 0.1], [0.4, 0.4], [0.0, 0.0]])
+    his = los + np.array([[0.3, 0.3], [0.35, 0.3], [1.0, 1.0]])
+    for a, b in zip(eng.window(los, his), oracle.window(los, his)):
+        np.testing.assert_array_equal(np.sort(a), b)
+    qs = f32_points(4, 2, seed=77)
+    for a, b in zip(eng.knn(qs, 10), oracle.knn(qs, 10)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_raced_ingest_streaming_server_sharded():
+    _raced(lambda pts: StreamingServerEngine(pts, shards=3))
+
+
+def test_raced_ingest_adaptive_overlay_compaction():
+    """The satellite-3 regression: query threads drive adaptive refinement
+    (and frequent compaction — tiny ``compact_slack``) while the ingest
+    thread mutates the overlay.  The compactor runs strictly inside the
+    TableLock writer section and bumps the table version, so refinement
+    writers recompute their row sets instead of grafting stale rows."""
+
+    def make(pts):
+        eng = OverlayServerEngine(pts)
+        eng.srv.compact_slack = 0.02  # compact nearly every graft
+        return eng
+
+    _raced(make)
+
+
+# --------------------------------------------------------------------------
+# durability: checkpoint + journal replay on both streaming paths
+# --------------------------------------------------------------------------
+def _ingest_script(eng, seed, rounds):
+    rng = np.random.default_rng(seed)
+    n = 0
+    for _ in range(rounds):
+        ids = eng.insert(
+            rng.random((90, 2)).astype(np.float32).astype(np.float64)
+        )
+        n = int(ids[-1]) + 1
+        eng.delete(rng.integers(0, n, size=12))
+    return n
+
+
+def test_streaming_server_recover_replays_ingest(tmp_path):
+    pts = f32_points(2000, 2, seed=8)
+    live = StreamingServerEngine(
+        pts,
+        journal_path=tmp_path / "ops.journal",
+        snapshot_path=tmp_path / "snap.npz",
+    )
+    _ingest_script(live, seed=8, rounds=4)
+    live.srv.checkpoint()
+    _ingest_script(live, seed=88, rounds=3)  # post-checkpoint: replayed
+
+    rec = DeviceQueryServer.recover(
+        tmp_path / "snap.npz", tmp_path / "ops.journal", microbatch=32
+    )
+    assert rec.stream is not None
+    assert rec.stats.replayed_records > 0
+    assert rec.journal.seq == live.srv.journal.seq
+    # identical ingest state and identical answers
+    assert rec.stream.n_ids == live.stream.n_ids
+    assert rec.stream.shadow == live.stream.shadow
+    np.testing.assert_array_equal(
+        rec.stream.live_ids(), live.stream.live_ids()
+    )
+    los = np.array([[0.1, 0.2], [0.0, 0.0]])
+    his = np.array([[0.45, 0.55], [1.0, 1.0]])
+    for a, b in zip(rec.window(los, his), live.window(los, his)):
+        np.testing.assert_array_equal(np.sort(a), np.sort(b))
+    qs = f32_points(3, 2, seed=5)
+    for a, b in zip(rec.knn(qs, 9), live.knn(qs, 9)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_adaptive_overlay_recover(tmp_path):
+    """Kill the adaptive server after checkpoint: graft records AND overlay
+    ingest records replay, and the overlay sidecar restores tiers written at
+    checkpoint time."""
+    pts = f32_points(2500, 2, seed=14)
+    live = OverlayServerEngine(
+        pts,
+        journal_path=tmp_path / "ops.journal",
+        snapshot_path=tmp_path / "snap.npz",
+    )
+    rng = np.random.default_rng(14)
+    for _ in range(3):  # cold queries first: graft journal records
+        c = rng.random(2)
+        live.window(c - 0.08, c + 0.08)
+    _ingest_script(live, seed=14, rounds=8)  # crosses the overlay threshold
+    assert live.srv.stream is not None and live.srv.stream.tiers
+    live.srv.checkpoint()
+    assert (tmp_path / "snap.stream.npz").exists()
+    for _ in range(2):
+        c = rng.random(2)
+        live.window(c - 0.08, c + 0.08)
+    _ingest_script(live, seed=15, rounds=2)
+
+    rec = DeviceQueryServer.recover(
+        tmp_path / "snap.npz", tmp_path / "ops.journal", microbatch=32
+    )
+    rec.OVERLAY_KW = dict(STREAM_KW)
+    assert rec.stream is not None
+    assert rec.stream.n_ids == live.srv.stream.n_ids
+    np.testing.assert_array_equal(
+        rec.stream.live_ids(), live.srv.stream.live_ids()
+    )
+    los = np.array([[0.15, 0.15], [0.0, 0.0]])
+    his = np.array([[0.5, 0.6], [1.0, 1.0]])
+    for a, b in zip(rec.window(los, his), live.window(los, his)):
+        np.testing.assert_array_equal(np.sort(a), np.sort(b))
+    qs = f32_points(3, 2, seed=15)
+    for a, b in zip(rec.knn(qs, 7), live.knn(qs, 7)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_stream_snapshot_roundtrip(tmp_path):
+    """Host-level save/load: points, tombstones, tiers, delta and the page
+    store round-trip; the reloaded stream keeps answering and ingesting."""
+    pts = f32_points(1800, 2, seed=3)
+    s = StreamingIndex(pts, **STREAM_KW)
+    rng = np.random.default_rng(3)
+    for _ in range(6):
+        s.insert(rng.random((150, 2)).astype(np.float32).astype(np.float64))
+        s.delete(rng.integers(0, s.n_ids, size=15))
+    s.save(tmp_path / "stream.npz", extra={"journal_seq": 41})
+    assert StreamingIndex.is_stream_snapshot(tmp_path / "stream.npz")
+    idx = bulk_load(pts, 250, PageStore(250))
+    idx.save(tmp_path / "static.npz")
+    assert not StreamingIndex.is_stream_snapshot(tmp_path / "static.npz")
+
+    s2, meta = StreamingIndex.load(tmp_path / "stream.npz")
+    assert meta["journal_seq"] == 41
+    assert s2.n_ids == s.n_ids and s2.shadow == s.shadow
+    los = rng.random((3, 2)) * 0.6
+    his = los + 0.25
+    for a, b in zip(s.window(los, his), s2.window(los, his)):
+        np.testing.assert_array_equal(a, b)
+    qs = rng.random((3, 2)).astype(np.float32).astype(np.float64)
+    for a, b in zip(s.knn(qs, 6), s2.knn(qs, 6)):
+        np.testing.assert_array_equal(a, b)
+    # both copies continue ingesting identically
+    more = rng.random((600, 2)).astype(np.float32).astype(np.float64)
+    np.testing.assert_array_equal(s.insert(more), s2.insert(more))
+    for a, b in zip(s.window(los, his), s2.window(los, his)):
+        np.testing.assert_array_equal(a, b)
