@@ -321,6 +321,9 @@ class DeviceQueryServer:
         # sharded streaming: shards whose refresh exhausted its retries —
         # re-included in the next sync so the device converges
         self._stream_stale_shards: set[int] = set()
+        # single-device streaming: a tier upload exhausted its retries —
+        # queries serve host-side (exact) until the next sync re-uploads
+        self._stream_device_stale = False
         self.compact_slack = float(compact_slack)
         self.microbatch = int(microbatch)
         self.use_kernel = use_kernel
@@ -553,12 +556,13 @@ class DeviceQueryServer:
                     CompletenessCertificate.intact() for _ in range(b - a)
                 )
             elif self.stream is not None:
-                out.extend(
-                    self._window_streaming(los[a:b], his[a:b], runner)
+                res = self._window_streaming(
+                    los[a:b], his[a:b], runner, return_certs=return_certs,
                 )
-                certs.extend(
-                    CompletenessCertificate.intact() for _ in range(b - a)
-                )
+                if return_certs:
+                    res, cs = res
+                    certs.extend(cs)
+                out.extend(res)
             elif self.sdev is not None:
                 with self.table_lock.read():
                     res = window_query_batch_sharded(
@@ -644,10 +648,13 @@ class DeviceQueryServer:
                     CompletenessCertificate.intact() for _ in range(b - a)
                 )
             elif self.stream is not None:
-                out.extend(self._knn_streaming(qs[a:b], k, runner))
-                certs.extend(
-                    CompletenessCertificate.intact() for _ in range(b - a)
+                res = self._knn_streaming(
+                    qs[a:b], k, runner, return_certs=return_certs,
                 )
+                if return_certs:
+                    res, cs = res
+                    certs.extend(cs)
+                out.extend(res)
             elif self.sdev is not None:
                 with self.table_lock.read():
                     res = knn_query_batch_sharded(
@@ -1098,11 +1105,14 @@ class DeviceQueryServer:
                 "this server is static — boot with from_streaming(...) "
                 "or from_ambi(...) to ingest"
             )
-        self._journal_op(
-            "insert", pts=[[float(v) for v in p] for p in pts]
-        )
         with self.table_lock.write():
             stream = self._ensure_stream()
+            # journal inside the writer section: journal seq must match
+            # application order or replay assigns different ids than the
+            # live run acknowledged to clients
+            self._journal_op(
+                "insert", pts=[[float(v) for v in p] for p in pts]
+            )
             ids = stream.insert(pts)
             self._sync_stream_device()
         self.stats.inserts += len(pts)
@@ -1118,9 +1128,14 @@ class DeviceQueryServer:
                 "this server is static — boot with from_streaming(...) "
                 "or from_ambi(...) to ingest"
             )
-        self._journal_op("delete", ids=[int(i) for i in ids])
         with self.table_lock.write():
             stream = self._ensure_stream()
+            # validate before journaling (and journal under the lock, in
+            # application order): a durable record that deterministically
+            # raises would make every subsequent recover() fail
+            if len(ids) and (ids[0] < 0 or ids[-1] >= stream.n_ids):
+                raise IndexError("delete id out of range")
+            self._journal_op("delete", ids=[int(i) for i in ids])
             n = stream.delete(ids)
             self._sync_stream_device()
         self.stats.deletes += n
@@ -1137,7 +1152,8 @@ class DeviceQueryServer:
         from .resilience import RetryExhausted
 
         info = self.mirror.sync()
-        if info is None and not self._stream_stale_shards:
+        if (info is None and not self._stream_stale_shards
+                and not self._stream_device_stale):
             return
         self.stats.stream_syncs += 1
 
@@ -1150,6 +1166,7 @@ class DeviceQueryServer:
                 self.dev = self.dev.apply_delta(
                     self.mirror.table, self.stream.points
                 )
+                self._stream_device_stale = False
                 self.stats.delta_refreshes += 1
 
         try:
@@ -1157,9 +1174,13 @@ class DeviceQueryServer:
                 upload, on_retry=self._count_retry, call_key="apply_delta"
             )
         except RetryExhausted:
-            # device stale, host authoritative; sharded keeps the failed
-            # set in _stream_stale_shards for the next sync
-            pass
+            # device stale, host authoritative: streaming queries serve
+            # host-side until a later sync lands the upload.  Sharded
+            # keeps the failed set in _stream_stale_shards; the single
+            # device records a whole-table stale flag — both re-enter
+            # upload on the next sync even if it carries no new events.
+            if self.sdev is None:
+                self._stream_device_stale = True
 
     def _stream_refresh_shards(self, info) -> None:
         """Rewrite the shard plans through the mirror's sync summary and
@@ -1254,21 +1275,47 @@ class DeviceQueryServer:
             return k
         return max(k, 1 << (k + shadow - 1).bit_length())
 
-    def _window_streaming(self, los, his, runner) -> list[np.ndarray]:
-        from ..core.distributed_jax import window_query_batch_sharded
+    def _stream_is_stale(self) -> bool:
+        """Device copies known to be missing just-flushed tier rows (a
+        failed upload): the host stream answers exactly until the next
+        sync converges the device."""
+        return self._stream_device_stale or bool(self._stream_stale_shards)
+
+    def _window_streaming(self, los, his, runner, *,
+                          return_certs: bool = False):
+        """Streaming window: device fan-out + tombstone filter + delta
+        union.  A stale device or a single-device outage falls back to
+        the authoritative host stream (exact, intact certificates); a
+        sharded outage under ``return_certs`` serves degraded with the
+        protocol's real per-shard certificates."""
+        from ..core.distributed_jax import (
+            CompletenessCertificate,
+            ShardUnavailable,
+            window_query_batch_sharded,
+        )
         from ..core.queries_jax import window_query_batch_jax
 
         with self.table_lock.read():
             stream = self.stream
+            certs = [CompletenessCertificate.intact() for _ in los]
+            if self._stream_is_stale():
+                out = stream.window(los, his)
+                return (out, certs) if return_certs else out
             if self.sdev is not None:
                 res = window_query_batch_sharded(
                     self.sdev, los, his, use_kernel=self.use_kernel,
-                    runner=runner,
+                    runner=runner, return_certs=return_certs,
                 )
+                if return_certs:
+                    res, certs = res
             else:
-                res = runner(0, lambda: window_query_batch_jax(
-                    self.dev, los, his, use_kernel=self.use_kernel,
-                ))
+                try:
+                    res = runner(0, lambda: window_query_batch_jax(
+                        self.dev, los, his, use_kernel=self.use_kernel,
+                    ))
+                except ShardUnavailable:
+                    out = stream.window(los, his)
+                    return (out, certs) if return_certs else out
             pend = stream.delta_live_rows()
             if len(pend):
                 p = stream.points[pend]
@@ -1280,14 +1327,23 @@ class DeviceQueryServer:
                 if len(pend):
                     ids = np.concatenate([ids, pend[inside[i]]])
                 out.append(np.sort(ids))
-        return out
+        return (out, certs) if return_certs else out
 
-    def _knn_streaming(self, qs, k: int, runner) -> list[np.ndarray]:
-        from ..core.distributed_jax import knn_query_batch_sharded
+    def _knn_streaming(self, qs, k: int, runner, *,
+                       return_certs: bool = False):
+        from ..core.distributed_jax import (
+            CompletenessCertificate,
+            ShardUnavailable,
+            knn_query_batch_sharded,
+        )
         from ..core.queries_jax import knn_query_batch_jax
 
         with self.table_lock.read():
             stream = self.stream
+            certs = [CompletenessCertificate.intact() for _ in qs]
+            if self._stream_is_stale():
+                out = stream.knn(qs, k)
+                return (out, certs) if return_certs else out
             n_phys = int(self.sdev.n_points if self.sdev is not None
                          else self.dev.live_points())
             k_eff = min(self._k_eff(k), n_phys)
@@ -1296,12 +1352,18 @@ class DeviceQueryServer:
                 if self.sdev is not None:
                     res = knn_query_batch_sharded(
                         self.sdev, qs, k_eff, use_kernel=self.use_kernel,
-                        runner=runner,
+                        runner=runner, return_certs=return_certs,
                     )
+                    if return_certs:
+                        res, certs = res
                 else:
-                    res = runner(0, lambda: knn_query_batch_jax(
-                        self.dev, qs, k_eff, use_kernel=self.use_kernel,
-                    ))
+                    try:
+                        res = runner(0, lambda: knn_query_batch_jax(
+                            self.dev, qs, k_eff, use_kernel=self.use_kernel,
+                        ))
+                    except ShardUnavailable:
+                        out = stream.knn(qs, k)
+                        return (out, certs) if return_certs else out
             pend = stream.delta_live_rows()
             pts = stream.points
             out = []
@@ -1312,7 +1374,7 @@ class DeviceQueryServer:
                 ids = np.unique(ids)
                 d2 = np.sum((pts[ids] - qs[i]) ** 2, axis=1)
                 out.append(ids[np.lexsort((ids, d2))[:k]])
-        return out
+        return (out, certs) if return_certs else out
 
     def _merge_overlay_window(self, res, los, his) -> list[np.ndarray]:
         """Union an adaptive microbatch's base answers with the streaming
@@ -1469,7 +1531,10 @@ class DeviceQueryServer:
             )
             if self.stream is not None:
                 # adaptive overlay rides along as a sidecar in the same
-                # barrier; recovery replays post-seq ingest on top of it
+                # barrier.  The two saves are not atomic as a pair: a
+                # crash in between leaves the old sidecar next to the new
+                # base, so recovery replays ingest from the sidecar's OWN
+                # recorded seq, not the base's (see recover())
                 self.stream.save(self._overlay_sidecar(),
                                  extra={"journal_seq": seq})
 
@@ -1560,19 +1625,29 @@ class DeviceQueryServer:
             np.asarray(points), table, str(meta["ambi_state"])
         )
         snap_seq = int(meta["journal_seq"])
+        # the base snapshot and the overlay sidecar are two files written
+        # in sequence — a crash between them leaves the sidecar at the
+        # *previous* barrier's seq.  Each file keeps its own replay
+        # cursor: ambi ops resume after the base's seq, ingest ops after
+        # the sidecar's own recorded seq (0 when no sidecar exists — no
+        # ingest was ever folded, so every journaled ingest op replays).
         overlay = None
+        overlay_seq = 0
         sidecar = snapshot_path[:-len(".npz")] + ".stream.npz"
         if os.path.exists(sidecar):
-            overlay, _ometa = StreamingIndex.load(sidecar)
+            overlay, ometa = StreamingIndex.load(sidecar)
+            overlay_seq = int(ometa["journal_seq"])
         was_armed = fault_plan is not None and fault_plan.armed
         if was_armed:
             fault_plan.disarm()
         replayed = 0
         try:
             for rec in GraftJournal.read_records(
-                journal_path, after_seq=snap_seq
+                journal_path, after_seq=min(snap_seq, overlay_seq)
             ):
                 if rec.get("op") in ("insert", "delete"):
+                    if int(rec.get("seq", 0)) <= overlay_seq:
+                        continue  # already folded into the sidecar
                     if overlay is None:
                         overlay = StreamingIndex(
                             np.asarray(points), store=ambi.store,
@@ -1580,6 +1655,8 @@ class DeviceQueryServer:
                         )
                     cls._replay_ingest(overlay, rec)
                 else:
+                    if int(rec.get("seq", 0)) <= snap_seq:
+                        continue  # already folded into the base snapshot
                     cls._replay_op(ambi, rec)
                 replayed += 1
         finally:

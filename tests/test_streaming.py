@@ -454,6 +454,185 @@ def test_adaptive_overlay_recover(tmp_path):
         np.testing.assert_array_equal(a, b)
 
 
+def test_journal_order_matches_application_order_under_races(tmp_path):
+    """Racing inserts must journal in the exact order they are applied:
+    replaying the journal has to reproduce the same id -> point mapping
+    the live server acknowledged to clients."""
+    pts = f32_points(800, 2, seed=31)
+    live = StreamingServerEngine(
+        pts,
+        journal_path=tmp_path / "ops.journal",
+        snapshot_path=tmp_path / "snap.npz",
+    )
+    live.srv.checkpoint()  # empty barrier so recover() has a snapshot
+
+    def writer(t):
+        rng = np.random.default_rng(100 + t)
+        for _ in range(20):
+            batch = rng.random((25, 2))
+            batch[:, 0] = (batch[:, 0] + t) / 2.0  # thread-distinct coords
+            live.insert(batch)
+
+    threads = [threading.Thread(target=writer, args=(t,)) for t in range(2)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+
+    rec = DeviceQueryServer.recover(
+        tmp_path / "snap.npz", tmp_path / "ops.journal", microbatch=32
+    )
+    n = live.srv.stream.n_ids
+    assert rec.stream.n_ids == n
+    np.testing.assert_array_equal(
+        rec.stream.points[:n], live.srv.stream.points[:n]
+    )
+
+
+def test_out_of_range_delete_rejected_before_journaling(tmp_path):
+    """A delete with ids outside the stream's range must fail *before* a
+    journal record lands — a durable record that deterministically raises
+    would make every subsequent recover() fail."""
+    from repro.serve.journal import GraftJournal
+
+    pts = f32_points(900, 2, seed=7)
+    live = StreamingServerEngine(
+        pts,
+        journal_path=tmp_path / "ops.journal",
+        snapshot_path=tmp_path / "snap.npz",
+    )
+    live.srv.checkpoint()
+    _ingest_script(live, seed=7, rounds=2)
+    bad = live.srv.stream.n_ids + 1000
+    with pytest.raises(IndexError):
+        live.delete([bad])
+    _ingest_script(live, seed=77, rounds=1)  # server keeps ingesting
+
+    for rec_ in GraftJournal.read_records(tmp_path / "ops.journal"):
+        if rec_["op"] == "delete":
+            assert bad not in rec_["ids"]
+    rec = DeviceQueryServer.recover(
+        tmp_path / "snap.npz", tmp_path / "ops.journal", microbatch=32
+    )
+    np.testing.assert_array_equal(
+        rec.stream.live_ids(), live.srv.stream.live_ids()
+    )
+
+
+def test_single_device_stale_upload_serves_exact_then_converges():
+    """When the single-device tier upload exhausts its retries, queries
+    fall back to the authoritative host stream (exact answers, intact
+    certificates) and the upload is re-attempted on the next sync even
+    when that sync carries no new structural events."""
+    from repro.serve.faults import FaultPlan, FaultRule
+    from repro.serve.resilience import RetryPolicy
+
+    pts = f32_points(1500, 2, seed=21)
+    plan = FaultPlan([FaultRule("apply_delta", rate=1.0, max_fires=2)],
+                     seed=0)
+    eng = StreamingServerEngine(
+        pts, fault_plan=plan,
+        retry=RetryPolicy(max_attempts=2, sleep=lambda s: None),
+    )
+    oracle = StreamingHostEngine(pts)
+    rng = np.random.default_rng(21)
+    batch = rng.random((600, 2))  # crosses delta_threshold: flush + upload
+    eng.insert(batch)
+    oracle.insert(batch)
+    assert eng.srv._stream_device_stale  # both attempts faulted
+
+    los = np.array([[0.1, 0.1], [0.0, 0.0]])
+    his = np.array([[0.6, 0.7], [1.0, 1.0]])
+    res, certs = eng.srv.window(los, his, return_certs=True)
+    assert all(c.complete for c in certs)
+    for a, b in zip(res, oracle.window(los, his)):
+        np.testing.assert_array_equal(np.sort(a), np.sort(b))
+    qs = rng.random((3, 2))
+    for a, b in zip(eng.knn(qs, 8), oracle.knn(qs, 8)):
+        np.testing.assert_array_equal(a, b)
+
+    small = rng.random((10, 2))  # no flush, but the stale flag re-uploads
+    eng.insert(small)
+    oracle.insert(small)
+    assert not eng.srv._stream_device_stale
+    for a, b in zip(eng.window(los, his), oracle.window(los, his)):
+        np.testing.assert_array_equal(np.sort(a), np.sort(b))
+
+
+def test_streaming_sharded_outage_returns_degraded_certificates():
+    """A shard outage on the streaming sharded path must surface through
+    the completeness certificates (degraded, naming the dead shard's
+    subspaces) instead of raising through window(return_certs=True)."""
+    from repro.serve.faults import FaultPlan, FaultRule
+    from repro.serve.resilience import RetryPolicy
+
+    pts = f32_points(2000, 2, seed=11)
+    plan = FaultPlan(
+        [FaultRule("shard_dispatch", rate=1.0, match={"shard": 1})], seed=0
+    )
+    eng = StreamingServerEngine(
+        pts, shards=3, fault_plan=plan,
+        retry=RetryPolicy(max_attempts=2, sleep=lambda s: None),
+    )
+    oracle = StreamingHostEngine(pts)
+    los = np.array([[0.0, 0.0], [0.2, 0.1]])
+    his = np.array([[1.0, 1.0], [0.8, 0.9]])
+    res, certs = eng.srv.window(los, his, return_certs=True)
+    assert any(not c.complete for c in certs)
+    for a, b in zip(res, oracle.window(los, his)):
+        assert np.isin(a, b).all()  # degraded: subset of the true answer
+    # k-NN must also serve under the outage instead of raising (its
+    # certificate may still be certified_exact if pruning clears the
+    # dead shard's subspaces — that is the protocol's contract)
+    qs = f32_points(2, 2, seed=12)
+    res, certs = eng.srv.knn(qs, 5, return_certs=True)
+    assert len(res) == len(certs) == len(qs)
+
+
+def test_sidecar_crash_between_saves_loses_no_ingest(tmp_path, monkeypatch):
+    """The adaptive barrier writes base .npz then the overlay sidecar; a
+    crash in between leaves the *previous* sidecar next to the new base.
+    Recovery must replay ingest from the sidecar's own seq, so the ops
+    between the two barriers (still in the journal) are not lost."""
+    from repro.serve.faults import FaultError
+    from repro.serve.resilience import RetryExhausted, RetryPolicy
+
+    pts = f32_points(2500, 2, seed=14)
+    live = OverlayServerEngine(
+        pts,
+        journal_path=tmp_path / "ops.journal",
+        snapshot_path=tmp_path / "snap.npz",
+        retry=RetryPolicy(max_attempts=2, sleep=lambda s: None),
+    )
+    _ingest_script(live, seed=14, rounds=8)
+    assert live.srv.stream is not None
+    live.srv.checkpoint()  # barrier 1: base + sidecar at the same seq
+    _ingest_script(live, seed=15, rounds=2)  # must survive the torn barrier
+
+    real_save = StreamingIndex.save
+
+    def torn_save(self, path, extra=None):
+        raise FaultError("crash between base snapshot and sidecar save")
+
+    monkeypatch.setattr(StreamingIndex, "save", torn_save)
+    with pytest.raises(RetryExhausted):
+        live.srv.checkpoint()  # base lands at the new seq, sidecar stays old
+    monkeypatch.setattr(StreamingIndex, "save", real_save)
+
+    rec = DeviceQueryServer.recover(
+        tmp_path / "snap.npz", tmp_path / "ops.journal", microbatch=32
+    )
+    assert rec.stream is not None
+    assert rec.stream.n_ids == live.srv.stream.n_ids
+    np.testing.assert_array_equal(
+        rec.stream.live_ids(), live.srv.stream.live_ids()
+    )
+    los = np.array([[0.15, 0.15], [0.0, 0.0]])
+    his = np.array([[0.5, 0.6], [1.0, 1.0]])
+    for a, b in zip(rec.window(los, his), live.window(los, his)):
+        np.testing.assert_array_equal(np.sort(a), np.sort(b))
+
+
 def test_stream_snapshot_roundtrip(tmp_path):
     """Host-level save/load: points, tombstones, tiers, delta and the page
     store round-trip; the reloaded stream keeps answering and ingesting."""
