@@ -1,0 +1,41 @@
+"""repro.analysis — repo-specific invariant lint + concurrency sanitizer.
+
+Static side (stdlib ``ast`` only, no runtime deps):
+
+- :mod:`repro.analysis.locks` — lock-discipline / static race detector.
+  Every mutation of inventoried serving-spine state must be dominated by a
+  ``with ...table_lock.write():`` section (reads by at least ``.read()``).
+- :mod:`repro.analysis.ordering` — journal-ordering checker.  Inside a
+  writer section that both journals and mutates, the journal append must
+  precede the first state mutation, and every journal append must itself
+  sit inside a writer section (the PR-9 bug class).
+- :mod:`repro.analysis.purity` — jit/Pallas purity lint.  No host syncs
+  (``.item()`` / ``float()`` / ``int()`` / ``np.asarray``) on traced values
+  in jit-reachable functions, no Python ``if`` on tracers inside Pallas
+  kernel bodies, and every public kernel wrapper must have a ``ref.py``
+  twin referenced by a test.
+- :mod:`repro.analysis.coverage` — fault-point coverage checker.  Every
+  name in ``serve/faults.py``'s ``FAILURE_POINTS`` must appear in at least
+  one test file.
+
+Dynamic side:
+
+- :mod:`repro.analysis.runtime` — the ``REPRO_SANITIZE=1`` sanitizer:
+  per-thread lock held-state, guarded mutator assertions on
+  ``NodeTable`` / ``StreamingIndex`` / ``DeviceMirror``, and a
+  lock-acquisition-order graph that reports potential deadlocks.
+
+Run the static pass with ``python -m repro.analysis src/``.  Escape
+hatches (all require a reason):
+
+- ``# analysis: unlocked-ok(reason)`` — suppress lock findings on a line.
+- ``# analysis: caller-holds-write`` on a ``def`` line — the body is
+  treated as a writer section; intra-file callers are checked instead.
+- ``# analysis: single-threaded(reason)`` on a ``def`` line — boot /
+  recovery code exempt from lock discipline.
+- ``# analysis: host-ok(reason)`` — suppress purity findings on a line.
+"""
+
+from .common import Finding, analyze_paths, iter_py_files
+
+__all__ = ["Finding", "analyze_paths", "iter_py_files"]

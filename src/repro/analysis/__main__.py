@@ -1,0 +1,40 @@
+"""CLI: ``python -m repro.analysis [paths...] [--tests-dir DIR]``.
+
+Runs every applicable checker over the given paths (default ``src/``),
+prints findings as ``path:line: [checker] message``, and exits nonzero
+when any finding survives.  This is what the CI ``lint`` job runs.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+from .common import analyze_paths
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="repo-specific invariant lint for the serving spine "
+                    "(lock discipline, journal ordering, jit/Pallas "
+                    "purity, fault-point coverage)",
+    )
+    ap.add_argument("paths", nargs="*", default=["src"],
+                    help="files or directories to analyze (default: src)")
+    ap.add_argument("--tests-dir", default="tests",
+                    help="test tree for coverage/ref-twin checks "
+                         "(default: tests; pass '' to skip)")
+    ns = ap.parse_args(argv)
+    findings = analyze_paths(ns.paths or ["src"],
+                             tests_dir=ns.tests_dir or None)
+    for f in findings:
+        print(f.render())
+    if findings:
+        print(f"\n{len(findings)} finding(s).", file=sys.stderr)
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,275 @@
+"""Shared infrastructure for the repro.analysis static checkers.
+
+Everything here is stdlib-only (``ast``, ``re``, ``os``).  The central
+abstraction is :func:`iter_with_context`: a walk over a module's
+statements that tracks, for every node, which class/method encloses it,
+whether a ``with ...table_lock.write():`` (or ``.read()``, or Frontend's
+``with self._mu:``) section dominates it, and which escape-hatch
+annotations apply.
+
+Soundness caveats (documented, deliberate):
+
+- Nested ``def`` closures inherit the lock context of their definition
+  site (the retry ``attempt()`` / ``upload()`` idiom in the engine).  A
+  closure stored and invoked later outside the section would be missed;
+  the runtime sanitizer covers that case.
+- Lock context is tracked per-file.  Cross-file call chains are handled
+  by the ``# analysis: caller-holds-write`` contract: the annotated
+  function's body is treated as a writer section, and its intra-file
+  call sites are checked instead.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+from dataclasses import dataclass, field
+from typing import Iterator, Optional
+
+# ``# analysis: tag`` or ``# analysis: tag(reason)``; several may share a line.
+_ANNOT_RE = re.compile(r"#\s*analysis:\s*([a-z-]+)(?:\(([^)]*)\))?")
+
+# Annotations that require a reason string to be accepted.
+_REASON_REQUIRED = {"unlocked-ok", "single-threaded", "host-ok"}
+
+
+@dataclass(frozen=True)
+class Finding:
+    path: str
+    line: int
+    checker: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}: [{self.checker}] {self.message}"
+
+
+class SourceFile:
+    """A parsed module plus its line-level ``# analysis:`` annotations."""
+
+    def __init__(self, path: str, text: Optional[str] = None):
+        self.path = path
+        if text is None:
+            with open(path, "r", encoding="utf-8") as f:
+                text = f.read()
+        self.text = text
+        self.lines = text.splitlines()
+        self.tree = ast.parse(text, filename=path)
+        # line number -> {tag: reason-or-""}
+        self.annotations: dict[int, dict[str, str]] = {}
+        self.bad_annotations: list[Finding] = []
+        for i, line in enumerate(self.lines, start=1):
+            for m in _ANNOT_RE.finditer(line):
+                tag, reason = m.group(1), (m.group(2) or "").strip()
+                if tag in _REASON_REQUIRED and not reason:
+                    self.bad_annotations.append(
+                        Finding(path, i, "annotation",
+                                f"'# analysis: {tag}(...)' requires a reason")
+                    )
+                self.annotations.setdefault(i, {})[tag] = reason
+
+    def annotation(self, node: ast.AST, tag: str) -> Optional[str]:
+        """Reason string if ``tag`` annotates any line the node's header
+        spans (def line through first body line for defs; the node's own
+        line span otherwise).  Returns None when absent."""
+        first = getattr(node, "lineno", None)
+        if first is None:
+            return None
+        last = getattr(node, "end_lineno", first)
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)) and node.body:
+            first = min(d.lineno for d in node.decorator_list) if node.decorator_list else first
+            last = node.body[0].lineno - 1
+            last = max(last, node.lineno)
+        for ln in range(first, last + 1):
+            tags = self.annotations.get(ln)
+            if tags is not None and tag in tags:
+                return tags[tag]
+        return None
+
+    def has_marker(self, tag: str) -> bool:
+        return any(tag in tags for tags in self.annotations.values())
+
+
+def attr_chain(node: ast.AST) -> list[str]:
+    """``self.table_lock.write`` -> ["self", "table_lock", "write"].
+    Returns [] for expressions that are not simple dotted names."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return parts[::-1]
+    return []
+
+
+def guard_mode(item: ast.withitem) -> Optional[str]:
+    """Classify a with-item as a 'write' or 'read' lock section.
+
+    Recognized guards:
+      - ``with <...>.table_lock.write():``  -> write
+      - ``with <...>.table_lock.read():``   -> read
+      - ``with <...>._mu:``                 -> write (Frontend's Condition)
+    """
+    e = item.context_expr
+    if isinstance(e, ast.Call) and isinstance(e.func, ast.Attribute):
+        chain = attr_chain(e.func)
+        if "table_lock" in chain or any(c.endswith("_lock") for c in chain[:-1]):
+            if e.func.attr == "write":
+                return "write"
+            if e.func.attr == "read":
+                return "read"
+    if isinstance(e, ast.Attribute) and e.attr == "_mu":
+        return "write"
+    if isinstance(e, ast.Name) and e.id == "_mu":
+        return "write"
+    return None
+
+
+# Methods whose bodies are exempt from lock discipline by default:
+# object construction happens before the instance is published.
+CONSTRUCTOR_EXEMPT = {"__init__", "__new__", "__post_init__"}
+
+
+@dataclass
+class Ctx:
+    """Static context at a visited node."""
+    class_name: Optional[str] = None
+    func_name: Optional[str] = None
+    func_node: Optional[ast.AST] = None
+    lock: Optional[str] = None        # 'write' | 'read' | None
+    lock_node: Optional[ast.AST] = None  # the With/def that took the lock
+    exempt: Optional[str] = None      # reason the whole scope is exempt
+    with_stack: tuple = field(default_factory=tuple)  # enclosing With nodes
+
+    def dominated(self, need: str) -> bool:
+        if self.exempt is not None:
+            return True
+        if need == "read":
+            return self.lock in ("read", "write")
+        return self.lock == "write"
+
+
+def iter_with_context(src: SourceFile) -> Iterator[tuple[ast.stmt, Ctx]]:
+    """Yield every statement in the module with its :class:`Ctx`.
+
+    Function bodies annotated ``# analysis: caller-holds-write`` are
+    walked with ``lock='write'``; ``# analysis: single-threaded(...)``
+    and constructors are walked with ``exempt`` set.  Nested closures
+    inherit their definition site's context.
+    """
+
+    def walk(stmts, ctx: Ctx):
+        for node in stmts:
+            yield node, ctx
+            if isinstance(node, ast.ClassDef):
+                yield from walk(node.body, Ctx(class_name=node.name))
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                sub = Ctx(class_name=ctx.class_name, func_name=node.name,
+                          func_node=node, lock=ctx.lock,
+                          lock_node=ctx.lock_node, exempt=ctx.exempt,
+                          with_stack=ctx.with_stack)
+                if node.name in CONSTRUCTOR_EXEMPT:
+                    sub.exempt = "constructor"
+                if src.annotation(node, "single-threaded") is not None:
+                    sub.exempt = "single-threaded"
+                if src.annotation(node, "caller-holds-write") is not None:
+                    sub.lock = "write"
+                    sub.lock_node = node
+                yield from walk(node.body, sub)
+            elif isinstance(node, (ast.With, ast.AsyncWith)):
+                mode = None
+                for item in node.items:
+                    m = guard_mode(item)
+                    if m == "write":
+                        mode = "write"
+                    elif m == "read" and mode is None:
+                        mode = "read"
+                sub = Ctx(**{**ctx.__dict__})
+                if mode == "write":
+                    sub.lock = "write"
+                    sub.lock_node = node
+                elif mode == "read" and ctx.lock != "write":
+                    sub.lock = "read"
+                sub.with_stack = ctx.with_stack + (node,)
+                yield from walk(node.body, sub)
+            elif isinstance(node, (ast.If, ast.For, ast.AsyncFor, ast.While)):
+                yield from walk(node.body, ctx)
+                yield from walk(node.orelse, ctx)
+            elif isinstance(node, ast.Try):
+                yield from walk(node.body, ctx)
+                for h in node.handlers:
+                    yield from walk(h.body, ctx)
+                yield from walk(node.orelse, ctx)
+                yield from walk(node.finalbody, ctx)
+            elif isinstance(node, ast.Match):
+                for case in node.cases:
+                    yield from walk(case.body, ctx)
+
+    yield from walk(src.tree.body, Ctx())
+
+
+def defined_classes(src: SourceFile) -> set[str]:
+    return {n.name for n in src.tree.body if isinstance(n, ast.ClassDef)}
+
+
+def module_functions(tree: ast.Module) -> dict[str, ast.FunctionDef]:
+    return {n.name: n for n in tree.body
+            if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))}
+
+
+def iter_py_files(paths: list[str]) -> Iterator[str]:
+    for p in paths:
+        if os.path.isfile(p) and p.endswith(".py"):
+            yield p
+        elif os.path.isdir(p):
+            for root, dirs, files in os.walk(p):
+                dirs[:] = sorted(d for d in dirs if d not in
+                                 ("__pycache__", ".git", ".venv", "node_modules"))
+                for f in sorted(files):
+                    if f.endswith(".py"):
+                        yield os.path.join(root, f)
+
+
+_CORPUS_CACHE: dict[str, str] = {}
+
+
+def tests_corpus(tests_dir: Optional[str]) -> str:
+    """Concatenated text of every test file under ``tests_dir`` (cached);
+    empty string when the directory is absent."""
+    if not tests_dir or not os.path.isdir(tests_dir):
+        return ""
+    key = os.path.abspath(tests_dir)
+    if key not in _CORPUS_CACHE:
+        parts = []
+        for path in iter_py_files([tests_dir]):
+            try:
+                with open(path, "r", encoding="utf-8") as f:
+                    parts.append(f.read())
+            except OSError:
+                continue
+        _CORPUS_CACHE[key] = "\n".join(parts)
+    return _CORPUS_CACHE[key]
+
+
+def analyze_paths(paths: list[str], tests_dir: Optional[str] = "tests") -> list[Finding]:
+    """Run every applicable checker over ``paths``; returns all findings."""
+    # Imported here so ``from repro.analysis.common import Finding`` stays
+    # cheap and cycle-free for the runtime sanitizer.
+    from . import coverage, locks, ordering, purity
+
+    findings: list[Finding] = []
+    for path in iter_py_files(paths):
+        try:
+            src = SourceFile(path)
+        except SyntaxError as e:
+            findings.append(Finding(path, e.lineno or 0, "parse", str(e.msg)))
+            continue
+        findings.extend(src.bad_annotations)
+        findings.extend(locks.check(src))
+        findings.extend(ordering.check(src))
+        findings.extend(purity.check(src, tests_dir=tests_dir))
+        findings.extend(coverage.check(src, tests_dir=tests_dir))
+    findings.sort(key=lambda f: (f.path, f.line))
+    return findings

@@ -1,0 +1,52 @@
+"""Fault-point coverage checker.
+
+``serve/faults.py`` registers the named failure points the chaos plane
+can fire (``FAILURE_POINTS``).  A failure point nobody injects in a test
+is a recovery path that has never executed — this checker fails the
+build until every registered name appears in at least one test file
+under ``tests/``.  Registering a new fault point therefore *requires*
+shipping a test that exercises it in the same change.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from typing import Optional
+
+from .common import Finding, SourceFile, tests_corpus
+
+CHECKER = "fault-coverage"
+
+
+def _failure_points(tree: ast.Module):
+    for node in tree.body:
+        if isinstance(node, ast.Assign):
+            names = [t.id for t in node.targets if isinstance(t, ast.Name)]
+            if "FAILURE_POINTS" not in names:
+                continue
+            if isinstance(node.value, (ast.Tuple, ast.List, ast.Set)):
+                for elt in node.value.elts:
+                    if isinstance(elt, ast.Constant) \
+                            and isinstance(elt.value, str):
+                        yield elt.value, elt.lineno
+
+
+def check(src: SourceFile, tests_dir: Optional[str] = "tests") -> list[Finding]:
+    points = list(_failure_points(src.tree))
+    if not points:
+        return []
+    corpus = tests_corpus(tests_dir)
+    if not corpus:
+        return [Finding(src.path, points[0][1], CHECKER,
+                        f"FAILURE_POINTS registered but no tests found "
+                        f"under {tests_dir!r}")]
+    findings = []
+    for name, line in points:
+        if not re.search(rf"[\"']{re.escape(name)}[\"']", corpus):
+            findings.append(Finding(
+                src.path, line, CHECKER,
+                f"failure point '{name}' is not exercised by any test "
+                f"under {tests_dir}/ — every registered fault needs an "
+                f"injection test"))
+    return findings

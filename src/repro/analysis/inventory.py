@@ -1,0 +1,146 @@
+"""The machine-checked mutable-state inventory of the serving spine.
+
+This is the single source of truth the lock-discipline and
+journal-ordering checkers consume, and the list DESIGN_PERF.md's
+"Concurrency invariants" section documents.  Three categories:
+
+* **containment** classes (``StreamingIndex``, ``DeviceMirror``) own no
+  lock; their contract is "not internally locked — the serving layer
+  serializes writers through its TableLock".  The checker proves their
+  state attributes are only written inside their declared mutator
+  methods (inventory drift shows up as a finding), and the *call sites*
+  of those mutators in lock-owning files must be writer sections.
+* **domination** classes (``DeviceQueryServer``, ``Frontend``) own a
+  guard (``table_lock`` / ``_mu``); every mutation of their guarded
+  attributes and every call to an inventoried mutator must sit inside a
+  ``with ...write():`` (resp. ``with self._mu:``) section.  Reads of
+  serving state need at least a ``.read()`` section.
+* **relaxed** attributes (telemetry counters) tolerate benign lost
+  updates by policy; they are listed so the exemption is explicit, not
+  accidental.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class ClassInventory:
+    name: str
+    kind: str                      # 'containment' | 'domination'
+    state_attrs: frozenset = frozenset()
+    mutators: frozenset = frozenset()     # methods allowed to write state_attrs
+    relaxed_attrs: frozenset = frozenset()
+
+
+# -- containment classes (core/streaming.py) --------------------------------
+
+STREAMING_INDEX = ClassInventory(
+    name="StreamingIndex",
+    kind="containment",
+    state_attrs=frozenset({
+        "_pts", "_tomb", "_n", "_delta", "_delta_n", "_delta_indexed",
+        "_delta_table", "tiers", "_next_tid", "_shadow", "base_n",
+    }),
+    mutators=frozenset({
+        "insert", "delete", "_ensure_points", "_reindex_delta", "_flush",
+        "_maybe_merge", "_merge_last_two", "_alloc_tid",
+    }),
+    relaxed_attrs=frozenset({"_events", "track_events"}),
+)
+
+DEVICE_MIRROR = ClassInventory(
+    name="DeviceMirror",
+    kind="containment",
+    state_attrs=frozenset({
+        "table", "spans", "root_rows", "_remap", "_retired",
+    }),
+    mutators=frozenset({
+        "sync", "_attach", "_fuse", "_retire", "_rebuild_root",
+    }),
+)
+
+# -- domination classes -----------------------------------------------------
+
+# DeviceQueryServer: serving state republished under table_lock.write().
+DEVICE_QUERY_SERVER = ClassInventory(
+    name="DeviceQueryServer",
+    kind="domination",
+    state_attrs=frozenset({
+        "dev", "sdev", "stream", "mirror", "ambi", "_table_version",
+        "_stream_stale_shards", "_stream_device_stale",
+    }),
+    relaxed_attrs=frozenset({
+        # Telemetry: monotone counters where a lost increment skews a
+        # metric but cannot corrupt serving state (policy: relaxed).
+        "stats", "breakers",
+    }),
+)
+
+# Frontend: admission queues, request terminal states, and SLO counters
+# all serialize through the reentrant Condition self._mu.
+FRONTEND = ClassInventory(
+    name="Frontend",
+    kind="domination",
+    state_attrs=frozenset({
+        # admission + brownout state
+        "_queues", "_depth", "_seq", "_stopping", "brownout",
+        # Request terminal-state fields (the double-finish race surface)
+        "status", "reason", "ids", "cert", "t_done",
+        # FrontendStats fields — SLO counters feed shed/brownout
+        # decisions and bench gates, so they are guarded, not relaxed
+        "submitted", "admitted", "completed", "rejected", "timed_out",
+        "shed", "batches", "brownout_batches", "refine_batches",
+        "brownout_enters", "brownout_exits", "depth_peak",
+    }),
+)
+
+INVENTORY: dict[str, ClassInventory] = {
+    c.name: c for c in (
+        STREAMING_INDEX, DEVICE_MIRROR, DEVICE_QUERY_SERVER, FRONTEND,
+    )
+}
+
+# -- cross-file mutator call sites ------------------------------------------
+
+# Method names that mutate inventoried state no matter which object the
+# receiver resolves to; a call must be dominated by a writer section.
+WRITE_CALLS = frozenset({
+    # StreamingIndex / DeviceMirror
+    "insert", "delete", "sync", "load_state",
+    # NodeTable post-boot mutators (guarded at runtime by the sanitizer)
+    "graft", "append_subtree", "append_row_copies", "set_root_children",
+    "append_branch", "neutralize_rows", "compact",
+    # device republish + journal truncation
+    "apply_delta", "truncate",
+})
+
+# Receivers that make a WRITE_CALLS method name unambiguous.  A call is
+# flagged when the method name is in WRITE_CALLS *and* the receiver's
+# final segment is one of these (or starts with them), keeping generic
+# names like ``list.insert`` out of scope.
+WRITE_CALL_RECEIVERS = frozenset({
+    "stream", "mirror", "table", "tbl", "ambi", "journal", "_journal",
+    "t", "self",
+})
+
+# Read-path entry points: must hold at least table_lock.read().
+READ_CALLS = frozenset({
+    "window_query_batch_jax", "window_query_batch_jax_sharded",
+    "knn_query_batch_jax", "knn_query_batch_jax_sharded",
+    "filter_live", "delta_live_rows", "live_points",
+})
+
+# -- journal ordering -------------------------------------------------------
+
+# A call whose receiver chain ends in one of these attrs with method
+# 'append', or a call to one of JOURNAL_METHODS, counts as a journal
+# write (Rule B: must be inside a writer section).
+JOURNAL_RECEIVERS = frozenset({"journal", "_journal"})
+JOURNAL_METHODS = frozenset({"_journal_op"})
+
+# Within one writer section, the first journal write must precede the
+# first of these journaled state mutations (Rule A).
+JOURNALED_MUTATIONS = frozenset({"insert", "delete"})
+JOURNALED_MUTATION_RECEIVERS = frozenset({"stream", "ambi", "self"})

@@ -1,0 +1,197 @@
+"""Lock-discipline / static race detector.
+
+Two passes, driven by which inventoried classes a file defines:
+
+* **containment** — inside a file defining ``StreamingIndex`` /
+  ``DeviceMirror``, every assignment to an inventoried state attribute
+  (``self._pts``, ``self.tiers``, ...) must occur inside one of that
+  class's declared mutator methods.  New mutation sites outside the
+  inventory are findings (inventory drift), so the runtime sanitizer's
+  guard list cannot silently fall behind the code.
+* **domination** — inside a file defining ``DeviceQueryServer`` /
+  ``Frontend``, every assignment to a guarded attribute and every call
+  to an inventoried mutator (``stream.insert``, ``mirror.sync``,
+  ``table.graft``, ``journal.truncate``, ...) must be dominated by a
+  ``with ...table_lock.write():`` (Frontend: ``with self._mu:``)
+  section; inventoried read entry points need at least ``.read()``.
+
+Escape hatches: ``# analysis: unlocked-ok(reason)`` on the line,
+``# analysis: caller-holds-write`` / ``# analysis: single-threaded(...)``
+on the enclosing ``def`` (see :mod:`repro.analysis.common`).  A
+``caller-holds-write`` function's intra-file call sites are themselves
+checked: each must already be in a writer section.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .common import Finding, SourceFile, attr_chain, iter_with_context
+from .inventory import (
+    INVENTORY,
+    READ_CALLS,
+    WRITE_CALLS,
+    WRITE_CALL_RECEIVERS,
+)
+
+CHECKER = "lock-discipline"
+
+
+def _assign_targets(node: ast.stmt):
+    if isinstance(node, ast.Assign):
+        return node.targets
+    if isinstance(node, (ast.AugAssign, ast.AnnAssign)):
+        return [node.target]
+    return []
+
+
+def _flag(src: SourceFile, node: ast.AST, msg: str,
+          findings: list[Finding]) -> None:
+    if src.annotation(node, "unlocked-ok") is not None:
+        return
+    findings.append(Finding(src.path, node.lineno, CHECKER, msg))
+
+
+_SIMPLE_STMTS = (ast.Expr, ast.Assign, ast.AugAssign, ast.AnnAssign,
+                 ast.Return, ast.Raise, ast.Assert, ast.Delete)
+
+
+def _iter_calls(node: ast.AST):
+    """Call expressions in a subtree, pruning nested defs and lambdas
+    (their bodies run later, under their own — separately walked or
+    deliberately deferred — context)."""
+    if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+        return
+    if isinstance(node, ast.Call):
+        yield node
+    for child in ast.iter_child_nodes(node):
+        yield from _iter_calls(child)
+
+
+def _call_sites(node: ast.stmt):
+    """Calls that execute *at this statement's context*: the whole body
+    of simple statements, only the header expressions of compound ones
+    (their bodies are yielded separately with the inner context)."""
+    if isinstance(node, _SIMPLE_STMTS):
+        yield from _iter_calls(node)
+    elif isinstance(node, (ast.If, ast.While)):
+        yield from _iter_calls(node.test)
+    elif isinstance(node, (ast.For, ast.AsyncFor)):
+        yield from _iter_calls(node.iter)
+    elif isinstance(node, (ast.With, ast.AsyncWith)):
+        for item in node.items:
+            yield from _iter_calls(item.context_expr)
+
+
+def check(src: SourceFile) -> list[Finding]:
+    local = {name: inv for name, inv in INVENTORY.items()
+             if name in _classes(src)}
+    if not local:
+        return []
+
+    containment = [inv for inv in local.values() if inv.kind == "containment"]
+    domination = [inv for inv in local.values() if inv.kind == "domination"]
+    findings: list[Finding] = []
+
+    guarded_attrs = frozenset().union(
+        *(inv.state_attrs for inv in domination)) if domination else frozenset()
+    # containment mutators: calls inside them are the callee side of the
+    # contract — the *caller* holds the lock — so skip domination there.
+    containment_methods = {
+        (inv.name, m) for inv in containment for m in inv.mutators
+    }
+    # pre-pass: collect caller-holds-write defs so call sites that appear
+    # earlier in the file than the def are still checked
+    chw_funcs: dict[str, int] = {}
+    for sub in ast.walk(src.tree):
+        if isinstance(sub, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                and src.annotation(sub, "caller-holds-write") is not None:
+            chw_funcs.setdefault(sub.name, sub.lineno)
+    chw_called_in_write: dict[str, bool] = {}
+
+    for node, ctx in iter_with_context(src):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            continue
+
+        in_containment_mutator = (
+            (ctx.class_name, ctx.func_name) in containment_methods
+        )
+
+        # -- containment: state attrs only written inside declared mutators
+        for inv in containment:
+            if ctx.class_name != inv.name:
+                continue
+            for tgt in _assign_targets(node):
+                chain = attr_chain(tgt)
+                if len(chain) == 2 and chain[0] == "self" \
+                        and chain[1] in inv.state_attrs:
+                    if ctx.exempt is not None:
+                        continue
+                    if ctx.func_name not in inv.mutators:
+                        _flag(src, node,
+                              f"{inv.name}.{chain[1]} written in "
+                              f"{ctx.func_name or '<module>'}(), which is not "
+                              f"a declared mutator of {inv.name} — add it to "
+                              f"the inventory (and the sanitizer guard) or "
+                              f"move the write", findings)
+
+        # -- domination: guarded attr writes need a writer section
+        if domination and not in_containment_mutator:
+            for tgt in _assign_targets(node):
+                chain = attr_chain(tgt)
+                if len(chain) >= 2 and chain[-1] in guarded_attrs:
+                    if not ctx.dominated("write"):
+                        _flag(src, node,
+                              f"write to guarded attribute "
+                              f"'{'.'.join(chain)}' outside a writer section "
+                              f"(in {ctx.func_name or '<module>'})", findings)
+
+        # -- domination: mutator / read-path calls
+        if not in_containment_mutator:
+            for call in _call_sites(node):
+                if not isinstance(call.func, ast.Attribute):
+                    # bare call: check caller-holds-write contract below
+                    if isinstance(call.func, ast.Name) \
+                            and call.func.id in chw_funcs:
+                        ok = ctx.dominated("write")
+                        prev = chw_called_in_write.get(call.func.id, True)
+                        chw_called_in_write[call.func.id] = prev and ok
+                        if not ok:
+                            _flag(src, node,
+                                  f"call to caller-holds-write function "
+                                  f"{call.func.id}() outside a writer section",
+                                  findings)
+                    continue
+                meth = call.func.attr
+                chain = attr_chain(call.func)
+                recv = chain[-2] if len(chain) >= 2 else ""
+                if domination and meth in WRITE_CALLS and (
+                        recv in WRITE_CALL_RECEIVERS
+                        or any(recv.startswith(r) for r in
+                               WRITE_CALL_RECEIVERS if r != "t")):
+                    if not ctx.dominated("write"):
+                        _flag(src, node,
+                              f"mutating call '{'.'.join(chain)}()' outside "
+                              f"a writer section "
+                              f"(in {ctx.func_name or '<module>'})", findings)
+                elif domination and meth in READ_CALLS:
+                    if not ctx.dominated("read"):
+                        _flag(src, node,
+                              f"serving read '{'.'.join(chain)}()' outside "
+                              f"a read (or write) section "
+                              f"(in {ctx.func_name or '<module>'})", findings)
+                if meth in chw_funcs and recv == "self":
+                    ok = ctx.dominated("write")
+                    prev = chw_called_in_write.get(meth, True)
+                    chw_called_in_write[meth] = prev and ok
+                    if not ok:
+                        _flag(src, node,
+                              f"call to caller-holds-write method "
+                              f"self.{meth}() outside a writer section",
+                              findings)
+
+    return findings
+
+
+def _classes(src: SourceFile) -> set[str]:
+    return {n.name for n in src.tree.body if isinstance(n, ast.ClassDef)}

@@ -1,0 +1,117 @@
+"""Journal-ordering checker — makes the PR-9 review bug class
+unrepresentable.
+
+Rule B (journal inside lock): every journal write — a call to
+``*_journal*.append(...)`` / ``...journal.append(...)`` or to the
+server's ``self._journal_op(...)`` — must be dominated by a writer
+section.  The PR-9 bug was a journal append *outside* the writer
+section, which let a concurrent writer interleave and record operations
+out of application order.
+
+Rule A (journal before mutation): within one writer section (a
+``with ...write():`` block, or the whole body of a
+``# analysis: caller-holds-write`` function) that both journals and
+applies a journaled mutation (``stream.insert/delete``,
+``self.insert/delete``, ``ambi``-receiver ops), the first journal call
+must precede the first mutation in source order.  Journal-then-apply is
+what makes the journal a write-ahead log: a crash between the two
+replays the op; the reverse order loses it.
+
+``# analysis: unlocked-ok(reason)`` suppresses Rule B on a line (e.g.
+single-threaded recovery paths already annotated at the def level are
+exempt wholesale).  Rule A has no escape hatch by design.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from .common import Finding, SourceFile, attr_chain, iter_with_context
+from .inventory import (
+    JOURNAL_METHODS,
+    JOURNAL_RECEIVERS,
+    JOURNALED_MUTATION_RECEIVERS,
+    JOURNALED_MUTATIONS,
+)
+from .locks import _call_sites, _classes
+from .inventory import INVENTORY
+
+CHECKER = "journal-ordering"
+
+
+def _is_journal_call(call: ast.Call) -> bool:
+    if not isinstance(call.func, ast.Attribute):
+        return False
+    chain = attr_chain(call.func)
+    if not chain:
+        return False
+    meth = chain[-1]
+    if meth in JOURNAL_METHODS:
+        return True
+    if meth == "append" and len(chain) >= 2:
+        recv = chain[-2]
+        return recv in JOURNAL_RECEIVERS or recv.endswith("journal")
+    return False
+
+
+def _is_journaled_mutation(call: ast.Call) -> bool:
+    if not isinstance(call.func, ast.Attribute):
+        return False
+    chain = attr_chain(call.func)
+    if len(chain) < 2 or chain[-1] not in JOURNALED_MUTATIONS:
+        return False
+    recv = chain[-2]
+    return (recv in JOURNALED_MUTATION_RECEIVERS
+            or recv.endswith("stream") or recv.endswith("ambi"))
+
+
+def check(src: SourceFile) -> list[Finding]:
+    if not (_classes(src) & set(INVENTORY)):
+        return []
+    findings: list[Finding] = []
+
+    # section key -> [first_journal_line, first_mutation_line, func_name]
+    # A section is the innermost writer With block if any, else the
+    # enclosing caller-holds-write/exempt-writer function body.
+    sections: dict[int, list] = {}
+
+    for node, ctx in iter_with_context(src):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
+                             ast.ClassDef)):
+            continue
+        for call in _call_sites(node):
+            journal = _is_journal_call(call)
+            mutation = _is_journaled_mutation(call)
+            if not journal and not mutation:
+                continue
+            if journal and not ctx.dominated("write"):
+                if src.annotation(node, "unlocked-ok") is None:
+                    findings.append(Finding(
+                        src.path, node.lineno, CHECKER,
+                        "journal write outside a writer section — a "
+                        "concurrent writer can interleave and break "
+                        "journal/application order "
+                        f"(in {ctx.func_name or '<module>'})"))
+                continue
+            if ctx.lock != "write" and ctx.exempt is None:
+                continue  # mutation outside writer ctx: lock checker's job
+            key = id(ctx.lock_node if ctx.lock_node is not None
+                     else ctx.func_node)
+            rec = sections.setdefault(key, [None, None, ctx.func_name])
+            if journal and rec[0] is None:
+                rec[0] = node.lineno
+            if mutation and rec[1] is None:
+                rec[1] = (node.lineno, ast.unparse(call.func))
+
+    for first_journal, first_mut, func in sections.values():
+        if first_journal is None or first_mut is None:
+            continue
+        mut_line, mut_expr = first_mut
+        if first_journal > mut_line:
+            findings.append(Finding(
+                src.path, mut_line, CHECKER,
+                f"state mutation '{mut_expr}()' precedes the journal "
+                f"append at line {first_journal} inside the same writer "
+                f"section (in {func or '<module>'}) — journal first, "
+                f"then apply"))
+    return findings

@@ -1,0 +1,328 @@
+"""jit/Pallas purity lint.
+
+Three sub-checks, path-scoped so the broader repo (models, launch,
+benchmarks — which legitimately mix host and device code) stays quiet:
+
+* **jit host-sync lint** — in ``core/queries_jax.py`` (and any file
+  carrying a ``# analysis: jit-strict`` marker), functions decorated
+  with ``jax.jit`` / ``partial(jax.jit, ...)`` *and everything they call
+  intra-file* must not force a host sync: no ``.item()``, no
+  ``np.asarray``/``np.array``/``jax.device_get``/``block_until_ready``,
+  and no ``float(...)``/``int(...)``/``bool(...)`` on values that are
+  not statically derivable (shapes, dtypes, lengths, constants are
+  fine).  A host sync inside a jit-reachable function either fails at
+  trace time in the best case or silently retraces/blocks in the worst.
+* **kernel branch lint** — in ``kernels/*.py`` (except ``ref.py``),
+  Pallas kernel bodies (functions taking ``*_ref`` params or named
+  ``*_kernel``) must not branch with Python ``if``/``while``/ternary on
+  traced values (loads from refs, ``pl.load``, ``pl.program_id``, and
+  anything derived from them).  Structural tests (``x is None``,
+  ``.shape``/``.dtype``/``len()`` comparisons) are static and allowed;
+  predication belongs in ``pl.when``/``jnp.where``.
+* **ref-twin check** — every public Pallas wrapper in ``kernels/ops.py``
+  must have a ``ref.py`` oracle twin (``<wrapper>_ref``, prefix-matched
+  so ``leaf_mindist_tiled`` pairs with ``leaf_mindist_ref``) that some
+  test under ``tests/`` references by name.
+
+``# analysis: host-ok(reason)`` on the offending line suppresses the
+host-sync and branch lints.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+from typing import Optional
+
+from .common import Finding, SourceFile, attr_chain, module_functions, tests_corpus
+
+CHECKER = "jit-purity"
+
+_STATIC_ATTRS = {"shape", "dtype", "ndim", "size", "itemsize"}
+_NUMPY_NAMES = {"np", "onp", "numpy"}
+_TRACED_SOURCES = {"load", "program_id", "num_programs"}  # pl.<...>
+
+
+def _is_jit_decorator(dec: ast.expr) -> bool:
+    chain = attr_chain(dec)
+    if chain and chain[-1] == "jit":
+        return True
+    if isinstance(dec, ast.Call):
+        fchain = attr_chain(dec.func)
+        if fchain and fchain[-1] == "jit":
+            return True
+        if fchain and fchain[-1] == "partial":
+            return any(_is_jit_decorator(a) for a in dec.args)
+    return False
+
+
+def _jit_roots(tree: ast.Module) -> set[str]:
+    roots = set()
+    for node in tree.body:
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if any(_is_jit_decorator(d) for d in node.decorator_list):
+                roots.add(node.name)
+        elif isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
+            # fn = jax.jit(fn) re-binding form
+            if _is_jit_decorator(node.value.func) or (
+                    attr_chain(node.value.func)[-1:] == ["jit"]):
+                for a in node.value.args:
+                    if isinstance(a, ast.Name):
+                        roots.add(a.id)
+    return roots
+
+
+def _reachable(tree: ast.Module, roots: set[str]) -> set[str]:
+    funcs = module_functions(tree)
+    calls: dict[str, set[str]] = {}
+    for name, fn in funcs.items():
+        out = set()
+        for sub in ast.walk(fn):
+            if isinstance(sub, ast.Call) and isinstance(sub.func, ast.Name):
+                if sub.func.id in funcs:
+                    out.add(sub.func.id)
+        calls[name] = out
+    seen = set(r for r in roots if r in funcs)
+    frontier = list(seen)
+    while frontier:
+        cur = frontier.pop()
+        for nxt in calls.get(cur, ()):
+            if nxt not in seen:
+                seen.add(nxt)
+                frontier.append(nxt)
+    return seen
+
+
+def _static_expr(e: ast.expr) -> bool:
+    """Conservatively true when the expression is statically derivable
+    under jit (shapes, dtypes, lengths, constants, arithmetic thereof)."""
+    if isinstance(e, ast.Constant):
+        return True
+    if isinstance(e, ast.Attribute):
+        return e.attr in _STATIC_ATTRS
+    if isinstance(e, ast.Subscript):
+        return _static_expr(e.value)
+    if isinstance(e, ast.Call):
+        chain = attr_chain(e.func)
+        if chain in (["len"], ["min"], ["max"], ["abs"], ["round"]):
+            return all(_static_expr(a) for a in e.args)
+        return False
+    if isinstance(e, ast.BinOp):
+        return _static_expr(e.left) and _static_expr(e.right)
+    if isinstance(e, ast.UnaryOp):
+        return _static_expr(e.operand)
+    if isinstance(e, ast.IfExp):
+        return all(_static_expr(x) for x in (e.test, e.body, e.orelse))
+    return False
+
+
+def _check_jit_purity(src: SourceFile) -> list[Finding]:
+    findings: list[Finding] = []
+    roots = _jit_roots(src.tree)
+    reachable = _reachable(src.tree, roots)
+    funcs = module_functions(src.tree)
+    for name in sorted(reachable):
+        fn = funcs[name]
+        for sub in ast.walk(fn):
+            if not isinstance(sub, ast.Call):
+                continue
+            msg = None
+            chain = attr_chain(sub.func)
+            if chain and chain[-1] == "item":
+                msg = ".item() forces a host sync"
+            elif chain and chain[-1] in ("asarray", "array") \
+                    and chain[0] in _NUMPY_NAMES:
+                msg = f"{'.'.join(chain)}() pulls a traced value to host"
+            elif chain and chain[-1] in ("device_get", "block_until_ready"):
+                msg = f"{'.'.join(chain)}() forces a host sync"
+            elif chain in (["float"], ["int"], ["bool"]) and sub.args \
+                    and not all(_static_expr(a) for a in sub.args):
+                msg = (f"{chain[0]}() on a non-static value concretizes "
+                       f"a tracer")
+            if msg is None:
+                continue
+            if src.annotation(sub, "host-ok") is not None:
+                continue
+            findings.append(Finding(
+                src.path, sub.lineno, CHECKER,
+                f"{msg} in jit-reachable function {name}() "
+                f"(reached from @jax.jit root{'s' if len(roots) > 1 else ''} "
+                f"{', '.join(sorted(roots & reachable or roots)[:3])})"))
+    return findings
+
+
+# -- kernel branch lint ------------------------------------------------------
+
+def _kernel_fns(tree: ast.Module):
+    for node in ast.walk(tree):
+        if isinstance(node, ast.FunctionDef):
+            params = [a.arg for a in node.args.args]
+            if node.name.endswith("_kernel") \
+                    or any(p.endswith("_ref") for p in params):
+                yield node
+
+
+def _tainted(e: ast.expr, taint: set[str], refs: set[str]) -> bool:
+    if isinstance(e, ast.Constant):
+        return False
+    if isinstance(e, ast.Name):
+        return e.id in taint or e.id in refs
+    if isinstance(e, ast.Attribute):
+        if e.attr in _STATIC_ATTRS:
+            return False
+        return _tainted(e.value, taint, refs)
+    if isinstance(e, ast.Subscript):
+        if isinstance(e.value, ast.Name) and e.value.id in refs:
+            return True  # a load from a ref is a traced value
+        return (_tainted(e.value, taint, refs)
+                or _tainted(e.slice, taint, refs))
+    if isinstance(e, ast.Call):
+        chain = attr_chain(e.func)
+        if len(chain) >= 2 and chain[-1] in _TRACED_SOURCES \
+                and chain[-2] == "pl":
+            return True
+        if chain == ["len"]:
+            return False
+        return any(_tainted(a, taint, refs) for a in e.args)
+    if isinstance(e, ast.Compare):
+        if all(isinstance(op, (ast.Is, ast.IsNot)) for op in e.ops):
+            return False  # identity tests are static (the `acc is None` idiom)
+        return (_tainted(e.left, taint, refs)
+                or any(_tainted(c, taint, refs) for c in e.comparators))
+    return any(_tainted(c, taint, refs)
+               for c in ast.iter_child_nodes(e)
+               if isinstance(c, ast.expr))
+
+
+def _check_kernel_branches(src: SourceFile) -> list[Finding]:
+    findings: list[Finding] = []
+    for fn in _kernel_fns(src.tree):
+        refs = {a.arg for a in fn.args.args if a.arg.endswith("_ref")}
+        taint: set[str] = set()
+        for _ in range(8):  # taint propagation to fixpoint
+            before = len(taint)
+            for sub in ast.walk(fn):
+                if isinstance(sub, ast.Assign) \
+                        and _tainted(sub.value, taint, refs):
+                    for tgt in sub.targets:
+                        for n in ast.walk(tgt):
+                            if isinstance(n, ast.Name):
+                                taint.add(n.id)
+                elif isinstance(sub, ast.AugAssign) \
+                        and isinstance(sub.target, ast.Name) \
+                        and _tainted(sub.value, taint, refs):
+                    taint.add(sub.target.id)
+            if len(taint) == before:
+                break
+        for sub in ast.walk(fn):
+            test = None
+            kind = None
+            if isinstance(sub, (ast.If, ast.While)):
+                test, kind = sub.test, type(sub).__name__.lower()
+            elif isinstance(sub, ast.IfExp):
+                test, kind = sub.test, "ternary"
+            if test is None or not _tainted(test, taint, refs):
+                continue
+            if src.annotation(sub, "host-ok") is not None:
+                continue
+            findings.append(Finding(
+                src.path, sub.lineno, CHECKER,
+                f"Python {kind} on a traced value in Pallas kernel "
+                f"{fn.name}() — use pl.when / jnp.where predication"))
+    return findings
+
+
+# -- ref-twin check ----------------------------------------------------------
+
+def _imports_pallas(tree: ast.Module) -> bool:
+    for node in ast.walk(tree):
+        if isinstance(node, ast.ImportFrom) and (
+                (node.module and "pallas" in node.module)
+                or any("pallas" in a.name for a in node.names)):
+            return True
+        if isinstance(node, ast.Import):
+            if any("pallas" in a.name for a in node.names):
+                return True
+    return False
+
+
+def _check_ref_twins(src: SourceFile, tests_dir: Optional[str]) -> list[Finding]:
+    ref_path = os.path.join(os.path.dirname(src.path), "ref.py")
+    if not os.path.exists(ref_path):
+        return [Finding(src.path, 1, CHECKER,
+                        "kernels/ops.py has no sibling ref.py oracle module")]
+    with open(ref_path, "r", encoding="utf-8") as f:
+        ref_tree = ast.parse(f.read(), filename=ref_path)
+    refs = sorted(n.name for n in ref_tree.body
+                  if isinstance(n, ast.FunctionDef)
+                  and n.name.endswith("_ref"))
+
+    funcs = module_functions(src.tree)
+    # kernel-module aliases: ``from . import knn_topk as _knn`` etc. —
+    # ops.py wrappers dispatch through these (ref re-exports excluded)
+    kernel_mods = set()
+    for node in src.tree.body:
+        if isinstance(node, ast.ImportFrom) and node.level >= 1 \
+                and not node.module:
+            for a in node.names:
+                if a.name != "ref":
+                    kernel_mods.add(a.asname or a.name)
+    pallas_direct = {
+        name for name, fn in funcs.items()
+        if any(isinstance(s, ast.Call)
+               and attr_chain(s.func)[-1:] == ["pallas_call"]
+               for s in ast.walk(fn))
+    }
+    # a wrapper calls pallas_call directly, reaches it through a local
+    # helper, or dispatches into an imported kernel module
+    wrappers = set()
+    for name, fn in funcs.items():
+        if name.startswith("_"):
+            continue
+        called_names = set()
+        called_mods = set()
+        for s in ast.walk(fn):
+            if not isinstance(s, ast.Call):
+                continue
+            if isinstance(s.func, ast.Name):
+                called_names.add(s.func.id)
+            chain = attr_chain(s.func)
+            if len(chain) >= 2 and chain[0] in kernel_mods:
+                called_mods.add(chain[0])
+        if name in pallas_direct or (called_names & pallas_direct) \
+                or called_mods:
+            wrappers.add(name)
+
+    corpus = tests_corpus(tests_dir)
+    findings: list[Finding] = []
+    for w in sorted(wrappers):
+        twins = [r for r in refs
+                 if r == w + "_ref" or w.startswith(r[:-len("_ref")])]
+        if not twins:
+            findings.append(Finding(
+                src.path, funcs[w].lineno, CHECKER,
+                f"Pallas wrapper {w}() has no ref.py twin "
+                f"(expected {w}_ref or a prefix match)"))
+            continue
+        if corpus and not any(
+                re.search(rf"\b{re.escape(r)}\b", corpus) for r in twins):
+            findings.append(Finding(
+                src.path, funcs[w].lineno, CHECKER,
+                f"ref twin {twins[0]}() of Pallas wrapper {w}() is not "
+                f"referenced by any test under {tests_dir}/"))
+    return findings
+
+
+def check(src: SourceFile, tests_dir: Optional[str] = "tests") -> list[Finding]:
+    findings: list[Finding] = []
+    norm = src.path.replace(os.sep, "/")
+    base = os.path.basename(norm)
+    if base == "queries_jax.py" or src.has_marker("jit-strict"):
+        findings.extend(_check_jit_purity(src))
+    if "/kernels/" in norm or norm.startswith("kernels/"):
+        if base != "ref.py" and _imports_pallas(src.tree):
+            findings.extend(_check_kernel_branches(src))
+        if base == "ops.py":
+            findings.extend(_check_ref_twins(src, tests_dir))
+    return findings

@@ -45,7 +45,7 @@ import itertools
 import numpy as np
 
 from .fmbi import Index
-from .geometry import mbb_intersects, mindist_sq  # re-exported (legacy home)
+from .geometry import mbb_intersects, mindist_sq  # noqa: F401 — re-exported (legacy home)
 from .nodetable import NodeTable, ragged_ranges
 from .pagestore import IOStats
 

@@ -43,6 +43,7 @@ import json
 
 import numpy as np
 
+from ..analysis import runtime as _san
 from .fmbi import Node, refine_subspace
 from .ioutil import atomic_output
 from .nodetable import NodeTable
@@ -248,6 +249,7 @@ class StreamingIndex:
 
     def insert(self, pts) -> np.ndarray:
         """Append points; returns their assigned ids (buffer rows)."""
+        _san.check_write(self, "insert")
         pts = np.atleast_2d(np.asarray(pts, dtype=np.float64))
         if pts.shape[1] != self.dim:
             raise ValueError(f"expected dim {self.dim}, got {pts.shape[1]}")
@@ -274,6 +276,7 @@ class StreamingIndex:
 
     def delete(self, ids) -> int:
         """Tombstone ids; returns how many were newly deleted."""
+        _san.check_write(self, "delete")
         ids = np.unique(np.asarray(ids, dtype=np.int64).ravel())
         if len(ids) == 0:
             return 0
@@ -485,7 +488,7 @@ class StreamingIndex:
             np.savez_compressed(tmp, **payload)
 
     @classmethod
-    def load(cls, path):
+    def load(cls, path):  # analysis: single-threaded(snapshot restore builds an unpublished instance)
         """Returns ``(stream, meta)`` where meta holds the ``extra`` dict."""
         with np.load(path, allow_pickle=False) as z:
             if int(z["stream_version"]) != STREAM_VERSION:
@@ -626,6 +629,7 @@ class DeviceMirror:
           * ``add_rows``     — mirror rows of newly attached subspaces
             that no shard plan covers yet
         """
+        _san.check_write(self, "sync")
         evs = self.stream.drain_events()
         if not evs:
             return None

@@ -6,7 +6,6 @@ handle padding to tile multiples so callers can pass ragged sizes.
 """
 from __future__ import annotations
 
-import functools
 import os
 
 import jax

@@ -25,7 +25,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding
 
-from ..configs.base import SHAPES, all_configs, cells, get_config
+from ..configs.base import SHAPES, cells, get_config
 from ..models import model as M
 from ..models.sharding import axes_for_mesh
 from ..train import optimizer as opt_mod

@@ -19,8 +19,6 @@ flash-decoding-style partial softmax, reduced by XLA collectives).
 """
 from __future__ import annotations
 
-import dataclasses
-
 import jax
 import jax.numpy as jnp
 

@@ -13,11 +13,8 @@ Public API (everything the launcher / trainer / server needs):
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding
 
 from . import transformer as tfm

@@ -27,7 +27,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from .layers import Param, swiglu
-from .sharding import ambient_mesh, constrain, shard_map_compat
+from .sharding import ambient_mesh, shard_map_compat
 
 TOKEN_CHUNK = 8192
 

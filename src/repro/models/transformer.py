@@ -15,8 +15,6 @@ the scan as xs/ys, so decode touches each layer's cache slice exactly once.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

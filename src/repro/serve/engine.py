@@ -20,6 +20,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..analysis import runtime as _san
 from ..core import jax_index
 from ..kernels import ops as kops
 from ..models import model as M
@@ -352,6 +353,19 @@ class DeviceQueryServer:
                 # boot barrier: capture the pre-serving adaptive state so a
                 # crash before the first compaction is still recoverable
                 self.checkpoint()
+        # REPRO_SANITIZE: bind every shared mutable object the serving
+        # layer publishes to the writer lock that guards it.  Binding is
+        # the LAST construction step — everything above runs unpublished
+        # and single-threaded; everything after must hold the lock.
+        self._bind_sanitizer()
+
+    def _bind_sanitizer(self) -> None:
+        for obj in (self.stream,
+                    self.mirror,
+                    self.mirror.table if self.mirror is not None else None,
+                    self.ambi.table if self.ambi is not None else None):
+            if obj is not None:
+                _san.bind(obj, self.table_lock)
 
     @property
     def points(self) -> np.ndarray:
@@ -403,9 +417,12 @@ class DeviceQueryServer:
         br = self.breakers.get(s)
         if br is None:
             kw = {} if self.clock is None else {"clock": self.clock}
-            br = self.breakers[s] = CircuitBreaker(
+            # setdefault, not assignment: two lanes creating the breaker
+            # concurrently must converge on ONE instance, or failure
+            # counts split across copies and the breaker never opens
+            br = self.breakers.setdefault(s, CircuitBreaker(
                 self.breaker_threshold, self.breaker_cooldown_s, **kw
-            )
+            ))
         return br
 
     def _deadline(self):
@@ -886,10 +903,12 @@ class DeviceQueryServer:
     # adaptive server degrades *gracefully* under device outages: a failed
     # dispatch reroutes the affected queries down the (exact) host cold
     # path instead of returning partial answers — certificates stay intact.
-    def _journal_op(self, op: str, **args) -> None:
+    def _journal_op(self, op: str, **args) -> None:  # analysis: caller-holds-write
         """Write-ahead: durably journal a cold host op before executing it
         (recovery replays exactly the journaled sequence).  An append that
-        cannot be made durable fails the op — never execute unlogged."""
+        cannot be made durable fails the op — never execute unlogged.
+        Callers hold the writer lock: journal seq must equal application
+        order, so append and apply are one atomic writer section."""
         if self.journal is None:
             return
 
@@ -901,7 +920,7 @@ class DeviceQueryServer:
         )
         self.stats.journal_records += 1
 
-    def _host_window(self, lo, hi) -> np.ndarray:
+    def _host_window(self, lo, hi) -> np.ndarray:  # analysis: caller-holds-write
         """Cold-path window: journal, then host-answer (+ refine) under
         retry.  Faults fire at entry, before any host mutation, so a
         retried attempt re-runs the op from scratch."""
@@ -919,7 +938,7 @@ class DeviceQueryServer:
         )
         return ids
 
-    def _host_knn(self, q, k: int) -> np.ndarray:
+    def _host_knn(self, q, k: int) -> np.ndarray:  # analysis: caller-holds-write
         self._journal_op("knn", q=[float(v) for v in q], k=int(k))
 
         def attempt():
@@ -1078,7 +1097,7 @@ class DeviceQueryServer:
     # serves the mirror of its tiers, tombstones filter host-side, and the
     # not-yet-flushed delta rows are unioned in by brute force (they are
     # few by construction: at most delta_threshold).
-    def _ensure_stream(self):
+    def _ensure_stream(self):  # analysis: caller-holds-write
         if self.stream is None:
             if not self.adaptive:
                 raise ValueError(
@@ -1093,6 +1112,7 @@ class DeviceQueryServer:
                 self._points, store=self.ambi.store, base_external=True,
                 **self.OVERLAY_KW,
             )
+            _san.bind(self.stream, self.table_lock)
         return self.stream
 
     def insert(self, pts) -> np.ndarray:
@@ -1141,7 +1161,7 @@ class DeviceQueryServer:
         self.stats.deletes += n
         return n
 
-    def _sync_stream_device(self) -> None:
+    def _sync_stream_device(self) -> None:  # analysis: caller-holds-write
         """Ship the stream's structural events (tier attach/merge) to the
         device.  Caller holds the writer lock.  Single device: one
         ``apply_delta`` (only new leaf blocks upload).  Sharded: plan
@@ -1182,7 +1202,7 @@ class DeviceQueryServer:
             if self.sdev is None:
                 self._stream_device_stale = True
 
-    def _stream_refresh_shards(self, info) -> None:
+    def _stream_refresh_shards(self, info) -> None:  # analysis: caller-holds-write
         """Rewrite the shard plans through the mirror's sync summary and
         re-export only the shards whose content changed.
 
@@ -1404,7 +1424,7 @@ class DeviceQueryServer:
                 out.append(ids[np.lexsort((ids, d2))[:k]])
         return out
 
-    def _after_refinement(self, before_unref: np.ndarray) -> None:
+    def _after_refinement(self, before_unref: np.ndarray) -> None:  # analysis: caller-holds-write
         """Push the microbatch's grafts to the device: incremental delta
         (single table) or per-changed-shard re-export (sharded), then
         vacuum the host table if grafting bloated it.
@@ -1463,7 +1483,7 @@ class DeviceQueryServer:
             pass  # device stale, host authoritative; retried next graft
         self._maybe_compact()
 
-    def _maybe_compact(self) -> None:
+    def _maybe_compact(self) -> None:  # analysis: caller-holds-write
         """Vacuum the host table once grafting bloated it, rebasing the
         device/shard scaffolding through the returned row remap.  With a
         journal, the vacuum is itself a journaled op (replay must compact
@@ -1478,7 +1498,7 @@ class DeviceQueryServer:
             # reader capturing row indices) between them would observe a
             # half-rebased slot map.  Callers enter through the adaptive
             # write sections; this pins the invariant for new call sites.
-            assert self.table_lock._writer, (
+            assert self.table_lock.held_write(), (
                 "_maybe_compact requires the TableLock writer section"
             )
             if self.journal is not None:
@@ -1495,7 +1515,7 @@ class DeviceQueryServer:
             self.stats.compactions += 1
             if self.snapshot_path is not None:
                 try:
-                    self.checkpoint()
+                    self._checkpoint_locked()
                 except RetryExhausted:
                     pass  # barrier deferred; journal still holds the ops
 
@@ -1507,7 +1527,21 @@ class DeviceQueryServer:
         records are folded into the snapshot).  Crash-ordering: the
         snapshot lands via atomic rename *before* the truncate, and
         recovery skips records at or below the recorded seq — a kill
-        between the two replays nothing twice."""
+        between the two replays nothing twice.
+
+        Takes the writer lock: the snapshot must capture a quiesced
+        state, and the captured seq, the saved bytes, and the truncate
+        must not interleave with a concurrent writer (a journal record
+        folded into no snapshot but truncated anyway would be lost).
+        ``_maybe_compact`` calls :meth:`_checkpoint_locked` directly —
+        it already holds the writer section (TableLock is not
+        reentrant)."""
+        if self.snapshot_path is None:
+            raise ValueError("no snapshot_path configured")
+        with self.table_lock.write():
+            self._checkpoint_locked()
+
+    def _checkpoint_locked(self) -> None:  # analysis: caller-holds-write
         if self.snapshot_path is None:
             raise ValueError("no snapshot_path configured")
 
@@ -1549,7 +1583,7 @@ class DeviceQueryServer:
         return self.snapshot_path[:-len(".npz")] + ".stream.npz"
 
     @staticmethod
-    def _replay_op(ambi, rec: dict) -> None:
+    def _replay_op(ambi, rec: dict) -> None:  # analysis: single-threaded(boot-time replay precedes serving)
         from .journal import JournalError
 
         op = rec.get("op")
@@ -1566,7 +1600,7 @@ class DeviceQueryServer:
             raise JournalError(f"unknown journal op {op!r} (seq {rec.get('seq')})")
 
     @classmethod
-    def recover(cls, snapshot_path, journal_path, *,
+    def recover(cls, snapshot_path, journal_path, *,  # analysis: single-threaded(recovery runs before the server takes traffic)
                 fault_plan=None, **kw) -> "DeviceQueryServer":
         """Reboot a killed adaptive server: load the snapshot, replay the
         journal's post-barrier records against the restored AMBI state
@@ -1667,12 +1701,14 @@ class DeviceQueryServer:
             fault_plan=fault_plan, **kw,
         )
         srv.stream = overlay
+        if overlay is not None:
+            _san.bind(overlay, srv.table_lock)
         srv.journal.seq = max(srv.journal.seq, snap_seq)
         srv.stats.replayed_records = replayed
         return srv
 
     @staticmethod
-    def _replay_ingest(stream, rec: dict) -> None:
+    def _replay_ingest(stream, rec: dict) -> None:  # analysis: single-threaded(boot-time replay precedes serving)
         from .journal import JournalError
 
         op = rec.get("op")

@@ -305,24 +305,38 @@ class Frontend:
         return req
 
     def _reject(self, req, reason: str) -> None:
-        self.stats.rejected += 1
-        self._finish_dropped(req, "rejected", reason)
+        self._finish_dropped(req, "rejected", reason, stat="rejected")
 
-    def _finish_dropped(self, req, status: str, reason: str) -> None:
-        """Terminal no-answer state: empty ids, root certificate."""
-        req.status = status
-        req.reason = reason
-        req.ids = np.zeros(0, dtype=np.int64)
-        req.cert = self.server._root_cert()
-        req.t_done = self.clock()
-        req._event.set()
+    def _finish_dropped(self, req, status: str, reason: str,
+                        stat: Optional[str] = None) -> bool:
+        """Terminal no-answer state: empty ids, root certificate.
+
+        The done-check, the field writes, and the stat bump are one
+        atomic section under ``_mu`` (a reentrant Condition — admission
+        paths already holding it nest safely): the device lane and the
+        refine lane can race to finish the same request when a retried
+        dispatch overlaps refinement, and the first to claim it here
+        wins — the loser neither tears the terminal state nor
+        double-counts the SLO stat.  Returns whether this call won."""
+        with self._mu:
+            if req.done:
+                return False
+            if stat is not None:
+                setattr(self.stats, stat, getattr(self.stats, stat) + 1)
+            req.status = status
+            req.reason = reason
+            req.ids = np.zeros(0, dtype=np.int64)
+            req.cert = self.server._root_cert()
+            req.t_done = self.clock()
+            req._event.set()
+        return True
 
     @property
     def depth(self) -> int:
         with self._mu:
             return self._depth
 
-    def _update_brownout(self) -> None:
+    def _update_brownout(self) -> None:  # analysis: caller-holds-write
         """Watermark hysteresis (holding ``_mu``): enter at >= high, exit
         at <= low — depths between the watermarks keep the current tier,
         so oscillation around one threshold cannot flap the mode."""
@@ -360,7 +374,7 @@ class Frontend:
             nxt = t if nxt is None else min(nxt, t)
         return nxt
 
-    def _close_batch(self, lane) -> list:
+    def _close_batch(self, lane) -> list:  # analysis: caller-holds-write
         q = self._queues[lane]
         batch, rest = q[:self.batch_max], q[self.batch_max:]
         self._queues[lane] = rest
@@ -405,17 +419,18 @@ class Frontend:
         live = []
         for r in reqs:
             if r.deadline is not None and now >= r.deadline:
-                self.stats.timed_out += 1
                 self._finish_dropped(
-                    r, "timeout", "deadline expired in queue"
+                    r, "timeout", "deadline expired in queue",
+                    stat="timed_out",
                 )
             else:
                 live.append(r)
         if not live:
             return
-        self.stats.batches += 1
-        if brown:
-            self.stats.brownout_batches += 1
+        with self._mu:
+            self.stats.batches += 1
+            if brown:
+                self.stats.brownout_batches += 1
         budgets = [r.deadline - now for r in live if r.deadline is not None]
         deadline = Deadline(min(budgets) if budgets else None,
                             clock=self.clock)
@@ -432,16 +447,14 @@ class Frontend:
             )
         except DeadlineExceeded:
             for r in live:
-                if not r.done:
-                    self.stats.timed_out += 1
-                    self._finish_dropped(
-                        r, "timeout", "deadline exceeded during dispatch"
-                    )
+                self._finish_dropped(
+                    r, "timeout", "deadline exceeded during dispatch",
+                    stat="timed_out",
+                )
         except RetryExhausted as e:
             for r in live:
-                if not r.done:
-                    self.stats.shed += 1
-                    self._finish_dropped(r, "shed", f"dispatch failed: {e}")
+                self._finish_dropped(r, "shed", f"dispatch failed: {e}",
+                                     stat="shed")
 
     def _execute(self, lane, reqs: list, deadline, brown: bool) -> None:
         """One formed microbatch against the engine.  Raises to signal a
@@ -484,7 +497,8 @@ class Frontend:
         cold_i = np.flatnonzero(cold)
         if cold_i.size:
             cold_reqs = [reqs[i] for i in cold_i]
-            self.stats.refine_batches += 1
+            with self._mu:
+                self.stats.refine_batches += 1
             self._refine.submit(
                 lambda: self._run_refine(srv, cold_reqs, deadline)
             )
@@ -500,9 +514,9 @@ class Frontend:
             if r.done:
                 continue  # a retried dispatch re-submitted this sub-batch
             if r.deadline is not None and self.clock() >= r.deadline:
-                self.stats.timed_out += 1
                 self._finish_dropped(
-                    r, "timeout", "deadline expired before refinement"
+                    r, "timeout", "deadline expired before refinement",
+                    stat="timed_out",
                 )
             else:
                 live.append(r)
@@ -515,30 +529,35 @@ class Frontend:
                                     deadline=deadline)
         except DeadlineExceeded:
             for r in live:
-                self.stats.timed_out += 1
                 self._finish_dropped(
-                    r, "timeout", "deadline exceeded during refinement"
+                    r, "timeout", "deadline exceeded during refinement",
+                    stat="timed_out",
                 )
             return
         except Exception as e:
             for r in live:
-                self.stats.shed += 1
-                self._finish_dropped(r, "shed", f"refinement failed: {e}")
+                self._finish_dropped(r, "shed", f"refinement failed: {e}",
+                                     stat="shed")
             return
         self._finish_batch(live, res, certs, False)
 
     def _finish_batch(self, reqs, res, certs, brown: bool) -> None:
         t = self.clock()
-        for r, ids, cert in zip(reqs, res, certs):
-            if r.done:
-                continue
-            r.status = "ok"
-            r.ids = np.asarray(ids)
-            r.cert = cert
-            r.brownout = brown
-            r.t_done = t
-            self.stats.completed += 1
-            r._event.set()
+        with self._mu:
+            # claim-or-skip under _mu, like _finish_dropped: the device
+            # and refine lanes may both carry a request after a retried
+            # dispatch, and only the first finisher may write its
+            # terminal state
+            for r, ids, cert in zip(reqs, res, certs):
+                if r.done:
+                    continue
+                r.status = "ok"
+                r.ids = np.asarray(ids)
+                r.cert = cert
+                r.brownout = brown
+                r.t_done = t
+                self.stats.completed += 1
+                r._event.set()
 
     # -- real-time dispatcher -------------------------------------------------
     def start(self) -> "Frontend":
@@ -594,7 +613,7 @@ class Frontend:
                 self._queues.clear()
                 self._depth = 0
             for r in leftovers:
-                self.stats.shed += 1
-                self._finish_dropped(r, "shed", "frontend stopped")
+                self._finish_dropped(r, "shed", "frontend stopped",
+                                     stat="shed")
         self._executor.stop()
         self._refine.stop()

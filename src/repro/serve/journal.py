@@ -41,7 +41,7 @@ import json
 import os
 import struct
 import zlib
-from typing import Iterator, Optional
+from typing import Iterator
 
 _HEADER = struct.Struct("<II")  # payload_len, crc32
 

@@ -37,6 +37,8 @@ from typing import Callable, Optional
 
 import numpy as np
 
+from ..analysis import runtime as _san
+
 
 def _call_id(key) -> int:
     """Stable 32-bit id for a retry call site (pure function of the key)."""
@@ -229,41 +231,63 @@ class TableLock:
     storm cannot starve refinement).  Not reentrant: a thread must
     never nest acquisitions, which the serving code honors by releasing
     its read section before entering a write section.
+
+    Under ``REPRO_SANITIZE=1`` every acquisition reports to
+    :mod:`repro.analysis.runtime` *before blocking*: same-thread
+    re-entry and cross-lock acquisition-order inversions raise instead
+    of deadlocking, and :meth:`held_write` lets guarded mutators assert
+    the writer section is really held by the calling thread.
     """
 
-    def __init__(self):
+    def __init__(self, name: str = "table_lock"):
+        self.name = name
         self._cond = threading.Condition()
         self._readers = 0
         self._writer = False
+        self._writer_thread = None
         self._writers_waiting = 0
+
+    def held_write(self) -> bool:
+        """True iff the *calling thread* holds the writer section."""
+        return self._writer and self._writer_thread == threading.get_ident()
 
     @contextlib.contextmanager
     def read(self):
-        with self._cond:
-            while self._writer or self._writers_waiting:
-                self._cond.wait()
-            self._readers += 1
+        _san.note_acquire(self, "read", self.name)
         try:
-            yield
-        finally:
             with self._cond:
-                self._readers -= 1
-                if self._readers == 0:
-                    self._cond.notify_all()
+                while self._writer or self._writers_waiting:
+                    self._cond.wait()
+                self._readers += 1
+            try:
+                yield
+            finally:
+                with self._cond:
+                    self._readers -= 1
+                    if self._readers == 0:
+                        self._cond.notify_all()
+        finally:
+            _san.note_release(self)
 
     @contextlib.contextmanager
     def write(self):
-        with self._cond:
-            self._writers_waiting += 1
-            try:
-                while self._writer or self._readers:
-                    self._cond.wait()
-            finally:
-                self._writers_waiting -= 1
-            self._writer = True
+        _san.note_acquire(self, "write", self.name)
         try:
-            yield
-        finally:
             with self._cond:
-                self._writer = False
-                self._cond.notify_all()
+                self._writers_waiting += 1
+                try:
+                    while self._writer or self._readers:
+                        self._cond.wait()
+                finally:
+                    self._writers_waiting -= 1
+                self._writer = True
+                self._writer_thread = threading.get_ident()
+            try:
+                yield
+            finally:
+                with self._cond:
+                    self._writer = False
+                    self._writer_thread = None
+                    self._cond.notify_all()
+        finally:
+            _san.note_release(self)

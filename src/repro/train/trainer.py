@@ -8,8 +8,6 @@ memory to one microbatch — the knob that fits 32k-token-per-device shapes in
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

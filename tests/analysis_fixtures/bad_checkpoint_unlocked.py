@@ -1,0 +1,15 @@
+"""Fixture: the pre-fix form of ``DeviceQueryServer.checkpoint()``.
+
+This is the literal bug class fixed in this PR: snapshotting without
+quiescing writers lets a concurrent ``insert`` land between the overlay
+serialization and the journal truncation — the record exists in neither
+and is lost.  The checker flags the unguarded ``compact``/``truncate``
+mutation calls.
+"""
+
+
+class DeviceQueryServer:
+    def checkpoint(self, path):
+        # BAD: no ``with self.table_lock.write():`` around the snapshot
+        self.stream.compact()
+        self.journal.truncate(path)

@@ -1,0 +1,9 @@
+"""Fixture: a registered failure point no test ever injects.
+
+A fault nobody fires is a recovery path that has never executed;
+registering one must ship an injection test in the same change.
+"""
+
+FAILURE_POINTS = (
+    "fixture_uncovered_point",
+)

@@ -1,0 +1,17 @@
+"""Fixture: the pre-fix form of the frontend drop path.
+
+Two racing finishers could both see ``req.done`` false and double-count
+a drop; the stat bump and the terminal-state claim must be one atomic
+section under ``self._mu``.  The guarded twin below must stay silent.
+"""
+
+
+class Frontend:
+    def reject_racy(self, req):
+        self.stats.rejected += 1  # BAD: stat bump outside self._mu
+        req._event.set()
+
+    def reject_claimed(self, req):
+        with self._mu:
+            self.stats.rejected += 1  # OK: claimed under the condition
+            req._event.set()

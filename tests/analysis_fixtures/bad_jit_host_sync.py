@@ -1,0 +1,20 @@
+# analysis: jit-strict
+"""Fixture: host synchronization on a traced value inside a jit root.
+
+``float(...)`` on a traced array forces a device sync per call and
+breaks tracing; shape arithmetic (static) is fine and must not flag.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def bad_mean(x):
+    total = float(jnp.sum(x))  # BAD: host sync on a tracer
+    return total / x.shape[0]  # OK: .shape is static
+
+
+@jax.jit
+def good_mean(x):
+    return jnp.sum(x) / x.shape[0]

@@ -1,0 +1,13 @@
+"""Fixture: state mutated before the journal append in the same writer
+section (Rule A — the PR-9 bug class).
+
+If the process dies between the mutation and the append, recovery
+replays a journal that never saw the operation: silent data loss.
+"""
+
+
+class DeviceQueryServer:
+    def ingest(self, p, rec):
+        with self.table_lock.write():
+            self.stream.insert(p)     # BAD: mutation first ...
+            self.journal.append(rec)  # ... journal second

@@ -1,0 +1,10 @@
+"""Fixture: journal append outside any writer section (Rule B).
+
+A journal record written while another thread mutates the overlay can
+serialize a state the index never held — replay then diverges.
+"""
+
+
+class DeviceQueryServer:
+    def log_insert(self, rec):
+        self.journal.append(rec)  # BAD: journal write with no writer lock

@@ -1,0 +1,10 @@
+"""Fixture: escape hatch used without a reason.
+
+``unlocked-ok`` must carry a justification — a bare waiver is how
+suppressions rot.
+"""
+
+
+class DeviceQueryServer:
+    def swap_overlay(self, overlay):
+        self.stream = overlay  # analysis: unlocked-ok

@@ -1,0 +1,11 @@
+"""Fixture: guarded attribute written outside a writer section.
+
+``DeviceQueryServer.stream`` is inventoried shared state — publishing a
+new overlay without ``with self.table_lock.write():`` races every
+concurrent reader.
+"""
+
+
+class DeviceQueryServer:
+    def swap_overlay(self, overlay):
+        self.stream = overlay  # BAD: unlocked publish of shared state

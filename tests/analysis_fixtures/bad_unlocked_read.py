@@ -1,0 +1,11 @@
+"""Fixture: inventoried read call issued with no lock at all.
+
+Query entry points must hold at least the reader side of the table
+lock, otherwise a concurrent compaction can renumber rows mid-scan.
+"""
+
+
+class DeviceQueryServer:
+    def window(self, lo, hi):
+        # BAD: neither .read() nor .write() dominates this call
+        return self.dev.window_query_batch_jax(lo, hi)

@@ -1,0 +1,3 @@
+"""A deliberately empty tests corpus for the corpus-backed checkers
+(fault-coverage, ref-twin).  Mentions no fault names and no ref twins,
+so fixtures that need an uncovered name fail deterministically."""

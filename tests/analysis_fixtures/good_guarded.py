@@ -1,0 +1,20 @@
+"""Fixture: the disciplined twin of the bad snippets — must stay
+silent under every checker.
+
+Journal before mutation, all of it inside one writer section; reads
+under the reader lock; a justified escape hatch for the stats counter.
+"""
+
+
+class DeviceQueryServer:
+    def ingest(self, p, rec):
+        with self.table_lock.write():
+            self.journal.append(rec)  # journal first ...
+            self.stream.insert(p)     # ... then mutate
+
+    def window(self, lo, hi):
+        with self.table_lock.read():
+            return self.dev.window_query_batch_jax(lo, hi)
+
+    def bump(self):
+        self.stats = None  # analysis: unlocked-ok(monotonic counter, torn reads acceptable)

@@ -1,0 +1,21 @@
+"""Fixture: Python control flow on a traced value inside a Pallas
+kernel body.
+
+A ref load is a tracer — branching on it raises a ConcretizationError
+under jit and silently miscompiles under interpret mode.  Use
+``jnp.where`` / ``lax.select`` instead.
+"""
+
+from jax.experimental import pallas as pl  # noqa: F401
+
+
+def _relu_kernel(x_ref, o_ref):
+    v = x_ref[0]
+    if v > 0.0:  # BAD: Python branch on a traced ref load
+        o_ref[0] = v
+    else:
+        o_ref[0] = 0.0
+
+
+def _copy_kernel(x_ref, o_ref):
+    o_ref[0] = x_ref[0]  # OK: no host branching

@@ -1,0 +1,15 @@
+"""Fixture: a Pallas wrapper module with no sibling ``ref.py`` oracle.
+
+Every public wrapper that reaches ``pallas_call`` must have a NumPy
+reference twin exercised by a test; this module has none.
+"""
+
+from jax.experimental import pallas as pl
+
+
+def _relu_kernel(x_ref, o_ref):
+    o_ref[0] = x_ref[0]
+
+
+def fused_relu(x):
+    return pl.pallas_call(_relu_kernel, out_shape=x)(x)

@@ -1,0 +1,98 @@
+"""The analyzer's own fixture suite.
+
+Two halves: every committed bad fixture must produce exactly the
+finding class it models (and the clean twin none), and the real source
+tree must analyze clean — the analyzer gating CI must never be red on
+the code it ships with.
+"""
+
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.analysis import analyze_paths
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+REPO = os.path.dirname(HERE)
+FIX = os.path.join(HERE, "analysis_fixtures")
+EMPTY_TESTS = os.path.join(FIX, "empty_tests")
+
+
+def _findings(name):
+    return analyze_paths([os.path.join(FIX, name)], tests_dir=EMPTY_TESTS)
+
+
+# fixture file -> (expected checker, expected flagged lines)
+BAD_FIXTURES = {
+    "bad_unlocked_mutation.py": ("lock-discipline", [11]),
+    "bad_unlocked_read.py": ("lock-discipline", [11]),
+    "bad_checkpoint_unlocked.py": ("lock-discipline", [14, 15]),
+    "bad_frontend_stats.py": ("lock-discipline", [11]),
+    "bad_journal_outside_lock.py": ("journal-ordering", [10]),
+    "bad_journal_after_mutation.py": ("journal-ordering", [12]),
+    "bad_jit_host_sync.py": ("jit-purity", [14]),
+    os.path.join("kernels", "bad_kernel_branch.py"): ("jit-purity", [14]),
+    os.path.join("kernels", "ops.py"): ("jit-purity", [1]),
+    "bad_fault_point.py": ("fault-coverage", [8]),
+    "bad_missing_reason.py": ("annotation", [10]),
+}
+
+
+@pytest.mark.parametrize("name", sorted(BAD_FIXTURES))
+def test_bad_fixture_flags(name):
+    checker, lines = BAD_FIXTURES[name]
+    found = _findings(name)
+    assert found, f"{name}: expected {checker} findings, got none"
+    assert [f.checker for f in found] == [checker] * len(lines)
+    assert [f.line for f in found] == lines
+
+
+def test_good_fixture_is_silent():
+    assert _findings("good_guarded.py") == []
+
+
+def test_bad_frontend_guarded_twin_not_flagged():
+    # the same stat bump under self._mu (line 16) must not flag
+    found = _findings("bad_frontend_stats.py")
+    assert all(f.line < 14 for f in found)
+
+
+def test_real_tree_is_clean():
+    found = analyze_paths([os.path.join(REPO, "src")],
+                          tests_dir=os.path.join(REPO, "tests"))
+    assert found == [], "\n".join(f.render() for f in found)
+
+
+def test_cli_exit_codes():
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    ok = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "src"],
+        cwd=REPO, env=env, capture_output=True, text=True)
+    assert ok.returncode == 0, ok.stdout + ok.stderr
+    bad = subprocess.run(
+        [sys.executable, "-m", "repro.analysis",
+         os.path.join(FIX, "bad_unlocked_mutation.py"),
+         "--tests-dir", EMPTY_TESTS],
+        cwd=REPO, env=env, capture_output=True, text=True)
+    assert bad.returncode == 1
+    assert "lock-discipline" in bad.stdout
+
+
+def test_regression_checkpoint_shape_is_caught():
+    """The pre-fix form of DeviceQueryServer.checkpoint() (snapshot
+    without quiescing writers) is exactly bad_checkpoint_unlocked.py;
+    the fixed form takes the writer lock and analyzes clean — covered
+    by test_real_tree_is_clean."""
+    found = _findings("bad_checkpoint_unlocked.py")
+    msgs = " ".join(f.message for f in found)
+    assert "compact" in msgs and "truncate" in msgs
+
+
+def test_regression_frontend_stats_shape_is_caught():
+    """Pre-fix frontend drop path bumped stats outside self._mu; the
+    fixture models it and the analyzer flags only the unguarded bump."""
+    found = _findings("bad_frontend_stats.py")
+    assert len(found) == 1
+    assert "rejected" in found[0].message
